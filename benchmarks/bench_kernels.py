@@ -1,0 +1,92 @@
+"""Kernel microbenchmarks + allclose checks vs the pure-jnp oracles.
+
+On CPU the Pallas kernels run in interpret mode, so the µs numbers here
+measure the *oracle* path (the jnp reference jitted) — the kernel numbers
+are correctness artifacts, not speed claims.  On a TPU backend the same
+harness times the compiled kernels.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def bench_rsnn():
+    key = jax.random.key(0)
+    T, B, N, H, O = 100, 16, 40, 100, 2
+    ks = jax.random.split(key, 4)
+    raster = (jax.random.uniform(ks[0], (T, B, N)) < 0.2).astype(jnp.float32)
+    w_in = jax.random.normal(ks[1], (N, H)) * 0.4
+    w_rec = jax.random.normal(ks[2], (H, H)) * 0.2 * (1 - jnp.eye(H))
+    w_out = jax.random.normal(ks[3], (H, O)) * 0.3
+    out_k = ops.rsnn_forward(raster, w_in, w_rec, w_out, alpha=0.99, kappa=0.78)
+    ref_fn = jax.jit(lambda r: ref.rsnn_forward_ref(r, w_in, w_rec, w_out, 0.99, 0.78, 1.0))
+    out_r = ref_fn(raster)
+    err = max(float(jnp.abs(out_k[k] - out_r[k]).max()) for k in out_r)
+    us = _time(ref_fn, raster)
+    return "rsnn_step", us, f"max_err={err:.2e}"
+
+
+def bench_eprop():
+    key = jax.random.key(1)
+    T, B, N, H, O = 100, 16, 40, 100, 2
+    ks = jax.random.split(key, 6)
+    h = (jax.random.uniform(ks[0], (T, B, H)) < 0.3).astype(jnp.float32)
+    xbar = jax.random.normal(ks[1], (T, B, N))
+    pbar = jax.random.normal(ks[2], (T, B, H))
+    zbar = jax.random.normal(ks[3], (T, B, H))
+    err_t = jax.random.normal(ks[4], (T, B, O)) * 0.1
+    b_fb = jax.random.normal(ks[5], (H, O)) * 0.3
+    dw_k = ops.eprop_update(h, xbar, pbar, zbar, err_t, b_fb, kappa=0.21)
+    ref_fn = jax.jit(lambda *a: ref.eprop_update_ref(*a, 0.21))
+    dw_r = ref_fn(h, xbar, pbar, zbar, err_t, b_fb)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(dw_k, dw_r))
+    us = _time(ref_fn, h, xbar, pbar, zbar, err_t, b_fb)
+    return "eprop_update", us, f"max_err={err:.2e}"
+
+
+def bench_flash():
+    key = jax.random.key(2)
+    B, H, Hkv, S, D = 1, 4, 2, 512, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32) * 0.2
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32) * 0.2
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32) * 0.2
+    o_k = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    ref_fn = jax.jit(
+        lambda q, k, v: ref.attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=True,
+        ).transpose(0, 2, 1, 3)
+    )
+    o_r = ref_fn(q, k, v)
+    err = float(jnp.abs(o_k - o_r).max())
+    us = _time(ref_fn, q, k, v)
+    return "flash_attention", us, f"max_err={err:.2e}"
+
+
+def main(argv=None):
+    rows = [bench_rsnn(), bench_eprop(), bench_flash()]
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper §4.1 / Tables 1–2 analog — resource & traffic accounting of the
+two controller modes.
+
+LUT/FF/DSP/BRAM columns do not transfer off the FPGA; the TPU-runtime
+analog reported here (DESIGN.md §2):
+
+  device-resident dataset bytes   (Table 1's "datasets in BRAM")
+  host→device traffic per epoch   (Table 2's batched AXI offload)
+  weight-"SRAM" bytes             (8-bit grid weights, both modes)
+  step latency per sample         (controller throughput)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.controller import ControllerConfig, OnlineLearner
+from repro.core.rsnn import Presets, sram_bytes
+from repro.data.cue import CueConfig, make_cue_dataset
+from repro.data.pipeline import make_pipeline
+from repro.optim.eprop_opt import EpropSGDConfig
+
+
+def run_mode(mode: str, epochs: int = 3):
+    ccfg = CueConfig()
+    data = make_cue_dataset(50, 50, cfg=ccfg)
+    cfg = Presets.cue_accumulation(num_ticks=ccfg.num_ticks)
+    pipe = make_pipeline(mode, data, samples_per_batch=10)
+    learner = OnlineLearner(
+        cfg, ControllerConfig(num_epochs=epochs),
+        EpropSGDConfig(lr=0.01, clip=10.0), jax.random.key(0),
+    )
+    learner.fit(pipe)  # includes jit warmup on epoch 0
+    t0 = time.time()
+    learner.train_epoch(pipe, epochs)
+    per_sample = (time.time() - t0) / 50
+    return {
+        "mode": mode,
+        "resident_bytes": pipe.stats.resident_bytes,
+        "h2d_bytes_total": pipe.stats.h2d_bytes,
+        "h2d_transfers": pipe.stats.transfers,
+        "weight_sram_bytes": sram_bytes(cfg),
+        "s_per_sample": per_sample,
+    }
+
+
+def main(argv=None):
+    print("resource analog of Tables 1/2 (see DESIGN.md §2 for the mapping)")
+    rows = [run_mode("xheep"), run_mode("arm")]
+    hdr = f"{'mode':6s} {'resident_B':>12s} {'h2d_B':>12s} {'transfers':>9s} {'w_sram_B':>9s} {'ms/sample':>10s}"
+    print(hdr)
+    for r in rows:
+        print(
+            f"{r['mode']:6s} {r['resident_bytes']:>12,d} {r['h2d_bytes_total']:>12,d} "
+            f"{r['h2d_transfers']:>9d} {r['weight_sram_bytes']:>9d} "
+            f"{r['s_per_sample']*1e3:>10.2f}"
+        )
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(
+            f"resources_{r['mode']},{r['s_per_sample']*1e6:.0f},"
+            f"resident_bytes={r['resident_bytes']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

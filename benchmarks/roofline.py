@@ -1,0 +1,115 @@
+"""§Roofline — turn dry-run JSON records into the three-term roofline table.
+
+  compute term    = HLO_FLOPs / peak_FLOP/s                  (per device)
+  memory term     = HLO_bytes / HBM_bw
+  collective term = collective_wire_bytes / ICI_bw
+
+Uses the calibrated costs (``cost_corrected``: loop-trip-count de-aliased)
+when present; hardware constants from :mod:`repro.launch.mesh` (TPU v5e).
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (serve).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(tag: str = "baseline", mesh: str = "16x16", d: Path = DRYRUN_DIR):
+    recs = []
+    for f in sorted(d.glob(f"*__{mesh}__{tag}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def analyze(rec: dict) -> dict:
+    if rec.get("skip"):
+        return {"arch": rec["arch"], "shape": rec["shape"], "skip": rec["skip"]}
+    if "error" in rec:
+        return {"arch": rec["arch"], "shape": rec["shape"], "error": rec["error"]}
+    cost = rec.get("cost_corrected") or rec.get("cost") or {}
+    n_dev = rec["n_devices"]
+    flops = cost.get("flops", -1)
+    bytes_acc = cost.get("bytes_accessed", -1)
+    coll = cost.get("collective_wire_bytes",
+                    rec.get("collectives", {}).get("total_wire_bytes", 0.0))
+    mem = rec.get("memory", {})
+    live_bytes = (
+        mem.get("argument_bytes", 0) + mem.get("output_bytes", 0)
+        + mem.get("temp_bytes", 0)
+    )
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_acc / HBM_BW           # unfused-HLO bytes: upper bound
+    t_memory_live = live_bytes / HBM_BW     # one pass over live data: lower
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound_hi = max(terms.values())                       # conservative
+    bound_lo = max(t_compute, t_memory_live, t_coll)     # optimistic (fused)
+    model_flops_dev = rec["model_flops"] / n_dev
+    ideal = model_flops_dev / PEAK_FLOPS_BF16
+    out = {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_live_s": t_memory_live,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": ideal / bound_hi if bound_hi > 0 else 0.0,
+        "roofline_fraction_fused": ideal / bound_lo if bound_lo > 0 else 0.0,
+        "useful_flops_ratio": model_flops_dev / flops if flops > 0 else 0.0,
+        "hbm_gib_per_device": (
+            mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+        ) / 2**30,
+        "fits_16g": (
+            mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+        ) <= 16 * 2**30,
+    }
+    return out
+
+
+def fmt_table(rows) -> str:
+    hdr = (
+        f"{'arch':26s} {'shape':12s} {'compute_s':>9s} {'mem_hi_s':>9s} {'mem_lo_s':>9s} "
+        f"{'collect_s':>9s} {'dom':>7s} {'roof%':>6s} {'roof%f':>6s} {'useful%':>7s} {'HBM_GiB':>7s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} SKIP: {r['skip'][:70]}")
+            continue
+        if "error" in r:
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} ERROR: {r['error'][:70]}")
+            continue
+        lines.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['t_compute_s']:>9.4f} "
+            f"{r['t_memory_s']:>9.4f} {r['t_memory_live_s']:>9.4f} "
+            f"{r['t_collective_s']:>9.4f} {r['dominant']:>7s} "
+            f"{100*r['roofline_fraction']:>5.1f}% {100*r['roofline_fraction_fused']:>5.1f}% "
+            f"{100*r['useful_flops_ratio']:>6.1f}% {r['hbm_gib_per_device']:>7.2f}"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out")
+    opts = ap.parse_args(argv)
+    rows = [analyze(r) for r in load_records(opts.tag, opts.mesh)]
+    print(fmt_table(rows))
+    if opts.json_out:
+        Path(opts.json_out).write_text(json.dumps(rows, indent=2))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark entry point: one benchmark per paper table/figure.
+
+  Fig. 6  cue accumulation (both controller modes)  -> bench_cue
+  Fig. 7/8 Braille 3/4-class online learning        -> bench_braille
+  T1/T2   resource analog (two SoC modes)           -> bench_resources
+  kernels allclose + µbench                         -> bench_kernels
+  §Roofline table (from dry-run JSONs, if present)  -> roofline
+
+``python -m benchmarks.run [--fast]`` — default runs the paper's full
+200-epoch Braille protocol; ``--fast`` trims it to 25 epochs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="")
+    opts = ap.parse_args(argv)
+
+    from benchmarks import bench_cue, bench_kernels, bench_resources
+    from benchmarks import bench_braille, roofline
+
+    jobs = [
+        ("kernels", lambda: bench_kernels.main([])),
+        ("cue", lambda: bench_cue.main([])),
+        ("resources", lambda: bench_resources.main([])),
+        ("braille", lambda: bench_braille.main(
+            ["--epochs", "25"] if opts.fast else ["--epochs", "200"])),
+        ("roofline", lambda: roofline.main([])),
+    ]
+    failures = []
+    for name, fn in jobs:
+        if opts.only and name not in opts.only.split(","):
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED: {failures}")
+        return 1
+    print("\nall benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""Serve a (reduced) LM with batched requests: prefill + greedy decode.
+
+Demonstrates the serving half of the substrate — KV/SSM caches, batched
+prefill, token-by-token decode — on any of the ten assigned architectures:
+
+    PYTHONPATH=src python examples/lm_serve.py --arch mamba2-1.3b --steps 16
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_reduced
+from repro.models.model import build
+from repro.train.serve_step import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=16)
+    opts = ap.parse_args()
+
+    cfg = get_reduced(opts.arch)
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+
+    rng = jax.random.key(42)
+    batch = {
+        "tokens": jax.random.randint(
+            rng, (opts.batch, opts.prompt_len), 0, cfg.vocab, jnp.int32
+        )
+    }
+    if cfg.family == "vlm":
+        batch["media"] = 0.1 * jnp.ones(
+            (opts.batch, cfg.n_media_tokens, cfg.d_model), cfg.np_dtype
+        )
+    if cfg.family == "audio":
+        batch = {
+            "tokens": batch["tokens"][:, :1],
+            "src_embeds": 0.1 * jnp.ones(
+                (opts.batch, opts.prompt_len, cfg.d_model), cfg.np_dtype
+            ),
+        }
+
+    t0 = time.time()
+    out = generate(model, params, batch, steps=opts.steps,
+                   cache_len=opts.prompt_len + opts.steps + 8)
+    dt = time.time() - t0
+    print(f"arch={opts.arch} generated {out.shape} tokens in {dt:.2f}s "
+          f"({opts.batch * opts.steps / dt:.1f} tok/s incl. compile)")
+    print("sample:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro — event-driven online-learning training/serving framework in JAX.
+
+Reproduction of "Heterogeneous SoC Integrating an Open-Source Recurrent SNN
+Accelerator for Neuromorphic Edge Computing on FPGA" (CS.AR 2026), adapted
+to TPU v5e pods.  See DESIGN.md for the SoC->pod mapping and EXPERIMENTS.md
+for results.
+"""
+
+__version__ = "0.1.0"

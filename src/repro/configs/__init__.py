@@ -1,0 +1,1 @@
+from repro.configs.base import ModelConfig, Shape, SHAPES, get_config, list_archs  # noqa: F401

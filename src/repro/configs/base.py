@@ -1,0 +1,139 @@
+"""Typed model configuration — the LM-substrate analog of the SPI parameter
+bank: every runtime-tunable quantity is a config field.
+
+``get_config(arch_id)`` loads ``repro.configs.<arch_id>`` (dashes → underscores)
+and returns its ``CONFIG``; each arch module also provides ``reduced()`` — a
+small same-family config for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.mamba import SSMConfig
+from repro.models.moe import MoEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # transformer details
+    qk_norm: bool = False
+    attn_bias: bool = False
+    flat_attn_proj: bool = False    # store QKV/O projections flattened
+                                    # (H·Dh) — TP for head counts (40, 56)
+                                    # that don't divide the 16-way model axis
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # mixture-of-experts / latent attention / state space
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid schedule: attention layer once per `attn_every` layers (0 = none)
+    attn_every: int = 1
+    attn_offset: int = 3            # position of the attn layer in the period
+    # vlm: one cross-attn layer per `cross_attn_every` layers
+    cross_attn_every: int = 0
+    n_media_tokens: int = 0
+    # enc-dec (audio): n_layers is the decoder depth
+    encdec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 4096             # stub-frontend memory length for decode shapes
+    # execution knobs
+    dtype: str = "bfloat16"
+    attn_q_block: int = 512
+    attn_kv_block: int = 1024
+    prune_causal: bool = False      # §Perf lever: exact-causal FLOPs
+    return_cache: bool = False      # set by prefill wrapper
+    remat: bool = True
+    remat_policy: str = "full"      # "full" | "dots" (§Perf lever: save
+                                    # matmul outputs, skip fwd recompute)
+    scan_layers: bool = True
+    unroll_loops: bool = False      # dry-run calibration: unroll attn tiles
+                                    # so HLO cost analysis counts every tile
+    sub_quadratic: bool = False     # arch supports long_500k decode
+
+    @property
+    def np_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- analytical parameter / FLOP accounting (for §Roofline) ----
+
+    def param_count(self) -> int:
+        from repro.models.transformer import count_params
+
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.transformer import count_params
+
+        return count_params(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "jamba-v0.1-52b",
+    "qwen1.5-32b",
+    "llama3-8b",
+    "yi-34b",
+    "qwen3-1.7b",
+    "deepseek-v2-lite-16b",
+    "phi3.5-moe-42b-a6.6b",
+    "llama-3.2-vision-90b",
+    "mamba2-1.3b",
+    "seamless-m4t-large-v2",
+]
+
+
+def _module(arch: str):
+    return importlib.import_module("repro.configs." + arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _module(arch).reduced()
+
+
+def list_archs():
+    return list(ARCH_IDS)

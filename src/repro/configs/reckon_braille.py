@@ -1,0 +1,16 @@
+"""The paper's own network #2 — Braille classification (§4.3): 12 input,
+38 recurrent LIF (reset-to-zero), N-class LI readout; SPI registers
+threshold=0x03F0, alpha=0x0FE, kappa=0x37.
+"""
+
+from repro.core.rsnn import Presets
+
+CONFIG = Presets.braille(n_classes=3)
+
+
+def config_for(n_classes: int):
+    return Presets.braille(n_classes=n_classes)
+
+
+def reduced():
+    return Presets.braille(n_classes=3, n_hid=16, num_ticks=32)

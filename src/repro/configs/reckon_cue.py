@@ -1,0 +1,11 @@
+"""The paper's own network #1 — cue accumulation (§4.2): 40 input,
+100 recurrent LIF, 2 LI outputs, reset-by-subtraction, delayed supervision.
+"""
+
+from repro.core.rsnn import Presets
+
+CONFIG = Presets.cue_accumulation()
+
+
+def reduced():
+    return Presets.cue_accumulation(n_in=12, n_hid=20, num_ticks=40)

@@ -1,0 +1,4 @@
+"""The paper's primary contribution: the ReckOn RSNN datapath (LIF/LI
+neurons + e-prop online learning), the AER event codec, the fixed-point
+weight-SRAM numerics, and the AER-decoder controller that drives both of
+the paper's SoC modes."""

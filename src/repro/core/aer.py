@@ -1,0 +1,141 @@
+"""AER event codec — the paper's 32-bit packed event-word format.
+
+The SoC stores spikes, labels and end-of-sample markers as 32-bit words in
+BRAM; the AER-decoder FSM unpacks them and drives ReckOn's AER bus.  Quoting
+the paper (§3.1):
+
+    "The 8 MSBs are dedicated to the type of event: 0x03 identifies a spike,
+     0x02 the label of the sample and 0x01 the end of the sample.  Bits from
+     23 to 12 tell the address of the target neuron for the spike, or the
+     correct label of the current sample. [...] Finally, the 12 LSBs indicate
+     the target time tick for the event."
+
+We implement the *identical* word format so that event buffers produced by
+this framework are bit-compatible with the FPGA BRAM images, plus vectorised
+encode/decode between event buffers and dense spike rasters ``(T, N)`` — the
+tensor form the TPU datapath consumes.  The FSM's READM/TICK/SPIKE/LABEL/
+END_S walk becomes a scatter over the time axis.
+
+Layout:   [31:24] type | [23:12] address/label | [11:0] tick
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EVT_END = 0x01
+EVT_LABEL = 0x02
+EVT_SPIKE = 0x03
+
+ADDR_BITS = 12
+TICK_BITS = 12
+MAX_ADDR = (1 << ADDR_BITS) - 1   # 4095
+MAX_TICK = (1 << TICK_BITS) - 1   # 4095
+
+
+def pack(kind, addr, tick):
+    """Pack event fields into uint32 words (vectorised)."""
+    kind = jnp.asarray(kind, jnp.uint32)
+    addr = jnp.asarray(addr, jnp.uint32)
+    tick = jnp.asarray(tick, jnp.uint32)
+    return (kind << 24) | ((addr & MAX_ADDR) << 12) | (tick & MAX_TICK)
+
+
+def unpack(words) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Unpack uint32 words into ``(kind, addr, tick)``."""
+    words = jnp.asarray(words, jnp.uint32)
+    return (words >> 24) & 0xFF, (words >> 12) & MAX_ADDR, words & MAX_TICK
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """A decoded sample: dense raster + label metadata (a pytree)."""
+
+    raster: jax.Array      # (T, N) float {0,1}
+    label: jax.Array       # () int32
+    label_tick: jax.Array  # () int32 — tick at which supervision becomes valid
+    end_tick: jax.Array    # () int32 — final tick of the sample (inclusive)
+
+
+def encode_sample(
+    raster: np.ndarray, label: int, label_tick: int, end_tick: int | None = None
+) -> np.ndarray:
+    """Encode a dense raster into a tick-sorted uint32 event buffer.
+
+    Host-side (NumPy) — this is the "bitfile/BRAM image" builder.  Event
+    order matches the FSM's expectation: spike/label events sorted by tick,
+    terminated by a single end-of-sample word.
+    """
+    T, N = raster.shape
+    if end_tick is None:
+        end_tick = T - 1
+    assert T - 1 <= MAX_TICK and N - 1 <= MAX_ADDR
+    t_idx, n_idx = np.nonzero(raster)
+    words = (np.uint32(EVT_SPIKE) << 24) | (n_idx.astype(np.uint32) << 12) | t_idx.astype(
+        np.uint32
+    )
+    label_word = np.uint32((EVT_LABEL << 24) | (int(label) << 12) | int(label_tick))
+    end_word = np.uint32((EVT_END << 24) | int(end_tick))
+    # stable sort by tick; label sorts within its tick after spikes (type order
+    # is irrelevant to the decode semantics).
+    all_words = np.concatenate([words, np.array([label_word], np.uint32)])
+    order = np.argsort(all_words & MAX_TICK, kind="stable")
+    return np.concatenate([all_words[order], np.array([end_word], np.uint32)])
+
+
+def decode_sample(words: jax.Array, num_in: int, num_ticks: int) -> Sample:
+    """Decode an event buffer into a dense raster (vectorised, jit-able).
+
+    ``words`` may be zero-padded (word 0x0 has type 0 and is ignored), so
+    fixed-size buffers batch cleanly.
+    """
+    kind, addr, tick = unpack(words)
+    is_spike = kind == EVT_SPIKE
+    is_label = kind == EVT_LABEL
+    is_end = kind == EVT_END
+
+    # Scatter spikes into the raster.  Out-of-range / non-spike rows target a
+    # dump row (index num_ticks) which is sliced away.
+    t = jnp.where(is_spike, tick, num_ticks).astype(jnp.int32)
+    n = jnp.where(is_spike, addr, 0).astype(jnp.int32)
+    raster = jnp.zeros((num_ticks + 1, num_in), jnp.float32)
+    raster = raster.at[t, n].add(1.0)[:num_ticks]
+    raster = jnp.minimum(raster, 1.0)  # AER delivers unary spikes
+
+    label = jnp.max(jnp.where(is_label, addr, 0)).astype(jnp.int32)
+    label_tick = jnp.max(jnp.where(is_label, tick, 0)).astype(jnp.int32)
+    end_tick = jnp.max(jnp.where(is_end, tick, 0)).astype(jnp.int32)
+    return Sample(raster=raster, label=label, label_tick=label_tick, end_tick=end_tick)
+
+
+def decode_batch(words: jax.Array, num_in: int, num_ticks: int) -> Sample:
+    """vmap'd :func:`decode_sample` over a batch of fixed-size event buffers."""
+    return jax.vmap(lambda w: decode_sample(w, num_in, num_ticks))(words)
+
+
+def pad_events(buffers: list[np.ndarray], length: int | None = None) -> np.ndarray:
+    """Right-pad a list of event buffers with 0x0 words into a dense matrix."""
+    length = length or max(len(b) for b in buffers)
+    out = np.zeros((len(buffers), length), np.uint32)
+    for i, b in enumerate(buffers):
+        assert len(b) <= length, (len(b), length)
+        out[i, : len(b)] = b
+    return out
+
+
+def supervision_mask(
+    label_tick: jax.Array, end_tick: jax.Array, num_ticks: int, label_delay: int = 0
+) -> jax.Array:
+    """Per-tick TARGET_VALID mask: ticks in ``[label_tick + delay, end_tick]``.
+
+    Mirrors the SPI-configurable "delay with which the inference label should
+    be sent" used for the delayed-supervision task.
+    """
+    t = jnp.arange(num_ticks)
+    return ((t >= label_tick + label_delay) & (t <= end_tick)).astype(jnp.float32)

@@ -1,0 +1,204 @@
+"""The AER-decoder controller — the paper's FSM as jit-able scans.
+
+The FPGA FSM (Fig. 3 / Fig. 5) walks IDLE → READM → TICK → SPIKE/LABEL →
+END_S → (END_B) → END_E, driving one sample at a time through ReckOn and
+committing an e-prop weight update at each end-of-sample.  Here the walk
+becomes structured tensor code:
+
+* the READM/TICK/SPIKE scatter is :func:`repro.core.aer.decode_batch`
+  (event words → dense rasters);
+* the per-sample END_S commit is a ``lax.scan`` over samples whose carry is
+  the weight pytree — faithfully *online*: sample ``s+1`` sees the weights
+  updated by sample ``s``, exactly like the chip;
+* END_B (batch boundary, ARM mode) is the host-side loop of
+  :class:`repro.data.pipeline.BatchedOffloadPipeline`;
+* the EPOCH_ACC counter sampled by the ILA is the ``correct`` counter folded
+  through the scan.
+
+Two controller modes mirror the paper's two SoCs:
+
+* ``X-HEEP mode``  — dataset resident on device, whole epoch is one jit;
+* ``ARM mode``     — dataset streamed in batches, one jit per batch with a
+  BATCH_DONE/NEW_BATCH handshake (see ``data/pipeline.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aer, eprop
+from repro.core.rsnn import RSNNConfig, init_params, merge_trainable, trainable
+from repro.optim.eprop_opt import EpropSGD, EpropSGDConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Runtime registers of the expanded SPI parameter bank (§3.3)."""
+
+    num_epochs: int = 10
+    samples_per_epoch: int = 50
+    samples_per_batch: int = 50       # BRAM buffer depth in ARM mode
+    label_delay: int = 0              # delayed-supervision offset
+    eval_every: int = 1               # validation cadence (paper: every 5 for Braille)
+    shuffle: bool = False             # chip replays BRAM order; keep False for parity
+
+
+# A decoded batch on device: {"raster": (S,T,N), "label": (S,), "valid": (S,T)}.
+DeviceBatch = dict
+
+
+def decode_events_to_batch(
+    words: jax.Array, n_in: int, num_ticks: int, label_delay: int = 0
+) -> DeviceBatch:
+    """AER buffer (S, L) uint32 → dense training batch (the READM+TICK path)."""
+    s = aer.decode_batch(words, n_in, num_ticks)
+    valid = jax.vmap(
+        lambda lt, et: aer.supervision_mask(lt, et, num_ticks, label_delay)
+    )(s.label_tick, s.end_tick)
+    return DeviceBatch(raster=s.raster, label=s.label, valid=valid)
+
+
+def make_train_batch_fn(cfg: RSNNConfig, opt: EpropSGD):
+    """Build the jit'd END_S loop: scan over samples, online weight commit.
+
+    Returns ``fn(weights, opt_state, batch, key) -> (weights, opt_state,
+    metrics)`` where metrics carries the EPOCH_ACC-style counters.
+    """
+
+    def sample_step(carry, sample):
+        weights, opt_state, key = carry
+        key, sub = jax.random.split(key)
+        raster = sample["raster"][:, None, :]          # (T, 1, N_in)
+        y_star = jax.nn.one_hot(sample["label"], cfg.n_out)[None, :]
+        valid = sample["valid"][:, None]
+        params = merge_trainable(
+            {"alpha": jnp.asarray(cfg.neuron.alpha, raster.dtype)}, weights
+        )
+        dw, metrics = eprop.run_sample(
+            params, raster, y_star, valid, cfg.neuron, cfg.eprop
+        )
+        weights, opt_state = opt.update(weights, dw, opt_state, sub)
+        correct = (metrics["pred"][0] == sample["label"]).astype(jnp.int32)
+        return (weights, opt_state, key), (correct, metrics["spike_rate"])
+
+    @jax.jit
+    def train_batch(weights, opt_state, batch: Dict[str, jax.Array], key):
+        samples = {
+            "raster": jnp.swapaxes(batch["raster"], 0, 0),  # (S, T, N)
+            "label": batch["label"],
+            "valid": batch["valid"],
+        }
+        (weights, opt_state, _), (correct, rate) = jax.lax.scan(
+            sample_step, (weights, opt_state, key), samples
+        )
+        return weights, opt_state, {
+            "correct": correct.sum(),
+            "count": correct.shape[0],
+            "spike_rate": rate.mean(),
+        }
+
+    return train_batch
+
+
+def make_eval_batch_fn(cfg: RSNNConfig):
+    """Inference-only epoch (TEST=1 path): vmapped over samples, no updates."""
+
+    @jax.jit
+    def eval_batch(weights, batch: Dict[str, jax.Array]):
+        params = merge_trainable(
+            {"alpha": jnp.asarray(cfg.neuron.alpha, batch["raster"].dtype)}, weights
+        )
+        raster = jnp.swapaxes(batch["raster"], 0, 1)       # (T, S, N_in)
+        valid = jnp.swapaxes(batch["valid"], 0, 1)         # (T, S)
+        out = eprop.run_sample_inference(params, raster, valid, cfg.neuron, cfg.eprop)
+        correct = (out["pred"] == batch["label"]).astype(jnp.int32)
+        return {
+            "correct": correct.sum(),
+            "count": correct.shape[0],
+            "spike_rate": out["spike_rate"],
+        }
+
+    return eval_batch
+
+
+@dataclasses.dataclass
+class EpochLog:
+    """The ILA trace: per-epoch accuracy counters."""
+
+    train_acc: list
+    val_acc: list
+
+    def last(self) -> Tuple[float, float]:
+        return (
+            self.train_acc[-1] if self.train_acc else float("nan"),
+            self.val_acc[-1] if self.val_acc else float("nan"),
+        )
+
+
+class OnlineLearner:
+    """End-to-end controller: owns weights, optimizer state and the epoch loop.
+
+    ``pipeline`` is any iterable-of-batches factory with the interface of
+    :mod:`repro.data.pipeline` (``batches(split, epoch)`` yielding device
+    batches) — ResidentPipeline replays one big batch (X-HEEP mode),
+    BatchedOffloadPipeline streams BRAM-sized chunks (ARM mode).
+    """
+
+    def __init__(
+        self,
+        cfg: RSNNConfig,
+        ctrl: ControllerConfig,
+        opt_cfg: EpropSGDConfig,
+        key: jax.Array,
+    ):
+        self.cfg, self.ctrl = cfg, ctrl
+        self.opt = EpropSGD(opt_cfg)
+        params = init_params(key, cfg)
+        self.weights = self.opt.quantize_init(trainable(params))
+        self.alpha = params["alpha"]
+        self.opt_state = self.opt.init(self.weights)
+        self.key = jax.random.fold_in(key, 1)
+        self._train_fn = make_train_batch_fn(cfg, self.opt)
+        self._eval_fn = make_eval_batch_fn(cfg)
+        self.log = EpochLog(train_acc=[], val_acc=[])
+
+    def train_epoch(self, pipeline, epoch: int) -> float:
+        correct = total = 0
+        for batch in pipeline.batches("train", epoch):
+            self.key, sub = jax.random.split(self.key)
+            self.weights, self.opt_state, m = self._train_fn(
+                self.weights, self.opt_state, batch, sub
+            )
+            correct += int(m["correct"])
+            total += int(m["count"])
+        acc = correct / max(total, 1)
+        self.log.train_acc.append(acc)
+        return acc
+
+    def eval_epoch(self, pipeline, epoch: int, split: str = "val") -> float:
+        correct = total = 0
+        for batch in pipeline.batches(split, epoch):
+            m = self._eval_fn(self.weights, batch)
+            correct += int(m["correct"])
+            total += int(m["count"])
+        acc = correct / max(total, 1)
+        if split == "val":
+            self.log.val_acc.append(acc)
+        return acc
+
+    def fit(self, pipeline, verbose: bool = False) -> EpochLog:
+        for epoch in range(self.ctrl.num_epochs):
+            tr = self.train_epoch(pipeline, epoch)
+            va = (
+                self.eval_epoch(pipeline, epoch)
+                if (epoch + 1) % self.ctrl.eval_every == 0
+                else float("nan")
+            )
+            if verbose:
+                print(f"epoch {epoch:4d}  train_acc={tr:.3f}  val_acc={va:.3f}")
+        return self.log

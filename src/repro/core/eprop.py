@@ -1,0 +1,307 @@
+"""e-prop (eligibility propagation) for the ReckOn RSNN — two execution modes.
+
+e-prop (Bellec et al., Nat. Comm. 2020) is the local-in-space-and-time
+learning rule ReckOn implements on chip.  For a LIF recurrent layer with
+per-neuron decay ``alpha`` and an LI readout with decay ``kappa``:
+
+  presynaptic trace    eps_i[t]   = alpha * eps_i[t-1] + s_i[t]       (s = input or rec. spike)
+  eligibility          e_ij[t]    = h_j[t] * eps_i[t]                 (h = pseudo-derivative)
+  filtered eligibility ebar_ij[t] = kappa * ebar_ij[t-1] + e_ij[t]
+  learning signal      L_j[t]     = sum_k B_jk * err_k[t]             (B = W_out or random)
+  weight update        dW_ij      = - lr * sum_t L_j[t] * ebar_ij[t]
+
+Two modes:
+
+* ``mode="exact"`` — per-synapse filtered eligibility state, updated every
+  tick.  This is bit-faithful to ReckOn's datapath (the chip streams
+  ``ebar`` words from its trace SRAM each timestep) and supports per-neuron
+  ``alpha`` vectors.
+
+* ``mode="factored"`` — the TPU-native re-formulation.  Swapping the order of
+  the two sums (update at end-of-sample, as the chip commits anyway)::
+
+      sum_t L_j[t] ebar_ij[t] = sum_s eps_i[s] h_j[s] F_j[s],
+      F_j[s] = sum_{t>=s} kappa^{t-s} L_j[t]      (reverse scan)
+
+  turns the per-synapse trace SRAM into **two O(T·H) scans + one MXU
+  matmul** ``eps^T (h ⊙ F)``.  Same math (asserted allclose in
+  ``tests/test_eprop.py``), ~H× higher arithmetic intensity, and no O(N²)
+  trace state — this is the paper's datapath re-blocked for systolic
+  hardware.  Requires scalar ``alpha`` (the configuration the paper uses:
+  one SPI register drives all "alphas LSBs").
+
+Both modes share the forward LIF/LI dynamics from :mod:`repro.core.neuron`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neuron import NeuronConfig, lif_step, li_step, pseudo_derivative
+
+
+@dataclasses.dataclass(frozen=True)
+class EpropConfig:
+    mode: str = "factored"          # "exact" | "factored"
+    feedback: str = "symmetric"     # "symmetric" (B = W_out) | "random"
+    error: str = "softmax"          # "softmax" | "direct"
+    target_amplitude: float = 1.0   # for error="direct"
+    mask_self_recurrence: bool = True
+    infer_window: str = "valid"     # accumulate readout over "valid" | "all" ticks
+
+
+def readout_error(y: jax.Array, y_star: jax.Array, cfg: EpropConfig) -> jax.Array:
+    """Per-tick output error ``err_k[t]`` (before TARGET_VALID masking)."""
+    if cfg.error == "softmax":
+        return jax.nn.softmax(y, axis=-1) - y_star
+    if cfg.error == "direct":
+        return y - cfg.target_amplitude * y_star
+    raise ValueError(cfg.error)
+
+
+def _rec_mask(w_rec: jax.Array, cfg: EpropConfig) -> jax.Array:
+    if cfg.mask_self_recurrence:
+        return 1.0 - jnp.eye(w_rec.shape[0], dtype=w_rec.dtype)
+    return jnp.ones_like(w_rec)
+
+
+def _feedback(params: Dict[str, jax.Array], cfg: EpropConfig) -> jax.Array:
+    return params["w_out"] if cfg.feedback == "symmetric" else params["b_fb"]
+
+
+# ---------------------------------------------------------------------------
+# exact mode — per-synapse trace SRAM, tick-by-tick (faithful)
+# ---------------------------------------------------------------------------
+
+
+def run_sample_exact(
+    params: Dict[str, jax.Array],
+    raster: jax.Array,       # (T, B, N_in) {0,1}
+    y_star: jax.Array,       # (B, N_out) one-hot
+    valid: jax.Array,        # (T, B) TARGET_VALID mask
+    ncfg: NeuronConfig,
+    ecfg: EpropConfig,
+) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """Run one sample, returning (raw weight-update sums, metrics).
+
+    The returned ``dw`` are the *positive-gradient* sums ``sum_t L e``;
+    callers apply ``w -= lr * dw`` (see :mod:`repro.optim.eprop_opt`).
+    """
+    T, B, n_in = raster.shape
+    H = params["w_rec"].shape[0]
+    n_out = params["w_out"].shape[1]
+    dtype = params["w_in"].dtype
+
+    alpha = jnp.broadcast_to(jnp.asarray(params["alpha"], dtype), (H,))
+    kappa = jnp.asarray(ncfg.kappa, dtype)
+    rec_mask = _rec_mask(params["w_rec"], ecfg)
+    w_rec = params["w_rec"] * rec_mask
+    b_fb = _feedback(params, ecfg)
+
+    def tick(carry, inp):
+        (v, z, y, eps_in, eps_rec, ebar_in, ebar_rec, zbar,
+         dw_in, dw_rec, dw_out, acc_y, n_spk) = carry
+        x_t, valid_t = inp
+
+        current = x_t @ params["w_in"] + z @ w_rec
+        v_new, z_new, v_pre = lif_step(v, current, alpha, ncfg)
+        y_new = li_step(y, z_new @ params["w_out"], kappa)
+
+        h = pseudo_derivative(v_pre, ncfg)                       # (B, H)
+        eps_in = alpha[None, None, :] * eps_in + x_t[:, :, None]   # (B, N_in, H)
+        eps_rec = alpha[None, None, :] * eps_rec + z[:, :, None]   # (B, H, H)
+        ebar_in = kappa * ebar_in + h[:, None, :] * eps_in
+        ebar_rec = kappa * ebar_rec + h[:, None, :] * eps_rec
+        zbar = kappa * zbar + z_new
+
+        err = readout_error(y_new, y_star, ecfg) * valid_t[:, None]   # (B, N_out)
+        L = err @ b_fb.T                                              # (B, H)
+
+        dw_in = dw_in + jnp.einsum("bih,bh->ih", ebar_in, L)
+        dw_rec = dw_rec + jnp.einsum("bkh,bh->kh", ebar_rec, L)
+        dw_out = dw_out + jnp.einsum("bh,bo->ho", zbar, err)
+
+        w_inf = valid_t[:, None] if ecfg.infer_window == "valid" else 1.0
+        acc_y = acc_y + y_new * w_inf
+        n_spk = n_spk + z_new.sum()
+
+        carry = (v_new, z_new, y_new, eps_in, eps_rec, ebar_in, ebar_rec,
+                 zbar, dw_in, dw_rec, dw_out, acc_y, n_spk)
+        return carry, None
+
+    z0 = jnp.zeros((B, H), dtype)
+    carry0 = (
+        jnp.zeros((B, H), dtype), z0, jnp.zeros((B, n_out), dtype),
+        jnp.zeros((B, n_in, H), dtype), jnp.zeros((B, H, H), dtype),
+        jnp.zeros((B, n_in, H), dtype), jnp.zeros((B, H, H), dtype),
+        jnp.zeros((B, H), dtype),
+        jnp.zeros((n_in, H), dtype), jnp.zeros((H, H), dtype),
+        jnp.zeros((H, n_out), dtype),
+        jnp.zeros((B, n_out), dtype), jnp.zeros((), dtype),
+    )
+    carry, _ = jax.lax.scan(tick, carry0, (raster, valid))
+    (*_, dw_in, dw_rec, dw_out, acc_y, n_spk) = carry
+
+    dw = {"w_in": dw_in, "w_rec": dw_rec * rec_mask, "w_out": dw_out}
+    metrics = {
+        "acc_y": acc_y,
+        "pred": jnp.argmax(acc_y, axis=-1),
+        "spike_rate": n_spk / (T * B * H),
+    }
+    return dw, metrics
+
+
+# ---------------------------------------------------------------------------
+# factored mode — scans + MXU matmuls (TPU-native, mathematically identical)
+# ---------------------------------------------------------------------------
+
+
+def forward_traces(
+    params: Dict[str, jax.Array],
+    raster: jax.Array,      # (T, B, N_in)
+    y_star: jax.Array,      # (B, N_out)
+    valid: jax.Array,       # (T, B)
+    ncfg: NeuronConfig,
+    ecfg: EpropConfig,
+):
+    """Forward pass storing the O(T·H) quantities the factored update needs."""
+    T, B, n_in = raster.shape
+    H = params["w_rec"].shape[0]
+    n_out = params["w_out"].shape[1]
+    dtype = params["w_in"].dtype
+
+    alpha = jnp.asarray(params["alpha"], dtype)
+    assert alpha.ndim == 0, "factored e-prop requires scalar alpha (see module doc)"
+    kappa = jnp.asarray(ncfg.kappa, dtype)
+    rec_mask = _rec_mask(params["w_rec"], ecfg)
+    w_rec = params["w_rec"] * rec_mask
+
+    def tick(carry, inp):
+        v, z, y, xbar, pbar, zbar = carry
+        x_t, valid_t = inp
+        current = x_t @ params["w_in"] + z @ w_rec
+        v_new, z_new, v_pre = lif_step(v, current, alpha, ncfg)
+        y_new = li_step(y, z_new @ params["w_out"], kappa)
+        h = pseudo_derivative(v_pre, ncfg)
+        xbar = alpha * xbar + x_t        # alpha-filtered input trace   (B, N_in)
+        pbar = alpha * pbar + z          # alpha-filtered presyn spikes (B, H)
+        zbar = kappa * zbar + z_new      # kappa-filtered spikes        (B, H)
+        err = readout_error(y_new, y_star, ecfg) * valid_t[:, None]
+        w_inf = valid_t[:, None] if ecfg.infer_window == "valid" else jnp.ones_like(valid_t)[:, None]
+        outs = (h, xbar, pbar, zbar, err, y_new * w_inf, z_new.sum())
+        return (v_new, z_new, y_new, xbar, pbar, zbar), outs
+
+    carry0 = (
+        jnp.zeros((B, H), dtype), jnp.zeros((B, H), dtype),
+        jnp.zeros((B, n_out), dtype), jnp.zeros((B, n_in), dtype),
+        jnp.zeros((B, H), dtype), jnp.zeros((B, H), dtype),
+    )
+    _, (h, xbar, pbar, zbar, err, y_inf, n_spk) = jax.lax.scan(
+        tick, carry0, (raster, valid)
+    )
+    return h, xbar, pbar, zbar, err, y_inf, n_spk
+
+
+def factored_update(
+    params: Dict[str, jax.Array],
+    h: jax.Array,      # (T, B, H)   pseudo-derivatives
+    xbar: jax.Array,   # (T, B, N_in) alpha-filtered input traces
+    pbar: jax.Array,   # (T, B, H)   alpha-filtered presyn (recurrent) traces
+    zbar: jax.Array,   # (T, B, H)   kappa-filtered spikes
+    err: jax.Array,    # (T, B, N_out) masked readout errors
+    ncfg: NeuronConfig,
+    ecfg: EpropConfig,
+) -> Dict[str, jax.Array]:
+    """End-of-sample update: reverse kappa-scan + three matmuls (MXU-bound)."""
+    kappa = jnp.asarray(ncfg.kappa, h.dtype)
+    b_fb = _feedback(params, ecfg)
+    L = jnp.einsum("tbo,ho->tbh", err, b_fb)            # learning signals
+
+    # F[s] = L[s] + kappa * F[s+1]  — reverse scan over time.
+    def rev(carry, l_t):
+        f = l_t + kappa * carry
+        return f, f
+
+    _, F = jax.lax.scan(rev, jnp.zeros_like(L[0]), L, reverse=True)
+
+    G = h * F                                            # (T, B, H)
+    dw_in = jnp.einsum("tbi,tbh->ih", xbar, G)
+    dw_rec = jnp.einsum("tbk,tbh->kh", pbar, G)
+    dw_out = jnp.einsum("tbh,tbo->ho", zbar, err)
+    return {
+        "w_in": dw_in,
+        "w_rec": dw_rec * _rec_mask(params["w_rec"], ecfg),
+        "w_out": dw_out,
+    }
+
+
+def run_sample_factored(
+    params: Dict[str, jax.Array],
+    raster: jax.Array,
+    y_star: jax.Array,
+    valid: jax.Array,
+    ncfg: NeuronConfig,
+    ecfg: EpropConfig,
+) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    h, xbar, pbar, zbar, err, y_inf, n_spk = forward_traces(
+        params, raster, y_star, valid, ncfg, ecfg
+    )
+    dw = factored_update(params, h, xbar, pbar, zbar, err, ncfg, ecfg)
+    acc_y = y_inf.sum(axis=0)
+    T, B = raster.shape[:2]
+    metrics = {
+        "acc_y": acc_y,
+        "pred": jnp.argmax(acc_y, axis=-1),
+        "spike_rate": n_spk.sum() / (T * B * params["w_rec"].shape[0]),
+    }
+    return dw, metrics
+
+
+def run_sample(params, raster, y_star, valid, ncfg: NeuronConfig, ecfg: EpropConfig):
+    """Dispatch on ``ecfg.mode``."""
+    fn = run_sample_exact if ecfg.mode == "exact" else run_sample_factored
+    return fn(params, raster, y_star, valid, ncfg, ecfg)
+
+
+# ---------------------------------------------------------------------------
+# inference-only forward (no traces) — used for validation/test epochs
+# ---------------------------------------------------------------------------
+
+
+def run_sample_inference(
+    params: Dict[str, jax.Array],
+    raster: jax.Array,
+    valid: jax.Array,
+    ncfg: NeuronConfig,
+    ecfg: EpropConfig,
+) -> Dict[str, jax.Array]:
+    T, B, n_in = raster.shape
+    H = params["w_rec"].shape[0]
+    n_out = params["w_out"].shape[1]
+    dtype = params["w_in"].dtype
+    alpha = jnp.broadcast_to(jnp.asarray(params["alpha"], dtype), (H,))
+    kappa = jnp.asarray(ncfg.kappa, dtype)
+    w_rec = params["w_rec"] * _rec_mask(params["w_rec"], ecfg)
+
+    def tick(carry, inp):
+        v, z, y, acc_y, n_spk = carry
+        x_t, valid_t = inp
+        current = x_t @ params["w_in"] + z @ w_rec
+        v_new, z_new, _ = lif_step(v, current, alpha, ncfg)
+        y_new = li_step(y, z_new @ params["w_out"], kappa)
+        w_inf = valid_t[:, None] if ecfg.infer_window == "valid" else 1.0
+        return (v_new, z_new, y_new, acc_y + y_new * w_inf, n_spk + z_new.sum()), None
+
+    carry0 = (jnp.zeros((B, H), dtype), jnp.zeros((B, H), dtype),
+              jnp.zeros((B, n_out), dtype), jnp.zeros((B, n_out), dtype),
+              jnp.zeros((), dtype))
+    (v, z, y, acc_y, n_spk), _ = jax.lax.scan(tick, carry0, (raster, valid))
+    return {
+        "acc_y": acc_y,
+        "pred": jnp.argmax(acc_y, axis=-1),
+        "spike_rate": n_spk / (T * B * H),
+    }

@@ -1,0 +1,114 @@
+"""Neuron dynamics of the ReckOn RSNN: LIF hidden neurons, LI readout.
+
+ReckOn (Frenkel & Indiveri, ISSCC'22) simulates up to 256 input + 256
+recurrent leaky integrate-and-fire (LIF) neurons and 16 leaky-integrator (LI)
+output neurons.  Two firing/reset mechanisms are supported by the chip and
+used in the paper:
+
+* ``reset="sub"``  — reset by subtraction of the threshold (cue-accumulation
+  experiments, long-memory behaviour);
+* ``reset="zero"`` — reset to zero (the Braille experiments: "reset to zero
+  firing mechanism, 38 hidden neurons").
+
+The pseudo-derivative used for the eligibility traces is a hardware-friendly
+boxcar window (1 inside ``|v - vth| < width``, 0 outside), with Bellec's
+triangular surrogate also available for the BPTT cross-checks in the tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuronConfig:
+    alpha: float = 254.0 / 256.0   # hidden-membrane decay (SPI reg 0x0FE)
+    kappa: float = 55.0 / 256.0    # readout decay        (SPI reg 0x37)
+    v_th: float = 1.0              # normalised threshold (SPI reg 0x03F0)
+    reset: str = "sub"             # "sub" | "zero"
+    surrogate: str = "boxcar"      # "boxcar" | "triangular"
+    boxcar_width: float = 0.5      # half-width of the boxcar, in units of v_th
+    gamma: float = 0.3             # surrogate damping (Bellec et al.)
+
+
+def pseudo_derivative(v_pre: jax.Array, cfg: NeuronConfig) -> jax.Array:
+    """Surrogate d z / d v evaluated at the pre-reset membrane potential."""
+    if cfg.surrogate == "boxcar":
+        return (jnp.abs(v_pre - cfg.v_th) < cfg.boxcar_width * cfg.v_th).astype(
+            v_pre.dtype
+        )
+    if cfg.surrogate == "triangular":
+        return cfg.gamma * jnp.maximum(
+            0.0, 1.0 - jnp.abs(v_pre - cfg.v_th) / cfg.v_th
+        ).astype(v_pre.dtype)
+    raise ValueError(f"unknown surrogate {cfg.surrogate!r}")
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def spike(v_pre: jax.Array, v_th: jax.Array, cfg: NeuronConfig) -> jax.Array:
+    """Heaviside spike with surrogate gradient (for the BPTT reference path)."""
+    return (v_pre >= v_th).astype(v_pre.dtype)
+
+
+def _spike_fwd(v_pre, v_th, cfg):
+    return spike(v_pre, v_th, cfg), (v_pre,)
+
+
+def _spike_bwd(cfg, res, g):
+    (v_pre,) = res
+    return (g * pseudo_derivative(v_pre, cfg), jnp.zeros_like(v_pre).sum())
+
+
+spike.defvjp(_spike_fwd, _spike_bwd)
+
+
+def lif_step(
+    v: jax.Array,
+    current: jax.Array,
+    alpha: jax.Array,
+    cfg: NeuronConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One LIF timestep.
+
+    Args:
+      v:       post-reset membrane from the previous tick, shape ``(..., H)``.
+      current: synaptic input current this tick, shape ``(..., H)``.
+      alpha:   per-neuron (or scalar) membrane decay.
+
+    Returns:
+      ``(v_new, z_new, v_pre)`` — post-reset membrane, spikes, and the
+      pre-reset membrane (the value the surrogate derivative is evaluated at,
+      mirroring what ReckOn's update pipeline exposes to the e-prop unit).
+    """
+    v_pre = alpha * v + current
+    z = (v_pre >= cfg.v_th).astype(v.dtype)
+    if cfg.reset == "sub":
+        v_new = v_pre - z * cfg.v_th
+    elif cfg.reset == "zero":
+        v_new = v_pre * (1.0 - z)
+    else:
+        raise ValueError(f"unknown reset mode {cfg.reset!r}")
+    return v_new, z, v_pre
+
+
+def lif_step_surrogate(
+    v: jax.Array, current: jax.Array, alpha: jax.Array, cfg: NeuronConfig
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """LIF step using the surrogate-gradient spike (differentiable, for BPTT)."""
+    v_pre = alpha * v + current
+    z = spike(v_pre, jnp.asarray(cfg.v_th, v.dtype), cfg)
+    if cfg.reset == "sub":
+        v_new = v_pre - z * cfg.v_th
+    else:
+        v_new = v_pre * (1.0 - jax.lax.stop_gradient(z))
+    return v_new, z, v_pre
+
+
+def li_step(y: jax.Array, current: jax.Array, kappa: jax.Array) -> jax.Array:
+    """One leaky-integrator readout step: ``y' = kappa * y + current``."""
+    return kappa * y + current

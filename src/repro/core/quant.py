@@ -1,0 +1,160 @@
+"""Fixed-point numerics matching ReckOn's on-chip representation.
+
+ReckOn stores synaptic weights in 8-bit SRAM words and membrane potentials /
+thresholds on a wider integer grid (12-bit in the taped-out chip).  Leakage
+factors (alpha for the hidden LIF layer, kappa for the LI readout) are 8-bit
+fractional multipliers, i.e. ``decay = reg / 256``.
+
+The paper configures the Braille experiments through the (expanded) SPI
+parameter bank with::
+
+    threshold = 0x03F0   # membrane-grid integer
+    alpha     = 0x0FE    # "alphas LSBs"  -> 254/256
+    kappa     = 0x37     # 55/256
+
+This module provides
+
+* :class:`QuantSpec` — a signed fixed-point grid ``Q(bits, frac)``;
+* deterministic and stochastic rounding onto a grid;
+* straight-through quantization for use inside differentiable code;
+* :func:`from_reckon_regs` — the register-file interpretation above;
+* :class:`QuantState` — accumulate-then-round weight storage (the shadow
+  accumulator pattern the chip uses for e-prop updates smaller than 1 LSB).
+
+Everything is pure JAX and shape-polymorphic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Signed fixed-point grid with ``bits`` total bits and ``frac`` fractional bits.
+
+    Representable values: ``k * 2**-frac`` for integer
+    ``k in [-2**(bits-1), 2**(bits-1) - 1]``.
+    """
+
+    bits: int = 8
+    frac: int = 4
+
+    @property
+    def lsb(self) -> float:
+        return 2.0 ** (-self.frac)
+
+    @property
+    def min_val(self) -> float:
+        return -(2.0 ** (self.bits - 1)) * self.lsb
+
+    @property
+    def max_val(self) -> float:
+        return (2.0 ** (self.bits - 1) - 1) * self.lsb
+
+    def clip(self, x: jax.Array) -> jax.Array:
+        return jnp.clip(x, self.min_val, self.max_val)
+
+    def round_nearest(self, x: jax.Array) -> jax.Array:
+        """Round-to-nearest-even onto the grid, saturating."""
+        return self.clip(jnp.round(x / self.lsb) * self.lsb)
+
+    def round_stochastic(self, x: jax.Array, key: jax.Array) -> jax.Array:
+        """Stochastic rounding onto the grid (unbiased), saturating.
+
+        This is the rounding mode ReckOn uses for on-chip e-prop updates so
+        that sub-LSB updates still make expected progress.
+        """
+        scaled = x / self.lsb
+        floor = jnp.floor(scaled)
+        p_up = scaled - floor
+        up = jax.random.uniform(key, x.shape) < p_up
+        return self.clip((floor + up.astype(x.dtype)) * self.lsb)
+
+    def ste(self, x: jax.Array) -> jax.Array:
+        """Straight-through quantization: forward = grid value, grad = identity."""
+        return x + jax.lax.stop_gradient(self.round_nearest(x) - x)
+
+
+# Membrane-potential grid of the taped-out chip (12-bit signed integer grid,
+# threshold registers are raw integers on this grid).
+MEMBRANE_SPEC = QuantSpec(bits=16, frac=0)
+WEIGHT_SPEC = QuantSpec(bits=8, frac=4)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReckonRegs:
+    """Decoded SPI parameter-bank values."""
+
+    threshold: float
+    alpha: float
+    kappa: float
+
+
+def from_reckon_regs(
+    threshold: int = 0x03F0, alpha_lsb: int = 0x0FE, kappa: int = 0x37,
+    membrane_scale: Optional[float] = None,
+) -> ReckonRegs:
+    """Interpret the raw SPI registers reported in the paper.
+
+    * ``threshold`` is an integer on the membrane grid.  When
+      ``membrane_scale`` is given, the threshold is mapped into float model
+      units (``threshold * membrane_scale``); by default we normalise the
+      grid so the threshold is 1.0 — ReckOn's dynamics are scale-free up to
+      the weight grid, so normalised units are exact as long as weights are
+      scaled consistently (they are: see :class:`QuantState`).
+    * leakage registers are 8-bit fractional multipliers ``reg / 256``.
+    """
+    scale = membrane_scale if membrane_scale is not None else 1.0 / float(threshold)
+    return ReckonRegs(
+        threshold=float(threshold) * scale,
+        alpha=float(alpha_lsb & 0xFF) / 256.0,
+        kappa=float(kappa & 0xFF) / 256.0,
+    )
+
+
+class QuantState:
+    """Accumulate-then-round weight storage (pytree of (q, acc) pairs).
+
+    ``q``   — weights snapped to ``spec``'s grid (what the "SRAM" holds);
+    ``acc`` — float residual accumulator for sub-LSB update fragments.
+
+    ``commit`` folds the accumulator into the grid weights, carrying the
+    rounding residue forward, exactly like the chip's read-modify-write of
+    weight SRAM words during e-prop.
+    """
+
+    @staticmethod
+    def init(params, spec: QuantSpec = WEIGHT_SPEC):
+        q = jax.tree.map(spec.round_nearest, params)
+        acc = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+        return {"q": q, "acc": acc}
+
+    @staticmethod
+    def accumulate(state, updates):
+        acc = jax.tree.map(lambda a, u: a + u, state["acc"], updates)
+        return {"q": state["q"], "acc": acc}
+
+    @staticmethod
+    def commit(state, spec: QuantSpec = WEIGHT_SPEC,
+               key: Optional[jax.Array] = None):
+        def _commit(q, a, k=None):
+            tot = q + a
+            new_q = spec.round_nearest(tot) if k is None else spec.round_stochastic(tot, k)
+            return new_q, tot - new_q
+
+        if key is None:
+            pairs = jax.tree.map(_commit, state["q"], state["acc"])
+        else:
+            leaves, treedef = jax.tree.flatten(state["q"])
+            acc_leaves = jax.tree.leaves(state["acc"])
+            keys = jax.random.split(key, len(leaves))
+            pairs_leaves = [_commit(q, a, k) for q, a, k in zip(leaves, acc_leaves, keys)]
+            pairs = jax.tree.unflatten(treedef, pairs_leaves)
+        q = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        acc = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return {"q": q, "acc": acc}

@@ -1,0 +1,5 @@
+from repro.data.cue import CueConfig, make_cue_dataset  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    BatchedOffloadPipeline,
+    ResidentPipeline,
+)

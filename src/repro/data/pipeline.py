@@ -1,0 +1,142 @@
+"""The two SoC dataflow modes as host↔device pipelines.
+
+* :class:`ResidentPipeline` — **X-HEEP mode**.  The whole encoded dataset is
+  moved to the device once ("the datasets are loaded during the bitfile
+  writing stage, implemented directly by initializing the BRAMs"), decoded
+  once, and every epoch replays the resident tensors.  Zero host↔device
+  traffic after startup; capacity bounded by device memory — exactly the
+  trade-off of Table 1 (~100% BRAM).
+
+* :class:`BatchedOffloadPipeline` — **ARM mode**.  The dataset stays on the
+  host ("safely stored in the internal memory"); batches of
+  ``samples_per_batch`` are offloaded to a device-side buffer, processed,
+  and the BATCH_DONE/NEW_BATCH GPIO handshake becomes *double-buffered
+  asynchronous prefetch*: while the device consumes batch *k*, the host has
+  already issued the transfer of batch *k+1* (``jax.device_put`` is async —
+  the dispatch returns before the copy completes, so transfer overlaps
+  compute).  Capacity unbounded; steady host↔device traffic — Table 2.
+
+Both yield identical decoded batches, so the controller is mode-agnostic —
+the same way the paper's AER decoder serves both SoCs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import DeviceBatch, decode_events_to_batch
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    """Telemetry for the resource benchmark (Tables 1/2 analog)."""
+
+    h2d_bytes: int = 0        # host→device traffic issued
+    resident_bytes: int = 0   # device-resident dataset footprint
+    transfers: int = 0        # number of device_put calls
+
+
+class _Base:
+    def __init__(self, dataset: Dict[str, Dict[str, np.ndarray]], label_delay: int = 0):
+        self.dataset = dataset
+        self.label_delay = label_delay
+        self.stats = PipelineStats()
+
+    def _decode(self, words: jax.Array, meta: Dict) -> DeviceBatch:
+        return decode_events_to_batch(
+            words, meta["n_in"], meta["num_ticks"], self.label_delay
+        )
+
+
+class ResidentPipeline(_Base):
+    """X-HEEP mode: one device_put at construction, epochs replay on device."""
+
+    def __init__(self, dataset, label_delay: int = 0):
+        super().__init__(dataset, label_delay)
+        self._resident: Dict[str, DeviceBatch] = {}
+        for split, d in dataset.items():
+            words = jax.device_put(jnp.asarray(d["events"]))
+            self.stats.h2d_bytes += d["events"].nbytes
+            self.stats.transfers += 1
+            batch = self._decode(words, d)
+            batch = jax.tree.map(jax.device_put, batch)
+            self._resident[split] = batch
+            self.stats.resident_bytes += sum(
+                x.nbytes for x in jax.tree.leaves(batch)
+            ) + d["events"].nbytes
+
+    def batches(self, split: str, epoch: int) -> Iterator[DeviceBatch]:
+        if split in self._resident:
+            yield self._resident[split]
+
+
+class BatchedOffloadPipeline(_Base):
+    """ARM mode: host-resident dataset, BRAM-sized chunks, async prefetch."""
+
+    def __init__(
+        self,
+        dataset,
+        samples_per_batch: int,
+        label_delay: int = 0,
+        prefetch: int = 2,
+        shuffle_train: bool = False,
+        seed: int = 0,
+    ):
+        super().__init__(dataset, label_delay)
+        self.samples_per_batch = samples_per_batch
+        self.prefetch = max(1, prefetch)
+        self.shuffle_train = shuffle_train
+        self._rng = np.random.default_rng(seed)
+
+    def _order(self, split: str, n: int) -> np.ndarray:
+        if split == "train" and self.shuffle_train:
+            return self._rng.permutation(n)
+        return np.arange(n)
+
+    def batches(self, split: str, epoch: int) -> Iterator[DeviceBatch]:
+        if split not in self.dataset:
+            return
+        d = self.dataset[split]
+        events = d["events"]
+        order = self._order(split, events.shape[0])
+        spb = self.samples_per_batch
+        chunks = [order[i : i + spb] for i in range(0, len(order), spb)]
+
+        # Double-buffered offload: issue transfer k+1 before yielding k.
+        inflight: list = []
+        for idx in chunks[: self.prefetch]:
+            inflight.append(self._offload(events[idx], d))
+        ptr = self.prefetch
+        while inflight:
+            batch = inflight.pop(0)
+            if ptr < len(chunks):
+                inflight.append(self._offload(events[chunks[ptr]], d))
+                ptr += 1
+            yield batch  # NEW_BATCH: device consumes; next copy is in flight
+
+    def _offload(self, chunk: np.ndarray, meta: Dict) -> DeviceBatch:
+        words = jax.device_put(jnp.asarray(chunk))   # async dispatch
+        self.stats.h2d_bytes += chunk.nbytes
+        self.stats.transfers += 1
+        return self._decode(words, meta)
+
+
+def make_pipeline(
+    mode: str,
+    dataset,
+    samples_per_batch: Optional[int] = None,
+    label_delay: int = 0,
+    **kw,
+):
+    """Factory keyed on the paper's two controller modes."""
+    if mode in ("xheep", "resident"):
+        return ResidentPipeline(dataset, label_delay)
+    if mode in ("arm", "offload"):
+        assert samples_per_batch, "ARM mode needs samples_per_batch (BRAM depth)"
+        return BatchedOffloadPipeline(dataset, samples_per_batch, label_delay, **kw)
+    raise ValueError(f"unknown pipeline mode {mode!r}")

@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (  # noqa: F401
+    BASE_RULES,
+    ShardingRules,
+    logical_sharding,
+    logical_spec,
+    param_shardings,
+    shard,
+    use_mesh,
+)

@@ -1,0 +1,146 @@
+"""Atomic, asynchronous checkpoints with keep-N retention and manifests.
+
+Layout:
+  <dir>/step_000420/
+      manifest.json        {step, time, data_position, rng, leaf index}
+      arrays.npz           one entry per flattened pytree leaf
+  <dir>/LATEST             text file naming the newest complete checkpoint
+
+Atomicity: each checkpoint is written into ``step_X.tmp`` and renamed into
+place only after every array has been flushed — a crash mid-save never
+corrupts the restore path (rename is atomic on POSIX).  Saving runs on a
+background thread (``save_async``) so the train loop only blocks on the
+device→host transfer, not the disk write.  Restore targets any mesh: arrays
+come back as numpy and are re-placed with whatever shardings the new mesh
+prescribes (see :mod:`repro.distributed.elastic`).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any) -> Tuple[List[str], List[Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves
+
+
+def _unflatten_like(template: Any, names: List[str], arrays: Dict[str, np.ndarray]) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        out.append(arrays[key])
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> Path:
+        """Blocking save (device→host, write, atomic rename, prune)."""
+        host = jax.tree.map(np.asarray, jax.device_get(tree))
+        return self._write(step, host, extra or {})
+
+    def save_async(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        """Device→host happens now; disk IO on a background thread."""
+        self.wait()  # at most one in-flight save
+        host = jax.tree.map(np.asarray, jax.device_get(tree))
+        ex = dict(extra or {})
+
+        def work():
+            try:
+                self._write(step, host, ex)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host_tree: Any, extra: Dict) -> Path:
+        names, leaves = _flatten(host_tree)
+        final = self.dir / f"step_{step:09d}"
+        tmp = self.dir / f"step_{step:09d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **{n: l for n, l in zip(names, leaves)})
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "leaves": names,
+            **extra,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)                       # atomic commit
+        latest_tmp = self.dir / "LATEST.tmp"
+        latest_tmp.write_text(final.name)
+        os.replace(latest_tmp, self.dir / "LATEST")  # atomic pointer update
+        self._prune()
+        return final
+
+    def _prune(self) -> None:
+        ckpts = self.all_steps()
+        for step in ckpts[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{step:09d}", ignore_errors=True)
+
+    # ------------------------------------------------------------- load
+    def all_steps(self) -> List[int]:
+        steps = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            steps.append(int(p.name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        latest = self.dir / "LATEST"
+        if latest.exists():
+            name = latest.read_text().strip()
+            if (self.dir / name / "manifest.json").exists():
+                return int(name.split("_")[1])
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template: Any) -> Tuple[Any, Dict]:
+        """Returns (numpy pytree shaped like template, manifest)."""
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        with np.load(d / "arrays.npz") as z:
+            arrays = {k: z[k] for k in z.files}
+        names, _ = _flatten(template)
+        tree = _unflatten_like(template, names, arrays)
+        return tree, manifest

@@ -1,0 +1,67 @@
+"""Elastic scaling: reload any checkpoint into any mesh.
+
+At 1000+-node scale the mesh you restart on is rarely the mesh you saved
+from — nodes die, capacity shifts.  Checkpoints are stored as plain host
+arrays (full, unsharded logical tensors), so resharding is just re-placing
+each leaf with the NamedSharding prescribed by the *new* mesh + rules:
+
+    state = reshard(host_state, specs, new_mesh, rules)
+
+``survive_failure`` implements the failure drill: given a device set with
+holes, build the largest feasible (data, model) mesh from the survivors
+(keeping the model axis intact — TP degree is a property of the compiled
+program) and reshard onto it.  Global batch is preserved by raising the
+per-replica batch (gradient accumulation), which is the trainer's job.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import ShardingRules, logical_spec
+
+
+def reshard(host_tree: Any, specs: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    """Place a host (numpy) pytree onto ``mesh`` with logical-axis specs."""
+
+    def place(x, ax):
+        sh = NamedSharding(mesh, logical_spec(ax, mesh, rules))
+        return jax.device_put(x, sh)
+
+    return jax.tree.map(
+        place, host_tree, specs, is_leaf=lambda x: isinstance(x, np.ndarray)
+    )
+
+
+def best_mesh_from(devices: Sequence, model_parallel: int) -> Mesh:
+    """Largest (data, model) mesh buildable from surviving devices.
+
+    The model axis is kept at ``model_parallel`` (the compiled program's TP
+    degree); surviving devices beyond the largest multiple are left idle.
+    """
+    n = len(devices)
+    data = n // model_parallel
+    if data < 1:
+        raise ValueError(
+            f"{n} surviving devices cannot host model_parallel={model_parallel}"
+        )
+    use = data * model_parallel
+    devs = np.asarray(devices[:use]).reshape(data, model_parallel)
+    return Mesh(devs, ("data", "model"))
+
+
+def survive_failure(
+    host_state: Any,
+    specs: Any,
+    failed_ids: Sequence[int],
+    rules: ShardingRules,
+    model_parallel: int = 1,
+) -> Tuple[Any, Mesh]:
+    """Drop failed devices, rebuild the mesh, reshard the state."""
+    survivors = [d for d in jax.devices() if d.id not in set(failed_ids)]
+    mesh = best_mesh_from(survivors, model_parallel)
+    return reshard(host_state, specs, mesh, rules), mesh

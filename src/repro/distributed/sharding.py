@@ -1,0 +1,188 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+The mesh is ``(pod, data, model)`` — multi-pod — or ``(data, model)`` for a
+single pod (see :func:`repro.launch.mesh.make_production_mesh`).
+
+Every parameter / activation dimension carries a *logical* name; the rules
+table maps logical names to mesh axes.  Swapping the table re-shards the
+whole model without touching model code — that is how the §Perf hillclimb
+changes sharding schemes.
+
+Baseline scheme (2D "FSDP × TP"):
+
+* params: ``embed → data`` (FSDP: weights gathered just-in-time per layer),
+  ``vocab/heads/mlp/experts/ssm_inner → model`` (tensor / expert parallel);
+* activations: ``batch → (pod, data)``, head/ff dims → ``model``;
+* optimizer state inherits parameter sharding (ZeRO-3-equivalent).
+
+``shard(x, *axes)`` annotates activations inside model code; it is a no-op
+when no mesh context is active, so the same model runs single-device smoke
+tests unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+# Baseline logical→physical rules.  Values may be None (replicated), a mesh
+# axis name, or a tuple of axes (dimension sharded over their product).
+BASE_RULES: Dict[str, Axes] = {
+    # --- activations ---
+    "batch": ("pod", "data"),
+    "act_seq": None,           # sequence kept whole (SP variants flip this)
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": None,      # kv heads (GQA: few) — replicated
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_expert": "model",
+    "act_ssm_inner": "model",
+    "act_ssm_heads": "model",
+    "kv_cache_seq": None,      # flipped to "model" for long-context decode
+    # --- parameters ---
+    "vocab": "model",
+    "embed": "data",           # FSDP shard
+    "heads": "model",
+    "attn_flat": "model",      # flattened (H·Dh) projections (40/56-head archs)
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "kv_lora": None,
+    "q_lora": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv_dim": None,
+    "layers": None,            # stacked scan-over-layers dim
+    "norm": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    table: Dict[str, Axes]
+
+    def resolve(self, logical: Optional[str], mesh: Mesh):
+        if logical is None:
+            return None
+        if logical not in self.table:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        axes = self.table[logical]
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            axes = (axes,)
+        present = tuple(a for a in axes if a in mesh.axis_names)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+
+    def override(self, **changes: Axes) -> "ShardingRules":
+        t = dict(self.table)
+        t.update(changes)
+        return ShardingRules(t)
+
+    def strip(self, axis: str) -> "ShardingRules":
+        """Remove a mesh axis from every rule (used inside shard_map regions
+        where that axis is Manual and must not appear in Auto constraints)."""
+        t: Dict[str, Axes] = {}
+        for k, v in self.table.items():
+            if v == axis:
+                t[k] = None
+            elif isinstance(v, tuple):
+                vv = tuple(a for a in v if a != axis)
+                t[k] = vv if vv else None
+            else:
+                t[k] = v
+        return ShardingRules(t)
+
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[ShardingRules] = None):
+    """Activate a mesh + rules for ``shard`` / ``logical_sharding`` calls.
+
+    All shardings are explicit ``NamedSharding``s (which carry their mesh),
+    so no jax-global mesh context is needed — this is pure bookkeeping for
+    the ``shard()`` helper.
+    """
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, rules or ShardingRules(BASE_RULES))
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def _current() -> Optional[Tuple[Mesh, ShardingRules]]:
+    return getattr(_CTX, "state", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    state = _current()
+    return state[0] if state else None
+
+
+def current_rules() -> ShardingRules:
+    state = _current()
+    return state[1] if state else ShardingRules(BASE_RULES)
+
+
+def logical_spec(axes: Sequence[Optional[str]], mesh: Mesh, rules: ShardingRules) -> P:
+    return P(*(rules.resolve(a, mesh) for a in axes))
+
+
+def logical_sharding(
+    axes: Sequence[Optional[str]],
+    mesh: Optional[Mesh] = None,
+    rules: Optional[ShardingRules] = None,
+) -> NamedSharding:
+    if mesh is None:
+        mesh, rules = _current()
+    rules = rules or ShardingRules(BASE_RULES)
+    return NamedSharding(mesh, logical_spec(axes, mesh, rules))
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op outside a mesh ctx)."""
+    state = _current()
+    if state is None:
+        return x
+    mesh, rules = state
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, logical_spec(axes, mesh, rules))
+    )
+
+
+def param_shardings(specs: Any, mesh: Mesh, rules: Optional[ShardingRules] = None):
+    """Map a tree of logical-axis tuples to a tree of NamedShardings."""
+    rules = rules or ShardingRules(BASE_RULES)
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, logical_spec(ax, mesh, rules)),
+        specs,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def axis_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

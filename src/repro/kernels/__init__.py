@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots of the ReckOn datapath:
+
+* ``rsnn_step``     — the fused per-tick LIF/LI update + e-prop trace
+                      filtering (ReckOn's neuron-update pipeline, re-blocked
+                      for VMEM/MXU);
+* ``eprop_update``  — the factored end-of-sample e-prop weight update
+                      (reverse κ-scan fused with the trace×signal matmuls);
+* ``flash_attention`` — blocked online-softmax GQA attention for the LM
+                      substrate's train/prefill path.
+
+``ops.py`` holds the jit'd public wrappers (auto ``interpret=True`` on CPU);
+``ref.py`` the pure-jnp oracles every kernel is allclose-tested against.
+"""

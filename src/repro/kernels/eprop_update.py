@@ -1,0 +1,114 @@
+"""Factored e-prop weight-update kernel.
+
+Computes, in one reverse pass over the tick axis,
+
+  L[t]   = err[t] @ B_fbᵀ                    (MXU)
+  F[t]   = L[t] + κ·F[t+1]                   (VMEM-carried reverse filter)
+  dW_in  = Σ_t xbar[t]ᵀ (h[t]∘F[t])          (MXU, accumulated in VMEM)
+  dW_rec = Σ_t pbar[t]ᵀ (h[t]∘F[t])
+  dW_out = Σ_t zbar[t]ᵀ err[t]
+
+i.e. the per-synapse eligibility SRAM of the chip becomes three VMEM-resident
+accumulator tiles fed by per-tick rank-B matmul updates.  grid=(T,) iterated
+in reverse via the index map; accumulators write out on the final step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    h_ref,        # (1, B, H)
+    xbar_ref,     # (1, B, N_in)
+    pbar_ref,     # (1, B, H)
+    zbar_ref,     # (1, B, H)
+    err_ref,      # (1, B, O)
+    b_fb_ref,     # (H, O)
+    dw_in_ref,    # (N_in, H) out
+    dw_rec_ref,   # (H, H) out
+    dw_out_ref,   # (H, O) out
+    f_scr,        # VMEM (B, H)
+    acc_in_scr,   # VMEM (N_in, H)
+    acc_rec_scr,  # VMEM (H, H)
+    acc_out_scr,  # VMEM (H, O)
+    *,
+    kappa: float,
+    T: int,
+):
+    i = pl.program_id(0)   # 0..T-1, visiting ticks T-1..0 via the index map
+
+    @pl.when(i == 0)
+    def _init():
+        f_scr[...] = jnp.zeros_like(f_scr)
+        acc_in_scr[...] = jnp.zeros_like(acc_in_scr)
+        acc_rec_scr[...] = jnp.zeros_like(acc_rec_scr)
+        acc_out_scr[...] = jnp.zeros_like(acc_out_scr)
+
+    err = err_ref[0]
+    L = jnp.dot(err, b_fb_ref[...].T, preferred_element_type=jnp.float32)
+    F = L + kappa * f_scr[...]
+    G = h_ref[0] * F
+
+    acc_in_scr[...] += jnp.dot(
+        xbar_ref[0].T, G, preferred_element_type=jnp.float32
+    )
+    acc_rec_scr[...] += jnp.dot(
+        pbar_ref[0].T, G, preferred_element_type=jnp.float32
+    )
+    acc_out_scr[...] += jnp.dot(
+        zbar_ref[0].T, err, preferred_element_type=jnp.float32
+    )
+    f_scr[...] = F
+
+    @pl.when(i == T - 1)
+    def _flush():
+        dw_in_ref[...] = acc_in_scr[...]
+        dw_rec_ref[...] = acc_rec_scr[...]
+        dw_out_ref[...] = acc_out_scr[...]
+
+
+def eprop_update(
+    h: jax.Array,      # (T, B, H)
+    xbar: jax.Array,   # (T, B, N_in)
+    pbar: jax.Array,   # (T, B, H)
+    zbar: jax.Array,   # (T, B, H)
+    err: jax.Array,    # (T, B, O)
+    b_fb: jax.Array,   # (H, O)
+    *,
+    kappa: float,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    T, B, H = h.shape
+    n_in = xbar.shape[2]
+    O = err.shape[2]
+
+    rev = lambda cols: pl.BlockSpec((1, B, cols), lambda i: (T - 1 - i, 0, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    kern = functools.partial(_kernel, kappa=float(kappa), T=T)
+    dw_in, dw_rec, dw_out = pl.pallas_call(
+        kern,
+        grid=(T,),
+        in_specs=[rev(H), rev(n_in), rev(H), rev(H), rev(O), full((H, O))],
+        out_specs=[full((n_in, H)), full((H, H)), full((H, O))],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_in, H), jnp.float32),
+            jax.ShapeDtypeStruct((H, H), jnp.float32),
+            jax.ShapeDtypeStruct((H, O), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, H), jnp.float32),
+            pltpu.VMEM((n_in, H), jnp.float32),
+            pltpu.VMEM((H, H), jnp.float32),
+            pltpu.VMEM((H, O), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, xbar, pbar, zbar, err, b_fb)
+    return dw_in, dw_rec, dw_out

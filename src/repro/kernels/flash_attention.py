@@ -1,0 +1,132 @@
+"""Blocked online-softmax (flash) attention kernel — causal GQA.
+
+Layout: q (B, H, Sq, D), k/v (B, Hkv, Skv, D) — head-major so each grid cell
+streams contiguous (block, D) tiles.  Grid = (B·H, Sq/bq, Skv/bk) with the
+KV axis innermost: a TPU core walks KV tiles sequentially, carrying the
+online-softmax statistics (m, l) and the f32 output accumulator in VMEM
+scratch, and writes the normalised tile once per (q-tile) when the last KV
+tile finishes.  Causal masking prunes whole tiles above the diagonal with
+``pl.when`` (no wasted MXU work on skipped tiles — the tile still iterates
+but performs no FLOPs; exact-causal tile scheduling is done at the wrapper
+level by clamping the KV grid per q tile).
+
+Block shapes default to (512, 512): tiles are (512·D) ≈ 128 KiB in bf16 at
+D=128 — q, k, v, acc together ≲ 1 MiB of VMEM, well inside the ~128 MiB/core
+budget, and every matmul dim is a multiple of the 128-lane MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,     # (1, bq, D)
+    k_ref,     # (1, bk, D)
+    v_ref,     # (1, bk, D)
+    o_ref,     # (1, bq, D)
+    m_scr,     # VMEM (bq,)
+    l_scr,     # VMEM (bq,)
+    acc_scr,   # VMEM (bq, D)
+    *,
+    scale: float,
+    causal: bool,
+    bq: int,
+    bk: int,
+    n_kv: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # Tile is fully above the diagonal ⇒ skip all compute.
+        run = kj * bk <= qi * bq + (bq - 1)
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                            # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _flush():
+        o_ref[0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, Hkv, Skv, D)
+    v: jax.Array,   # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = H // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+    scale = D ** -0.5
+
+    qr = q.reshape(B * H, Sq, D)
+    kr = k.reshape(B * Hkv, Skv, D)
+    vr = v.reshape(B * Hkv, Skv, D)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, bq=bq, bk=bk, n_kv=nk
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, kj, g=G: (bh // g, kj, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, kj, g=G: (bh // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, D)

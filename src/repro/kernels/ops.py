@@ -1,0 +1,74 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels run compiled; anywhere else (this container's
+CPU) they execute under ``interpret=True`` — the kernel body evaluated in
+Python with TPU semantics — which is how the allclose tests validate them.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import eprop_update as _eprop
+from repro.kernels import flash_attention as _flash
+from repro.kernels import rsnn_step as _rsnn
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("alpha", "kappa", "v_th", "reset", "boxcar_width"))
+def rsnn_forward(
+    raster: jax.Array,
+    w_in: jax.Array,
+    w_rec: jax.Array,
+    w_out: jax.Array,
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float = 1.0,
+    reset: str = "sub",
+    boxcar_width: float = 0.5,
+) -> Dict[str, jax.Array]:
+    return _rsnn.rsnn_forward(
+        raster, w_in, w_rec, w_out,
+        alpha=alpha, kappa=kappa, v_th=v_th, reset=reset,
+        boxcar_width=boxcar_width, interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("kappa",))
+def eprop_update(
+    h: jax.Array,
+    xbar: jax.Array,
+    pbar: jax.Array,
+    zbar: jax.Array,
+    err: jax.Array,
+    b_fb: jax.Array,
+    *,
+    kappa: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    return _eprop.eprop_update(
+        h, xbar, pbar, zbar, err, b_fb, kappa=kappa, interpret=_interpret()
+    )
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    return _flash.flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=_interpret(),
+    )

@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref`` side of the
+per-kernel allclose tests and shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# rsnn_step: full-sample RSNN forward with e-prop trace filtering
+# ---------------------------------------------------------------------------
+
+
+def rsnn_forward_ref(
+    raster: jax.Array,   # (T, B, N_in) {0,1}
+    w_in: jax.Array,     # (N_in, H)
+    w_rec: jax.Array,    # (H, H) — self-recurrence already masked
+    w_out: jax.Array,    # (H, O)
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    *,
+    reset: str = "sub",
+    boxcar_width: float = 0.5,
+) -> Dict[str, jax.Array]:
+    """Reference for the fused RSNN-step kernel.
+
+    Returns per-tick tensors: spikes z (T,B,H), pseudo-derivative h,
+    alpha-filtered input trace xbar (T,B,N_in), alpha-filtered presynaptic
+    recurrent trace pbar (T,B,H), kappa-filtered spikes zbar (T,B,H), and
+    readout y (T,B,O).
+    """
+    T, B, n_in = raster.shape
+    H = w_rec.shape[0]
+    O = w_out.shape[1]
+    dt = w_in.dtype
+
+    def tick(carry, x_t):
+        v, z, y, xbar, pbar, zbar = carry
+        current = x_t @ w_in + z @ w_rec
+        v_pre = alpha * v + current
+        z_new = (v_pre >= v_th).astype(dt)
+        v_new = v_pre - z_new * v_th if reset == "sub" else v_pre * (1 - z_new)
+        y_new = kappa * y + z_new @ w_out
+        h = (jnp.abs(v_pre - v_th) < boxcar_width * v_th).astype(dt)
+        xbar = alpha * xbar + x_t
+        pbar = alpha * pbar + z          # presynaptic trace uses z BEFORE update
+        zbar = kappa * zbar + z_new
+        return (v_new, z_new, y_new, xbar, pbar, zbar), (z_new, h, xbar, pbar, zbar, y_new)
+
+    carry0 = (
+        jnp.zeros((B, H), dt), jnp.zeros((B, H), dt), jnp.zeros((B, O), dt),
+        jnp.zeros((B, n_in), dt), jnp.zeros((B, H), dt), jnp.zeros((B, H), dt),
+    )
+    _, (z, h, xbar, pbar, zbar, y) = jax.lax.scan(tick, carry0, raster)
+    return {"z": z, "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar, "y": y}
+
+
+# ---------------------------------------------------------------------------
+# eprop_update: factored end-of-sample weight update
+# ---------------------------------------------------------------------------
+
+
+def eprop_update_ref(
+    h: jax.Array,      # (T, B, H)
+    xbar: jax.Array,   # (T, B, N_in)
+    pbar: jax.Array,   # (T, B, H)
+    zbar: jax.Array,   # (T, B, H)
+    err: jax.Array,    # (T, B, O) — masked readout errors
+    b_fb: jax.Array,   # (H, O)
+    kappa: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference for the e-prop update kernel: reverse κ-scan + matmuls."""
+    L = jnp.einsum("tbo,ho->tbh", err, b_fb)
+
+    def rev(carry, l_t):
+        f = l_t + kappa * carry
+        return f, f
+
+    _, F = jax.lax.scan(rev, jnp.zeros_like(L[0]), L, reverse=True)
+    G = h * F
+    dw_in = jnp.einsum("tbi,tbh->ih", xbar, G)
+    dw_rec = jnp.einsum("tbk,tbh->kh", pbar, G)
+    dw_out = jnp.einsum("tbh,tbo->ho", zbar, err)
+    return dw_in, dw_rec, dw_out
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(
+    q: jax.Array,      # (B, Sq, H, D)
+    k: jax.Array,      # (B, Skv, Hkv, D)
+    v: jax.Array,      # (B, Skv, Hkv, D)
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qr, k, preferred_element_type=jnp.float32)
+    s = s * (D ** -0.5)
+    if causal:
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,166 @@
+"""Fused RSNN-sample kernel — ReckOn's neuron-update pipeline on the MXU.
+
+The chip walks neurons sequentially per tick, streaming membrane/trace words
+from SRAM.  The TPU-native re-blocking keeps the *whole network state
+resident in VMEM* across the tick loop (grid iterations execute sequentially
+on a TPU core, so VMEM scratch carries state), and turns the per-neuron
+MAC loop into two MXU matmuls per tick:
+
+  grid = (T,)                       one step per AER tick
+  VMEM scratch: v, z, y, xbar, pbar, zbar   (the "neuron SRAM")
+  per tick: current = x_t @ W_in + z @ W_rec      (MXU)
+            LIF update, boxcar pseudo-derivative   (VPU)
+            y = κ·y + z_new @ W_out                (MXU)
+            trace filters (α, κ)                   (VPU)
+
+Outputs stream the per-tick quantities the factored e-prop update needs
+(h, xbar, pbar, zbar, y) back to HBM — O(T·H) traffic, never O(T·H²).
+
+ReckOn caps N_in/H at 256 ⇒ weights (256×256 f32 = 256 KiB) sit in VMEM for
+the entire sample.  Batch tiles up to ~128 keep total VMEM ≲ 2 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    raster_ref,   # (1, B, N_in) — tick t's input spikes
+    w_in_ref,     # (N_in, H)
+    w_rec_ref,    # (H, H)
+    w_out_ref,    # (H, O)
+    z_out_ref,    # (1, B, H)
+    h_out_ref,    # (1, B, H)
+    xbar_out_ref, # (1, B, N_in)
+    pbar_out_ref, # (1, B, H)
+    zbar_out_ref, # (1, B, H)
+    y_out_ref,    # (1, B, O)
+    v_scr,        # VMEM (B, H)
+    z_scr,        # VMEM (B, H)
+    y_scr,        # VMEM (B, O)
+    xbar_scr,     # VMEM (B, N_in)
+    pbar_scr,     # VMEM (B, H)
+    zbar_scr,     # VMEM (B, H)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    reset_sub: bool,
+    boxcar_width: float,
+):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        v_scr[...] = jnp.zeros_like(v_scr)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        y_scr[...] = jnp.zeros_like(y_scr)
+        xbar_scr[...] = jnp.zeros_like(xbar_scr)
+        pbar_scr[...] = jnp.zeros_like(pbar_scr)
+        zbar_scr[...] = jnp.zeros_like(zbar_scr)
+
+    x_t = raster_ref[0]
+    z = z_scr[...]
+
+    current = jnp.dot(x_t, w_in_ref[...], preferred_element_type=jnp.float32)
+    current += jnp.dot(z, w_rec_ref[...], preferred_element_type=jnp.float32)
+
+    v_pre = alpha * v_scr[...] + current
+    z_new = (v_pre >= v_th).astype(v_pre.dtype)
+    if reset_sub:
+        v_new = v_pre - z_new * v_th
+    else:
+        v_new = v_pre * (1.0 - z_new)
+    h = (jnp.abs(v_pre - v_th) < boxcar_width * v_th).astype(v_pre.dtype)
+
+    y_new = kappa * y_scr[...] + jnp.dot(
+        z_new, w_out_ref[...], preferred_element_type=jnp.float32
+    )
+    xbar = alpha * xbar_scr[...] + x_t
+    pbar = alpha * pbar_scr[...] + z          # presyn trace: z BEFORE this tick
+    zbar = kappa * zbar_scr[...] + z_new
+
+    v_scr[...] = v_new
+    z_scr[...] = z_new
+    y_scr[...] = y_new
+    xbar_scr[...] = xbar
+    pbar_scr[...] = pbar
+    zbar_scr[...] = zbar
+
+    z_out_ref[0] = z_new
+    h_out_ref[0] = h
+    xbar_out_ref[0] = xbar
+    pbar_out_ref[0] = pbar
+    zbar_out_ref[0] = zbar
+    y_out_ref[0] = y_new
+
+
+def rsnn_forward(
+    raster: jax.Array,   # (T, B, N_in) f32
+    w_in: jax.Array,     # (N_in, H)
+    w_rec: jax.Array,    # (H, H) — pre-masked
+    w_out: jax.Array,    # (H, O)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float = 1.0,
+    reset: str = "sub",
+    boxcar_width: float = 0.5,
+    interpret: bool = False,
+) -> Dict[str, jax.Array]:
+    T, B, n_in = raster.shape
+    H = w_rec.shape[0]
+    O = w_out.shape[1]
+    dt = raster.dtype
+
+    kern = functools.partial(
+        _kernel,
+        alpha=float(alpha),
+        kappa=float(kappa),
+        v_th=float(v_th),
+        reset_sub=(reset == "sub"),
+        boxcar_width=float(boxcar_width),
+    )
+    tick_spec = lambda cols: pl.BlockSpec((1, B, cols), lambda t: (t, 0, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda t: tuple(0 for _ in shape))
+
+    outs = pl.pallas_call(
+        kern,
+        grid=(T,),
+        in_specs=[
+            tick_spec(n_in),
+            full((n_in, H)),
+            full((H, H)),
+            full((H, O)),
+        ],
+        out_specs=[
+            tick_spec(H), tick_spec(H), tick_spec(n_in),
+            tick_spec(H), tick_spec(H), tick_spec(O),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, B, H), dt),
+            jax.ShapeDtypeStruct((T, B, H), dt),
+            jax.ShapeDtypeStruct((T, B, n_in), dt),
+            jax.ShapeDtypeStruct((T, B, H), dt),
+            jax.ShapeDtypeStruct((T, B, H), dt),
+            jax.ShapeDtypeStruct((T, B, O), dt),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, H), jnp.float32),
+            pltpu.VMEM((B, H), jnp.float32),
+            pltpu.VMEM((B, O), jnp.float32),
+            pltpu.VMEM((B, n_in), jnp.float32),
+            pltpu.VMEM((B, H), jnp.float32),
+            pltpu.VMEM((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(raster, w_in, w_rec, w_out)
+    z, h, xbar, pbar, zbar, y = outs
+    return {"z": z, "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar, "y": y}

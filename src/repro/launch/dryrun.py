@@ -1,0 +1,419 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell this lowers + compiles
+the real step function (train_step / prefill / serve decode_step) against
+512 placeholder host devices, prints ``memory_analysis`` / ``cost_analysis``
+and records the roofline inputs (FLOPs, bytes, collective wire traffic) as
+JSON under ``experiments/dryrun/``.
+
+The XLA_FLAGS line above MUST run before any jax import — jax locks the
+device count at first init (this is why smoke tests / benches never import
+this module).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all            # every cell, subprocess each
+  python -m repro.launch.dryrun --arch ... --shape ... --kv-shard seq \
+        --prune-causal --n-micro 4               # §Perf hillclimb knobs
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.distributed.sharding import (
+    BASE_RULES,
+    ShardingRules,
+    logical_spec,
+    param_shardings,
+    use_mesh,
+)
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import collective_bytes
+from repro.models.model import build
+from repro.models.transformer import count_params
+from repro.optim.adamw import AdamW, AdamWConfig
+from repro.train.train_step import (
+    abstract_opt_state,
+    make_train_step,
+    make_train_step_compressed,
+    opt_state_specs,
+)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+BATCH_AXES = {
+    "tokens": ("batch", "act_seq"),
+    "targets": ("batch", "act_seq"),
+    "media": ("batch", None, "act_embed"),
+    "src_embeds": ("batch", "act_seq", "act_embed"),
+    "pos": (),
+}
+
+
+def make_rules(shape, mesh, opts) -> ShardingRules:
+    rules = ShardingRules(dict(BASE_RULES))
+    kv = opts.kv_shard
+    if kv == "auto":
+        # Baseline: decode shards the KV-cache sequence dim over `model`
+        # (always divisible; GQA head counts like 8 are not 16-divisible).
+        kv = "seq" if shape.kind == "decode" else "none"
+    if kv == "heads":
+        rules = rules.override(act_kv_heads="model")
+    elif kv == "seq":
+        rules = rules.override(kv_cache_seq="model", act_kv_heads=None)
+    # jit arguments must divide evenly: tiny global batches (long_500k B=1)
+    # cannot shard over the data axes.
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    if shape.global_batch % dp != 0:
+        rules = rules.override(batch=None)
+    for ov in opts.rules_override:
+        k, v = ov.split("=")
+        rules = rules.override(**{k: None if v in ("None", "none", "") else tuple(v.split("+")) if "+" in v else v})
+    return rules
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "pure full-attention arch: a 524k-token dense KV decode is the "
+            "quadratic regime long_500k excludes (DESIGN.md §5)"
+        )
+    return None
+
+
+def tune_cfg(cfg, shape, opts):
+    if opts.prune_causal:
+        cfg = cfg.replace(prune_causal=True)
+    if opts.no_remat:
+        cfg = cfg.replace(remat=False)
+    if shape.kind != "train":
+        cfg = cfg.replace(remat=False)
+    if opts.attn_block:
+        cfg = cfg.replace(attn_q_block=opts.attn_block, attn_kv_block=opts.attn_block)
+    if opts.remat_policy != "full":
+        cfg = cfg.replace(remat_policy=opts.remat_policy)
+    if opts.moe_groups and cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch_groups=opts.moe_groups))
+    if cfg.ssm is not None and (opts.ssd_chunk or opts.ssd_bf16):
+        kw = {}
+        if opts.ssd_chunk:
+            kw["chunk"] = opts.ssd_chunk
+        if opts.ssd_bf16:
+            kw["compute_dtype"] = "bfloat16"
+        cfg = cfg.replace(ssm=dataclasses.replace(cfg.ssm, **kw))
+    return cfg
+
+
+def batch_shardings(specs: dict, mesh, rules):
+    return {
+        k: NamedSharding(mesh, logical_spec(BATCH_AXES[k], mesh, rules))
+        for k in specs
+    }
+
+
+def compile_cell(cfg, shape, mesh, rules, opts, *, want_hlo=True) -> dict:
+    """Lower + compile one step function; return analysis fields."""
+    model = build(cfg)
+    out: dict = {}
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        params_sds, specs = model.abstract()
+        p_shard = param_shardings(specs, mesh, rules)
+        inputs_sds = model.input_specs(shape)
+        in_shard = batch_shardings(inputs_sds, mesh, rules)
+
+        if shape.kind == "train":
+            opt = AdamW(AdamWConfig())
+            opt_sds = abstract_opt_state(params_sds)
+            opt_shard = param_shardings(opt_state_specs(specs), mesh, rules)
+            if opts.compress_pods and "pod" in mesh.axis_names:
+                step = make_train_step_compressed(model, opt, mesh, n_micro=opts.n_micro)
+                res_sds = jax.tree.map(
+                    lambda sd: jax.ShapeDtypeStruct(sd.shape, jnp.float32), params_sds
+                )
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(p_shard, opt_shard, p_shard, in_shard),
+                    out_shardings=(p_shard, opt_shard, p_shard, None),
+                    donate_argnums=(0, 1, 2),
+                )
+                lowered = jitted.lower(params_sds, opt_sds, res_sds, inputs_sds)
+            else:
+                step = make_train_step(model, opt, n_micro=opts.n_micro)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(p_shard, opt_shard, in_shard),
+                    out_shardings=(p_shard, opt_shard, None),
+                    donate_argnums=(0, 1),
+                )
+                lowered = jitted.lower(params_sds, opt_sds, inputs_sds)
+        elif shape.kind == "prefill":
+            jitted = jax.jit(model.prefill, in_shardings=(p_shard, in_shard))
+            lowered = jitted.lower(params_sds, inputs_sds)
+        else:  # decode
+            cache_sds, cache_axes = model.cache_specs(shape.global_batch, shape.seq_len)
+            cache_shard = param_shardings(cache_axes, mesh, rules)
+            tok_shard = in_shard["tokens"]
+            jitted = jax.jit(
+                model.decode_step,
+                in_shardings=(p_shard, cache_shard, tok_shard, None),
+                out_shardings=(None, cache_shard),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                params_sds, cache_sds, inputs_sds["tokens"], inputs_sds["pos"]
+            )
+        out["lower_s"] = round(time.time() - t0, 2)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        out["compile_s"] = round(time.time() - t1, 2)
+
+        try:
+            mem = compiled.memory_analysis()
+            out["memory"] = {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            }
+        except Exception as e:  # backend-dependent
+            out["memory"] = {"error": str(e)}
+
+        try:
+            cost = compiled.cost_analysis()
+            out["cost"] = {
+                "flops": float(cost.get("flops", -1)),
+                "bytes_accessed": float(cost.get("bytes accessed", -1)),
+                "transcendentals": float(cost.get("transcendentals", -1)),
+            }
+        except Exception as e:
+            out["cost"] = {"error": str(e)}
+
+        if want_hlo:
+            hlo = compiled.as_text()
+            stats = collective_bytes(hlo, mesh.size)
+            out["collectives"] = {
+                "total_wire_bytes": stats.total_wire_bytes,
+                "bytes_by_op": stats.bytes_by_op,
+                "count_by_op": stats.count_by_op,
+            }
+    return out
+
+
+def calib_config(cfg, k: int):
+    """A k-period unrolled config whose per-layer HLO matches the scanned
+    model's body — used to de-alias while-loop cost undercounting (HLO cost
+    analysis visits each loop body once, ignoring trip count)."""
+    from repro.models.transformer import _layer_plan
+
+    plan = _layer_plan(cfg)
+    n = len(plan.prefix) + k * len(plan.period)
+    kw = dict(n_layers=n, scan_layers=False, unroll_loops=True)
+    if cfg.family == "audio":
+        kw["n_enc_layers"] = k
+    return cfg.replace(**kw)
+
+
+def _combine_cost(f1: dict, f2: dict, repeats: int) -> dict:
+    """total = rest + R·body, with body = f2 - f1 and rest = f1 - body."""
+    out = {}
+    for key in ("flops", "bytes_accessed", "transcendentals"):
+        a, b = f1["cost"].get(key, -1), f2["cost"].get(key, -1)
+        if a is None or a < 0 or b < 0:
+            out[key] = -1
+            continue
+        body = max(b - a, 0.0)
+        out[key] = a + (repeats - 1) * body
+    c1 = f1.get("collectives", {}).get("bytes_by_op", {})
+    c2 = f2.get("collectives", {}).get("bytes_by_op", {})
+    coll = {}
+    for op in set(c1) | set(c2):
+        a, b = c1.get(op, 0.0), c2.get(op, 0.0)
+        coll[op] = a + (repeats - 1) * max(b - a, 0.0)
+    out["collective_bytes_by_op"] = coll
+    out["collective_wire_bytes"] = sum(coll.values())
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, opts) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": mesh.size,
+        "opts": {
+            "kv_shard": opts.kv_shard,
+            "prune_causal": opts.prune_causal,
+            "n_micro": opts.n_micro,
+            "compress_pods": opts.compress_pods,
+            "no_remat": opts.no_remat,
+            "attn_block": opts.attn_block,
+            "rules_override": opts.rules_override,
+        },
+    }
+    reason = skip_reason(cfg, shape)
+    if reason:
+        record["skip"] = reason
+        return record
+
+    cfg = tune_cfg(cfg, shape, opts)
+    rules = make_rules(shape, mesh, opts)
+
+    # The real compile: full depth, scan-over-layers — proves the sharding
+    # config and yields the per-device memory analysis.
+    main = compile_cell(cfg, shape, mesh, rules, opts)
+    record.update(main)
+    print("memory_analysis:", record.get("memory"))
+    print("cost_analysis(raw, loop bodies counted once):", record.get("cost"))
+
+    # Cost calibration: two shallow *unrolled* variants isolate the exact
+    # per-period cost; totals are reconstructed as rest + R·body.
+    if not opts.no_calibrate:
+        from repro.models.transformer import _layer_plan
+
+        repeats = _layer_plan(cfg).repeats
+        # Calibration always runs n_micro=1: total FLOPs are invariant to
+        # microbatching, and a micro-scan would re-introduce the loop-body
+        # undercount the calibration exists to remove.
+        copts = argparse.Namespace(**vars(opts))
+        copts.n_micro = 1
+        ccfg = cfg
+        if not opts.attn_block:
+            # Bigger attention tiles for calibration: 4× fewer unrolled tile
+            # programs (compile time) at ≤3% causal-FLOP overcount.
+            ccfg = cfg.replace(attn_q_block=2048, attn_kv_block=2048)
+        f1 = compile_cell(calib_config(ccfg, 1), shape, mesh, rules, copts)
+        f2 = compile_cell(calib_config(ccfg, 2), shape, mesh, rules, copts)
+        record["calibration"] = {"k1": f1, "k2": f2, "repeats": repeats}
+        record["cost_corrected"] = _combine_cost(f1, f2, repeats)
+        print("cost_corrected:", {k: (f"{v:.4g}" if isinstance(v, float) else v)
+                                  for k, v in record["cost_corrected"].items()
+                                  if not isinstance(v, dict)})
+
+    record["params_total"] = count_params(cfg)
+    record["params_active"] = count_params(cfg, active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind in ("train", "prefill") else 1)
+    mult = 6 if shape.kind == "train" else 2
+    record["model_flops"] = mult * record["params_active"] * tokens
+    record["tokens"] = tokens
+    return record
+
+
+def cell_list(opts):
+    cells = []
+    for arch in (opts.arch.split(",") if opts.arch else ARCH_IDS):
+        for shape in (opts.shape.split(",") if opts.shape else list(SHAPES)):
+            for mp in ([opts.multi_pod] if not opts.both_meshes else [False, True]):
+                cells.append((arch, shape, mp))
+    return cells
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default=str(OUT_DIR))
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in its own process (used by --all)")
+    # §Perf knobs
+    ap.add_argument("--kv-shard", default="auto", choices=["auto", "heads", "seq", "none"])
+    ap.add_argument("--prune-causal", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--attn-block", type=int, default=0)
+    ap.add_argument("--compress-pods", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--remat-policy", default="full", choices=["full", "dots"])
+    ap.add_argument("--moe-groups", type=int, default=0)
+    ap.add_argument("--ssd-chunk", type=int, default=0)
+    ap.add_argument("--ssd-bf16", action="store_true")
+    ap.add_argument("--rules-override", action="append", default=[])
+    opts = ap.parse_args(argv)
+
+    out_dir = Path(opts.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if opts.all or opts.subprocess or (opts.arch and "," in opts.arch) or not opts.arch or not opts.shape or opts.both_meshes:
+        # Parent mode: one subprocess per cell for isolation.
+        if opts.all:
+            opts.arch = None
+            opts.shape = None
+            opts.both_meshes = True
+        failures = []
+        for arch, shape, mp in cell_list(opts):
+            mesh_tag = "2x16x16" if mp else "16x16"
+            name = f"{arch}__{shape}__{mesh_tag}__{opts.tag}"
+            out_file = out_dir / (name + ".json")
+            if out_file.exists() and not os.environ.get("DRYRUN_FORCE"):
+                print(f"[skip existing] {name}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--tag", opts.tag,
+                   "--out-dir", str(out_dir), "--kv-shard", opts.kv_shard,
+                   "--n-micro", str(opts.n_micro)]
+            if mp:
+                # Multi-pod proves lower+compile; roofline (calibrated cost)
+                # is a single-pod deliverable — skip the calibration compiles.
+                cmd += ["--multi-pod", "--no-calibrate"]
+            for flag in ("prune_causal", "no_remat", "compress_pods", "no_calibrate"):
+                if getattr(opts, flag):
+                    cmd.append("--" + flag.replace("_", "-"))
+            if opts.attn_block:
+                cmd += ["--attn-block", str(opts.attn_block)]
+            for ov in opts.rules_override:
+                cmd += ["--rules-override", ov]
+            print(f"=== {name} ===", flush=True)
+            r = subprocess.run(cmd, cwd=str(Path(__file__).resolve().parents[2]))
+            if r.returncode != 0:
+                failures.append(name)
+                print(f"[FAIL] {name}", flush=True)
+        print(f"done; {len(failures)} failures: {failures}")
+        return 1 if failures else 0
+
+    # Child mode: one cell.
+    mesh_tag = "2x16x16" if opts.multi_pod else "16x16"
+    name = f"{opts.arch}__{opts.shape}__{mesh_tag}__{opts.tag}"
+    try:
+        record = run_cell(opts.arch, opts.shape, opts.multi_pod, opts)
+    except Exception as e:
+        record = {
+            "arch": opts.arch, "shape": opts.shape, "mesh": mesh_tag,
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc(),
+        }
+        (out_dir / (name + ".json")).write_text(json.dumps(record, indent=2))
+        print(record["traceback"], file=sys.stderr)
+        return 1
+    (out_dir / (name + ".json")).write_text(json.dumps(record, indent=2))
+    print(f"[ok] {name}" + (" (skipped: %s)" % record["skip"] if record.get("skip") else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

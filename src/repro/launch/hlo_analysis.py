@@ -1,0 +1,130 @@
+"""Post-GSPMD HLO analysis: collective-traffic accounting for §Roofline.
+
+``collective_bytes`` parses the compiled (partitioned) HLO text and sums the
+wire bytes per device of every communication op, using ring-algorithm cost
+models:
+
+  all-gather        (n-1)/n · result_bytes
+  reduce-scatter    (n-1)/n · operand_bytes
+  all-reduce        2·(n-1)/n · operand_bytes     (reduce-scatter + all-gather)
+  all-to-all        (n-1)/n · operand_bytes
+  collective-permute  operand_bytes
+
+``n`` is the participant-group size parsed from ``replica_groups`` (both the
+explicit ``{{0,1,...}}`` and iota ``[g,s]<=[N]...`` forms).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float]
+    count_by_op: Dict[str, int]
+    total_wire_bytes: float
+    ops: List[Tuple[str, float, int]]   # (op, wire bytes, group size)
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> CollectiveStats:
+    bytes_by_op: Dict[str, float] = defaultdict(float)
+    count_by_op: Dict[str, int] = defaultdict(int)
+    ops: List[Tuple[str, float, int]] = []
+
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not ls or "=" not in ls:
+            continue
+        opname = None
+        for op in COLLECTIVE_OPS:
+            # Match "op(" or "op-start(" as the instruction, not fusion names.
+            if f" {op}(" in ls or f" {op}-start(" in ls:
+                opname = op
+                break
+        if opname is None:
+            continue
+        if f" {opname}-done" in ls:
+            continue
+        lhs, rhs = ls.split("=", 1)
+        paren = rhs.find("(")
+        result_part = rhs[:paren]
+        operand_part = rhs[paren:]
+        result_bytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result_part))
+        operand_bytes = sum(
+            _shape_bytes(d, s) for d, s in _SHAPE_RE.findall(operand_part.split(")")[0] + ")")
+        )
+        n = max(_group_size(ls, n_devices), 1)
+        if opname == "all-gather":
+            wire = (n - 1) / n * result_bytes
+        elif opname == "reduce-scatter":
+            wire = (n - 1) / n * operand_bytes
+        elif opname == "all-reduce":
+            wire = 2 * (n - 1) / n * operand_bytes
+        elif opname in ("all-to-all", "ragged-all-to-all"):
+            wire = (n - 1) / n * operand_bytes
+        elif opname == "collective-broadcast":
+            wire = operand_bytes
+        else:  # collective-permute
+            wire = operand_bytes
+        bytes_by_op[opname] += wire
+        count_by_op[opname] += 1
+        ops.append((opname, wire, n))
+
+    return CollectiveStats(
+        bytes_by_op=dict(bytes_by_op),
+        count_by_op=dict(count_by_op),
+        total_wire_bytes=float(sum(bytes_by_op.values())),
+        ops=ops,
+    )
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 20) -> List[Tuple[str, int]]:
+    """Crude opcode histogram of the optimized HLO (debugging aid for §Perf)."""
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        rhs = ls.split("=", 1)[1]
+        m = re.search(r"\)?\s*([a-z][a-z0-9-]*)\(", rhs)
+        if m:
+            counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Target: TPU v5e pods — 16×16 = 256 chips per pod; 2 pods = 512 chips.
+Axes: ``data`` (FSDP + batch), ``model`` (tensor/expert parallel), and on
+multi-pod, ``pod`` (pure data parallel across the DCN; the axis gradient
+compression targets).
+
+Functions, not module constants — importing this module never touches jax
+device state (smoke tests must keep seeing 1 CPU device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1, n_pod: int = 0):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    if n_pod:
+        return jax.make_mesh((n_pod, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline model (per chip).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (~3 usable links per axis)
+DCN_BW = 25e9                     # B/s per host-ish (cross-pod; coarse)
+VMEM_BYTES = 128 * 2 ** 20

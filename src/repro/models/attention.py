@@ -1,0 +1,473 @@
+"""Attention: GQA / MLA / cross-attention with blocked (flash) softmax.
+
+Three execution modes per layer:
+
+* ``train`` / ``prefill``  — full-sequence blocked attention
+  (:func:`blocked_attention`): online-softmax over KV tiles, O(S·block)
+  activation memory, never materialises the (S×S) score matrix.  With
+  ``prune_causal=True`` the query-tile loop is unrolled and each tile only
+  visits KV tiles up to the diagonal — halving attention FLOPs (a §Perf
+  hillclimb lever; the masked variant is the simple baseline).
+* ``decode`` — single new token against a KV cache
+  (:func:`decode_attention`), with the cache length masked by ``pos``.
+
+MLA (DeepSeek-V2) caches the *compressed* ``c_kv`` + rope key and uses the
+absorbed-matrix formulation at decode time: attention runs in the
+``kv_lora_rank`` space, so the cache is ``r + d_rope = 576`` floats/token
+instead of ``2·H·d_head``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import apply_rope, const_param, make_param, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# blocked attention (pure-JAX flash) — also the oracle for kernels/flash
+# ---------------------------------------------------------------------------
+
+
+def _attend_tiles(q, k, v, qpos, kpos, causal, scale, kv_len):
+    """One (q-tile × kv-tile) online-softmax step. q:(B,qb,Hkv,G,D) k/v:(B,kb,Hkv,D)."""
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    valid = jnp.broadcast_to(kpos[None, :] < kv_len, (qpos.shape[0], kpos.shape[0]))
+    if causal:
+        valid = valid & (kpos[None, :] <= qpos[:, None])
+    s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+    return s
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 512,
+    q_offset: int = 0,
+    prune_causal: bool = False,
+    unroll: bool = False,
+) -> jax.Array:
+    """Flash-style attention.  q: (B,Sq,H,D); k/v: (B,Skv,Hkv,D); GQA via H=Hkv·G.
+
+    Returns (B,Sq,H,D) in q.dtype.  Softmax statistics in f32.
+    ``unroll`` inlines every tile in the HLO (dry-run cost calibration).
+    """
+    B, Sq0, H, D = q.shape
+    _, Skv0, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = k.shape[-1] ** -0.5
+    qb = min(q_block, Sq0)
+    kb = min(kv_block, Skv0)
+    # Pad ragged sequence lengths up to tile multiples; padded KV positions
+    # are masked out via kv_len, padded Q rows are sliced off the output.
+    Sq = -(-Sq0 // qb) * qb
+    Skv = -(-Skv0 // kb) * kb
+    if Sq != Sq0:
+        q = jnp.pad(q, ((0, 0), (0, Sq - Sq0), (0, 0), (0, 0)))
+    if Skv != Skv0:
+        k = jnp.pad(k, ((0, 0), (0, Skv - Skv0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skv - Skv0), (0, 0), (0, 0)))
+    Nq, Nk = Sq // qb, Skv // kb
+
+    q_r = q.reshape(B, Nq, qb, Hkv, G, D)
+    k_r = k.reshape(B, Nk, kb, Hkv, D)
+    v_r = v.reshape(B, Nk, kb, Hkv, Dv)
+
+    def kv_step(q_tile, qpos, carry, k_t, v_t, kj):
+        m, l, acc = carry
+        kpos = kj * kb + jnp.arange(kb)
+        s = _attend_tiles(q_tile, k_t, v_t, qpos, kpos, causal, scale, Skv0)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(v_t.dtype), v_t,
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    def init_carry():
+        return (
+            jnp.full((B, qb, Hkv, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, qb, Hkv, G), jnp.float32),
+            jnp.zeros((B, qb, Hkv, G, Dv), jnp.float32),
+        )
+
+    def one_q_tile(qi: jax.Array, q_tile: jax.Array, n_kv: int):
+        qpos = q_offset + qi * qb + jnp.arange(qb)
+        if unroll:
+            carry = init_carry()
+            for j in range(n_kv):
+                carry = kv_step(q_tile, qpos, carry, k_r[:, j], v_r[:, j],
+                                jnp.asarray(j))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                lambda c, inp: (kv_step(q_tile, qpos, c, *inp), None),
+                init_carry(),
+                (
+                    k_r[:, :n_kv].swapaxes(0, 1),
+                    v_r[:, :n_kv].swapaxes(0, 1),
+                    jnp.arange(n_kv),
+                ),
+            )
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    if (prune_causal or unroll) and causal and q_offset == 0 and Sq == Skv and qb == kb:
+        # Unrolled diagonal walk: q tile i sees kv tiles [0..i] only — exact
+        # causal FLOPs (the masked variant below computes the full rectangle).
+        outs = [one_q_tile(jnp.asarray(i), q_r[:, i], i + 1) for i in range(Nq)]
+        out = jnp.stack(outs, axis=1)
+    elif unroll:
+        outs = [one_q_tile(jnp.asarray(i), q_r[:, i], Nk) for i in range(Nq)]
+        out = jnp.stack(outs, axis=1)
+    else:
+        out = jax.lax.map(
+            lambda args: one_q_tile(args[0], args[1], Nk),
+            (jnp.arange(Nq), q_r.swapaxes(0, 1)),
+        )
+        out = out.swapaxes(0, 1)
+    return out.reshape(B, Sq, H, Dv)[:, :Sq0]
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, length: jax.Array
+) -> jax.Array:
+    """One-token attention over a (possibly partially-filled) KV cache.
+
+    q: (B,1,H,D); caches: (B,Smax,Hkv,D); length: () — #valid cache slots.
+    """
+    B, _, H, D = q.shape
+    _, Smax, Hkv, Dv = v_cache.shape
+    G = H // Hkv
+    scale = k_cache.shape[-1] ** -0.5
+    q_r = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", q_r, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    mask = jnp.arange(Smax)[None, None, None, :] < length
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key: jax.Array, cfg) -> Dict[str, Any]:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 8)
+    if cfg.flat_attn_proj:
+        # Flattened (H·Dh) projections: TP-shards evenly when H doesn't
+        # divide the model axis (40/56-head archs on a 16-way mesh); GSPMD
+        # re-partitions the reshaped per-head view as needed.
+        p = {
+            "wq": make_param(ks[0], (d, h * dh), ("embed", "attn_flat"), cfg.np_dtype),
+            "wk": make_param(ks[1], (d, hkv * dh), ("embed", "attn_flat"), cfg.np_dtype),
+            "wv": make_param(ks[2], (d, hkv * dh), ("embed", "attn_flat"), cfg.np_dtype),
+            "wo": make_param(ks[3], (h * dh, d), ("attn_flat", "embed"), cfg.np_dtype),
+        }
+        if cfg.attn_bias:
+            p["bq"] = const_param((h * dh,), ("attn_flat",), cfg.np_dtype, 0.0)
+            p["bk"] = const_param((hkv * dh,), ("attn_flat",), cfg.np_dtype, 0.0)
+            p["bv"] = const_param((hkv * dh,), ("attn_flat",), cfg.np_dtype, 0.0)
+    else:
+        p = {
+            "wq": make_param(ks[0], (d, h, dh), ("embed", "heads", "head_dim"), cfg.np_dtype),
+            "wk": make_param(ks[1], (d, hkv, dh), ("embed", "kv_heads", "head_dim"), cfg.np_dtype),
+            "wv": make_param(ks[2], (d, hkv, dh), ("embed", "kv_heads", "head_dim"), cfg.np_dtype),
+            "wo": make_param(ks[3], (h, dh, d), ("heads", "head_dim", "embed"), cfg.np_dtype),
+        }
+        if cfg.attn_bias:
+            p["bq"] = const_param((h, dh), ("heads", "head_dim"), cfg.np_dtype, 0.0)
+            p["bk"] = const_param((hkv, dh), ("kv_heads", "head_dim"), cfg.np_dtype, 0.0)
+            p["bv"] = const_param((hkv, dh), ("kv_heads", "head_dim"), cfg.np_dtype, 0.0)
+    if cfg.qk_norm:
+        p["q_norm"] = const_param((dh,), ("norm",), cfg.np_dtype, 1.0)
+        p["k_norm"] = const_param((dh,), ("norm",), cfg.np_dtype, 1.0)
+    return p
+
+
+def _proj_heads(x: jax.Array, w: jax.Array, b, n_heads: int, d_head: int):
+    if w.ndim == 2:   # flat projection
+        y = x @ w
+        if b is not None:
+            y = y + b
+        return y.reshape(*x.shape[:-1], n_heads, d_head)
+    y = jnp.einsum("bsd,dhk->bshk", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _qkv(p: Dict, x: jax.Array, cfg, positions: jax.Array):
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = _proj_heads(x, p["wq"], p.get("bq"), h, dh)
+    k = _proj_heads(x, p["wk"], p.get("bk"), hkv, dh)
+    v = _proj_heads(x, p["wv"], p.get("bv"), hkv, dh)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if not cfg.flat_attn_proj:
+        q = shard(q, "batch", "act_seq", "act_heads", None)
+        k = shard(k, "batch", "act_seq", "act_kv_heads", None)
+        v = shard(v, "batch", "act_seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def gqa_forward(
+    p: Dict,
+    x: jax.Array,
+    cfg,
+    *,
+    causal: bool = True,
+    cache: Optional[Dict] = None,
+    pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Self-attention.  With ``cache`` → decode mode (x is (B,1,D), pos is ())."""
+    B, S, _ = x.shape
+    if cache is None:
+        positions = jnp.arange(S)[None, :]
+        q, k, v = _qkv(p, x, cfg, positions)
+        out = blocked_attention(
+            q, k, v, causal=causal,
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+            prune_causal=cfg.prune_causal, unroll=cfg.unroll_loops,
+        )
+        new_cache = None
+        if cfg.return_cache:
+            new_cache = {"k": k, "v": v}
+    else:
+        positions = pos[None, None] if pos.ndim == 0 else pos[:, None]
+        q, k, v = _qkv(p, x, cfg, positions)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, axis=1
+        )
+        k_cache = shard(k_cache, "batch", "kv_cache_seq", "act_kv_heads", None)
+        v_cache = shard(v_cache, "batch", "kv_cache_seq", "act_kv_heads", None)
+        out = decode_attention(q, k_cache, v_cache, pos + 1)
+        new_cache = {"k": k_cache, "v": v_cache}
+    if p["wo"].ndim == 2:  # flat output projection
+        Bq, Sq = out.shape[:2]
+        y = out.reshape(Bq, Sq, -1) @ p["wo"]
+    else:
+        out = shard(out, "batch", "act_seq", "act_heads", None)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(y, "batch", "act_seq", "act_embed"), new_cache
+
+
+def gqa_cache_spec(cfg, batch: int, max_len: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jax.ShapeDtypeStruct(shp, cfg.np_dtype),
+        "v": jax.ShapeDtypeStruct(shp, cfg.np_dtype),
+    }
+
+
+GQA_CACHE_AXES = {
+    "k": ("batch", "kv_cache_seq", "act_kv_heads", None),
+    "v": ("batch", "kv_cache_seq", "act_kv_heads", None),
+}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM media layers; enc-dec decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attn(key: jax.Array, cfg) -> Dict[str, Any]:
+    return init_gqa(key, cfg)  # same projection geometry; memory supplies K/V
+
+
+def cross_attn_forward(
+    p: Dict,
+    x: jax.Array,
+    memory: Optional[jax.Array],
+    cfg,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Cross-attention: queries from x, keys/values from ``memory``.
+
+    At decode time the projected memory K/V are precomputed once (prefill)
+    and passed in via ``cache`` — memory may then be None.
+    """
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if cache is None:
+        k = _proj_heads(memory, p["wk"], p.get("bk"), hkv, dh)
+        v = _proj_heads(memory, p["wv"], p.get("bv"), hkv, dh)
+    else:
+        k, v = cache["mk"], cache["mv"]
+    q = _proj_heads(x, p["wq"], p.get("bq"), h, dh)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps) if cache is None else k
+    if not cfg.flat_attn_proj:
+        q = shard(q, "batch", "act_seq", "act_heads", None)
+    out = blocked_attention(
+        q, k, v, causal=False,
+        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+        unroll=cfg.unroll_loops,
+    )
+    if p["wo"].ndim == 2:
+        Bq, Sq = out.shape[:2]
+        y = out.reshape(Bq, Sq, -1) @ p["wo"]
+    else:
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    new_cache = {"mk": k, "mv": v} if (cache is not None or cfg.return_cache) else None
+    return shard(y, "batch", "act_seq", "act_embed"), new_cache
+
+
+def cross_cache_spec(cfg, batch: int, mem_len: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    shp = (batch, mem_len, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "mk": jax.ShapeDtypeStruct(shp, cfg.np_dtype),
+        "mv": jax.ShapeDtypeStruct(shp, cfg.np_dtype),
+    }
+
+
+CROSS_CACHE_AXES = {
+    "mk": ("batch", None, "act_kv_heads", None),
+    "mv": ("batch", None, "act_kv_heads", None),
+}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key: jax.Array, cfg) -> Dict[str, Any]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq": make_param(ks[0], (d, h, qd), ("embed", "heads", "head_dim"), cfg.np_dtype),
+        "w_dkv": make_param(
+            ks[1], (d, m.kv_lora_rank + m.qk_rope_dim), ("embed", "kv_lora"), cfg.np_dtype
+        ),
+        "kv_norm": const_param((m.kv_lora_rank,), ("norm",), cfg.np_dtype, 1.0),
+        "w_uk": make_param(
+            ks[2], (m.kv_lora_rank, h, m.qk_nope_dim), ("kv_lora", "heads", "head_dim"),
+            cfg.np_dtype,
+        ),
+        "w_uv": make_param(
+            ks[3], (m.kv_lora_rank, h, m.v_head_dim), ("kv_lora", "heads", "head_dim"),
+            cfg.np_dtype,
+        ),
+        "wo": make_param(ks[4], (h, m.v_head_dim, d), ("heads", "head_dim", "embed"), cfg.np_dtype),
+    }
+
+
+def _mla_compress(p, x, cfg, positions):
+    m = cfg.mla
+    ckv_pe = x @ p["w_dkv"]
+    c_kv, k_pe = ckv_pe[..., : m.kv_lora_rank], ckv_pe[..., m.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_pe
+
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_pe = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_forward(
+    p: Dict,
+    x: jax.Array,
+    cfg,
+    *,
+    cache: Optional[Dict] = None,
+    pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    if cache is None:
+        positions = jnp.arange(S)[None, :]
+        q_nope, q_pe = _mla_q(p, x, cfg, positions)
+        c_kv, k_pe = _mla_compress(p, x, cfg, positions)
+        # Prefill/train: decompress to per-head K/V, run flash (MHA, d=192).
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (*k_nope.shape[:3], m.qk_rope_dim))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        q = shard(q, "batch", "act_seq", "act_heads", None)
+        k = shard(k, "batch", "act_seq", "act_heads", None)
+        out = blocked_attention(
+            q, k, v, causal=True,
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+            prune_causal=cfg.prune_causal, unroll=cfg.unroll_loops,
+        )
+        new_cache = None
+        if cfg.return_cache:
+            new_cache = {"c_kv": c_kv, "k_pe": k_pe}
+    else:
+        # Absorbed decode: attention in the r-dimensional latent space.
+        positions = pos[None, None]
+        q_nope, q_pe = _mla_q(p, x, cfg, positions)
+        c_kv_new, k_pe_new = _mla_compress(p, x, cfg, positions)
+        c_kv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1
+        )
+        k_pe = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_pe"], k_pe_new.astype(cache["k_pe"].dtype), pos, axis=1
+        )
+        scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+        q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])      # absorb W_uk
+        s = (
+            jnp.einsum("bshr,bkr->bshk", q_c, c_kv, preferred_element_type=jnp.float32)
+            + jnp.einsum("bshk,bmk->bshm", q_pe, k_pe, preferred_element_type=jnp.float32)
+        ) * scale
+        mask = jnp.arange(c_kv.shape[1])[None, None, None, :] < pos + 1
+        s = jnp.where(mask, s, NEG_INF)
+        pattn = jax.nn.softmax(s, axis=-1)
+        o_c = jnp.einsum("bshk,bkr->bshr", pattn.astype(c_kv.dtype), c_kv)
+        out = jnp.einsum("bshr,rhk->bshk", o_c, p["w_uv"])         # absorb W_uv
+        new_cache = {"c_kv": c_kv, "k_pe": k_pe}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(y, "batch", "act_seq", "act_embed"), new_cache
+
+
+def mla_cache_spec(cfg, batch: int, max_len: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    m = cfg.mla
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), cfg.np_dtype),
+        "k_pe": jax.ShapeDtypeStruct((batch, max_len, m.qk_rope_dim), cfg.np_dtype),
+    }
+
+
+MLA_CACHE_AXES = {
+    "c_kv": ("batch", "kv_cache_seq", None),
+    "k_pe": ("batch", "kv_cache_seq", None),
+}

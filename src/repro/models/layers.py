@@ -1,0 +1,164 @@
+"""Shared transformer building blocks (pure JAX, no flax).
+
+Parameters are plain dicts; every init returns ``(params, specs)`` where
+``specs`` mirrors the params tree with a tuple of *logical axis names* per
+array dimension (resolved to mesh axes by :mod:`repro.distributed.sharding`).
+
+Numerics policy: parameters and activations in ``cfg.dtype`` (bf16 by
+default); norms, softmax, rope and the loss in f32.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ParamsAndSpecs = Tuple[Dict[str, Any], Dict[str, Any]]
+
+_ABS = threading.local()
+
+
+@contextlib.contextmanager
+def abstract_init():
+    """Inside this context every param helper returns ShapeDtypeStructs —
+    zero-FLOP, zero-memory init used by the multi-pod dry-run."""
+    prev = getattr(_ABS, "on", False)
+    _ABS.on = True
+    try:
+        yield
+    finally:
+        _ABS.on = prev
+
+
+def is_abstract() -> bool:
+    return getattr(_ABS, "on", False)
+
+
+def make_param(
+    key: jax.Array,
+    shape: Tuple[int, ...],
+    axes: Tuple[Optional[str], ...],
+    dtype,
+    scale: Optional[float] = None,
+) -> Tuple[jax.Array, Tuple[Optional[str], ...]]:
+    assert len(shape) == len(axes), (shape, axes)
+    if is_abstract():
+        return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)), axes
+    if scale is None:  # fan-in scaling on the first dim by default
+        scale = shape[0] ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype), axes
+
+
+def const_param(
+    shape: Tuple[int, ...],
+    axes: Tuple[Optional[str], ...],
+    dtype,
+    fill: Callable[[], jax.Array] | float = 1.0,
+) -> Tuple[jax.Array, Tuple[Optional[str], ...]]:
+    """Constant / custom-initialised parameter respecting abstract mode."""
+    if is_abstract():
+        return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)), axes
+    if callable(fill):
+        return fill().astype(dtype), axes
+    return jnp.full(shape, fill, dtype), axes
+
+
+def split_tree(tree: Any) -> ParamsAndSpecs:
+    """Split a tree whose leaves are (array, axes) into (params, specs)."""
+    is_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+    params = jax.tree.map(lambda l: l[0], tree, is_leaf=is_leaf)
+    specs = jax.tree.map(lambda l: l[1], tree, is_leaf=is_leaf)
+    return params, specs
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def init_rms_norm(dim: int, dtype) -> Tuple[jax.Array, Tuple[Optional[str], ...]]:
+    return const_param((dim,), ("norm",), dtype, 1.0)
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, llama-style split-half layout.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S).
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                             # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., :, None, :]                   # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+           b: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
+    g = x @ w_gate
+    u = x @ w_up
+    if b is not None:
+        g = g + b["gate"]
+        u = u + b["up"]
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ w_down
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": make_param(k1, (d_model, d_ff), ("embed", "mlp"), dtype),
+        "w_up": make_param(k2, (d_model, d_ff), ("embed", "mlp"), dtype),
+        "w_down": make_param(k3, (d_ff, d_model), ("mlp", "embed"), dtype),
+    }
+
+
+def mlp_forward(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    from repro.distributed.sharding import shard
+
+    h = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype) * (
+        x @ p["w_up"]
+    )
+    h = shard(h, "batch", "act_seq", "act_mlp")
+    return h @ p["w_down"]
+
+
+def init_embedding(key: jax.Array, vocab: int, d_model: int, dtype):
+    return make_param(key, (vocab, d_model), ("vocab", "embed"), dtype, scale=0.02)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits_from_embedding(table: jax.Array, x: jax.Array) -> jax.Array:
+    """Tied readout: x (B,S,D) @ table^T → (B,S,V)."""
+    return x @ table.T
+
+
+def cross_entropy(
+    logits: jax.Array, targets: jax.Array, mask: Optional[jax.Array] = None
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Token-mean cross entropy in f32; returns (loss, metrics)."""
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((jnp.argmax(logits32, -1) == targets) * mask).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}

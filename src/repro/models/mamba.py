@@ -1,0 +1,278 @@
+"""Mamba2 — SSD (state-space duality) layer, chunked for the MXU.
+
+Training/prefill uses the chunked SSD algorithm (Dao & Gu, 2024): the
+sequence is tiled into chunks of ``chunk`` steps; within-chunk interactions
+are a masked (decay-weighted) attention-like batched matmul, across-chunk
+interactions ride a tiny ``lax.scan`` over per-chunk states.  Everything
+heavy is an einsum → MXU-friendly, no per-step recurrence.
+
+Decode holds the recurrent state explicitly: ``state ← exp(dt·A)·state +
+dt·B·x`` per token — O(1) in sequence length, which is what makes the
+``long_500k`` shape tractable for the SSM/hybrid architectures.
+
+Sharding: ``d_inner`` (and the SSD heads it decomposes into) over ``model``;
+B/C projections are per-group (n_groups=1) and replicated — they are
+``d_state``-sized, tiny next to ``d_inner``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import const_param, make_param, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 64
+    compute_dtype: str = "float32"  # §Perf lever: bf16 for the O(Q²) SSD
+                                    # intermediates (decay/score tensors)
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+def init_mamba(key: jax.Array, cfg) -> Dict[str, Any]:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    gn = 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+
+    def dt_init():
+        dt0 = jnp.exp(
+            jax.random.uniform(ks[6], (h,), jnp.float32)
+            * (jnp.log(0.1) - jnp.log(0.001))
+            + jnp.log(0.001)
+        )
+        return dt0 + jnp.log(-jnp.expm1(-dt0))          # softplus^-1
+
+    return {
+        "w_x": make_param(ks[0], (d, di), ("embed", "ssm_inner"), cfg.np_dtype),
+        "w_z": make_param(ks[1], (d, di), ("embed", "ssm_inner"), cfg.np_dtype),
+        "w_bc": make_param(ks[2], (d, gn), ("embed", None), cfg.np_dtype),
+        "w_dt": make_param(ks[3], (d, h), ("embed", "ssm_heads"), cfg.np_dtype),
+        "dt_bias": const_param((h,), ("ssm_heads",), jnp.float32, dt_init),
+        "a_log": const_param((h,), ("ssm_heads",), jnp.float32, 0.0),
+        "d_skip": const_param((h,), ("ssm_heads",), jnp.float32, 1.0),
+        "conv_x": make_param(ks[4], (s.d_conv, di), (None, "ssm_inner"), cfg.np_dtype,
+                             scale=s.d_conv ** -0.5),
+        "conv_bc": make_param(ks[5], (s.d_conv, gn), (None, None), cfg.np_dtype,
+                              scale=s.d_conv ** -0.5),
+        "norm": const_param((di,), ("norm",), cfg.np_dtype, 1.0),
+        "w_out": make_param(ks[7], (di, d), ("ssm_inner", "embed"), cfg.np_dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv along seq.  x: (B,S,C); w: (K,C).
+
+    Returns (y, new_tail) where tail carries the last K-1 inputs for decode.
+    """
+    K = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), xp[:, -(K - 1):, :]
+
+
+def _ssd_chunked(
+    xh: jax.Array,    # (B,S,H,P)
+    dt: jax.Array,    # (B,S,H)   f32, post-softplus
+    a: jax.Array,     # (H,)      f32, negative
+    B_: jax.Array,    # (B,S,G,N)
+    C_: jax.Array,    # (B,S,G,N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,   # (B,H,P,N)
+    compute_dtype=jnp.float32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S0, H, Pd = xh.shape
+    G, N = B_.shape[2], B_.shape[3]
+    # Ragged lengths: pad with dt=0 steps (decay 1, increment 0 — state
+    # passes through unchanged); padded outputs are sliced off below.
+    S = -(-S0 // chunk) * chunk
+    if S != S0:
+        pad = ((0, 0), (0, S - S0), (0, 0), (0, 0))
+        xh = jnp.pad(xh, pad)
+        dt = jnp.pad(dt, ((0, 0), (0, S - S0), (0, 0)))
+        B_ = jnp.pad(B_, pad)
+        C_ = jnp.pad(C_, pad)
+    nc = S // chunk
+    hg = H // G                                        # heads per group
+
+    r = lambda t, extra: t.reshape(B, nc, chunk, *extra)
+    xh_c = r(xh, (H, Pd))
+    dt_c = r(dt, (H,)).astype(jnp.float32)
+    b_c = r(B_, (G, N))
+    c_c = r(C_, (G, N))
+
+    da = dt_c * a                                       # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                        # within-chunk cumsum
+    # Within-chunk decay matrix L[i,j] = exp(cum_i - cum_j), lower-triangular.
+    # The O(Q²) tensors may run in bf16 (§Perf lever) — the cross-chunk
+    # recurrence below stays f32 for stability.
+    cdt = jnp.dtype(compute_dtype)
+    cum_c = cum.astype(cdt)              # cast BEFORE the O(Q²) broadcast,
+    seg = cum_c[:, :, :, None, :] - cum_c[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), jnp.zeros((), cdt))
+
+    # Diagonal (within-chunk) term: scores over the group, decayed per head.
+    scores = jnp.einsum("bcign,bcjgn->bcijg", c_c.astype(cdt), b_c.astype(cdt),
+                        preferred_element_type=cdt)
+    scores_h = scores[..., :, None].repeat(hg, axis=-1).reshape(
+        B, nc, chunk, chunk, H
+    )
+    w_diag = scores_h * L * dt_c[:, :, None, :, :].astype(cdt)  # (B,nc,Q,Q,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w_diag, xh_c.astype(cdt),
+                        preferred_element_type=jnp.float32)
+
+    # Per-chunk input state: decay-to-end weighted sum of B x^T.
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,Q,H)
+    b_h = b_c[..., :, None, :].repeat(hg, axis=-2).reshape(B, nc, chunk, H, N)
+    bx = jnp.einsum(
+        "bcjhn,bcjhp->bchpn",
+        b_h.astype(jnp.float32) * (dt_c * decay_end)[..., None],
+        xh_c.astype(jnp.float32),
+    )
+
+    # Inter-chunk recurrence over per-chunk states — an associative
+    # (decay, increment) scan: s_c = d_c · s_{c-1} + b_c.  associative_scan
+    # lowers to a log-depth vectorized program (no while loop): better for
+    # the TPU schedule and fully visible to HLO cost analysis.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (B,nc,H)
+
+    def combine(a, b):
+        (da, sa), (db, sb) = a, b
+        return da * db, sa * db + sb
+
+    d_full = chunk_decay[:, :, :, None, None]           # (B,nc,H,1,1)
+    dd, ss = jax.lax.associative_scan(combine, (d_full, bx), axis=1)
+    s0 = (
+        jnp.zeros((B, H, Pd, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    # states AFTER chunk c (inclusive); previous-state view shifts by one.
+    states_inc = ss + dd * s0[:, None]
+    final = states_inc[:, -1]
+    prev_states = jnp.concatenate(
+        [s0[:, None], states_inc[:, :-1]], axis=1
+    )                                                   # (B,nc,H,P,N)
+
+    # Off-diagonal term: contribution of previous chunks' states.
+    c_h = c_c[..., :, None, :].repeat(hg, axis=-2).reshape(B, nc, chunk, H, N)
+    y_off = jnp.einsum(
+        "bcihn,bchpn->bcihp",
+        c_h.astype(jnp.float32) * jnp.exp(cum)[..., None],
+        prev_states,
+    )
+    y = (y_diag + y_off).reshape(B, S, H, Pd)[:, :S0]
+    return y, final
+
+
+def mamba_forward(
+    p: Dict,
+    x: jax.Array,
+    cfg,
+    *,
+    cache: Optional[Dict] = None,
+    pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Mamba2 block.  Without cache: chunked SSD over the whole sequence.
+    With cache: one-token recurrent update (decode)."""
+    s: SSMConfig = cfg.ssm
+    B, S, D = x.shape
+    di = s.d_inner(D)
+    H = s.n_heads(D)
+    G, N, Pd = s.n_groups, s.d_state, s.head_dim
+
+    xz = x @ p["w_x"]
+    z = x @ p["w_z"]
+    bc_raw = x @ p["w_bc"]
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )                                                   # (B,S,H)
+    a = -jnp.exp(p["a_log"])                            # (H,) negative
+
+    xz = shard(xz, "batch", "act_seq", "act_ssm_inner")
+    z = shard(z, "batch", "act_seq", "act_ssm_inner")
+
+    if cache is None:
+        xc, tail_x = _causal_conv(xz, p["conv_x"])
+        bc, tail_bc = _causal_conv(bc_raw, p["conv_bc"])
+        B_ = bc[..., : G * N].reshape(B, S, G, N)
+        C_ = bc[..., G * N :].reshape(B, S, G, N)
+        xh = xc.reshape(B, S, H, Pd)
+        xh = shard(xh, "batch", "act_seq", "act_ssm_heads", None)
+        y, state = _ssd_chunked(xh, dt, a, B_, C_, s.chunk,
+                                compute_dtype=s.compute_dtype)
+        y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        new_cache = None
+        if cfg.return_cache:
+            new_cache = {"conv_x": tail_x, "conv_bc": tail_bc,
+                         "state": state.astype(jnp.float32)}
+    else:
+        xc, tail_x = _causal_conv(xz, p["conv_x"], cache["conv_x"])
+        bc, tail_bc = _causal_conv(bc_raw, p["conv_bc"], cache["conv_bc"])
+        B_ = bc[..., : G * N].reshape(B, S, G, N)
+        C_ = bc[..., G * N :].reshape(B, S, G, N)
+        xh = xc.reshape(B, S, H, Pd)
+        # One-step recurrence (S == 1).
+        da = jnp.exp(dt[:, 0] * a)                      # (B,H)
+        b_h = B_[:, 0, :, None, :].repeat(H // G, axis=-2).reshape(B, H, N)
+        c_h = C_[:, 0, :, None, :].repeat(H // G, axis=-2).reshape(B, H, N)
+        inc = jnp.einsum(
+            "bhp,bhn->bhpn", (dt[:, 0, :, None] * xh[:, 0].astype(jnp.float32)),
+            b_h.astype(jnp.float32),
+        )
+        state = cache["state"] * da[:, :, None, None] + inc
+        y = jnp.einsum("bhpn,bhn->bhp", state, c_h.astype(jnp.float32))
+        y = (y + p["d_skip"][None, :, None] * xh[:, 0].astype(jnp.float32))[:, None]
+        new_cache = {"conv_x": tail_x, "conv_bc": tail_bc, "state": state}
+
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    y = shard(y, "batch", "act_seq", "act_ssm_inner")
+    out = y @ p["w_out"]
+    return shard(out, "batch", "act_seq", "act_embed"), new_cache
+
+
+def mamba_cache_spec(cfg, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    s: SSMConfig = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    gn = 2 * s.n_groups * s.d_state
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, s.d_conv - 1, di), cfg.np_dtype),
+        "conv_bc": jax.ShapeDtypeStruct((batch, s.d_conv - 1, gn), cfg.np_dtype),
+        "state": jax.ShapeDtypeStruct(
+            (batch, H, s.head_dim, s.d_state), jnp.float32
+        ),
+    }
+
+
+MAMBA_CACHE_AXES = {
+    "conv_x": ("batch", None, "act_ssm_inner"),
+    "conv_bc": ("batch", None, None),
+    "state": ("batch", "act_ssm_heads", None, None),
+}

@@ -1,0 +1,162 @@
+"""Model facade: build(config) → init / train_loss / prefill / decode_step.
+
+Batch contents by family (all produced by :meth:`Model.input_specs`):
+
+* LM families (dense/moe/hybrid/ssm): ``tokens``, ``targets`` (B,S) int32.
+* vlm: + ``media`` (B, n_media_tokens, d_model) — precomputed patch
+  embeddings (the modality frontend is a stub per the assignment).
+* audio (enc-dec): + ``src_embeds`` (B, S_src, d_model) — precomputed frame
+  embeddings; the decoder cross-attends the encoded memory.
+
+Serving:
+* ``prefill(params, batch)`` → (last-token logits, caches)
+* ``decode_step(params, caches, tokens, pos)`` → (logits, new caches) — one
+  new token against a KV/SSM cache (the ``decode_*``/``long_*`` shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import transformer as tf
+from repro.models.layers import cross_entropy, embed_lookup, rms_norm
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+
+    def __post_init__(self):
+        self.plan = tf.layer_plan(self.cfg)
+        self.enc_plan = tf.encoder_plan(self.cfg)
+
+    # ------------------------------------------------------------- init
+    def init(self, key: jax.Array):
+        params, _ = tf.init_model(key, self.cfg)
+        return params
+
+    def abstract(self):
+        """(param ShapeDtypeStructs, logical-axes specs) — for the dry-run."""
+        return tf.abstract_model(self.cfg)
+
+    def param_specs(self):
+        return self.abstract()[1]
+
+    # ------------------------------------------------------------- helpers
+    def _memory(self, params, batch, cfg) -> Optional[jax.Array]:
+        if cfg.family == "vlm":
+            return shard(batch["media"], "batch", None, "act_embed")
+        if cfg.family == "audio":
+            m = shard(batch["src_embeds"], "batch", "act_seq", "act_embed")
+            m, _, _ = tf.stack_forward(
+                params["encoder"], m, cfg.replace(return_cache=False), self.enc_plan
+            )
+            return rms_norm(m, params["enc_ln_f"], cfg.norm_eps)
+        return None
+
+    def _logits(self, params, x, cfg) -> jax.Array:
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["lm_head"]
+        return shard(logits, "batch", "act_seq", "act_vocab")
+
+    # ------------------------------------------------------------- train
+    def train_loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg.replace(return_cache=False)
+        x = embed_lookup(params["embed"], batch["tokens"])
+        x = shard(x, "batch", "act_seq", "act_embed")
+        memory = self._memory(params, batch, cfg)
+        x, _, aux = tf.stack_forward(params["layers"], x, cfg, self.plan, memory=memory)
+        logits = self._logits(params, x, cfg)
+        loss, metrics = cross_entropy(logits, batch["targets"])
+        metrics["aux_loss"] = aux
+        return loss + aux, metrics
+
+    # ------------------------------------------------------------- serve
+    def prefill(self, params, batch) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg.replace(return_cache=True)
+        x = embed_lookup(params["embed"], batch["tokens"])
+        x = shard(x, "batch", "act_seq", "act_embed")
+        memory = self._memory(params, batch, cfg)
+        x, caches, _ = tf.stack_forward(params["layers"], x, cfg, self.plan, memory=memory)
+        logits = self._logits(params, x[:, -1:, :], cfg)
+        return logits, caches
+
+    def decode_step(self, params, caches, tokens, pos) -> Tuple[jax.Array, Dict]:
+        """tokens: (B,1) int32; pos: () int32 — write position in the cache."""
+        cfg = self.cfg.replace(return_cache=False)
+        x = embed_lookup(params["embed"], tokens)
+        x = shard(x, "batch", "act_seq", "act_embed")
+        # Cross-attn memory K/V live inside the caches after prefill.
+        x, new_caches, _ = tf.stack_forward(
+            params["layers"], x, cfg, self.plan, memory=None, caches=caches, pos=pos
+        )
+        logits = self._logits(params, x, cfg)
+        return logits, new_caches
+
+    # ------------------------------------------------------------- specs
+    def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of a Shape."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "targets": jax.ShapeDtypeStruct((B, S), i32),
+            }
+            if cfg.family == "vlm":
+                specs["media"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_media_tokens, cfg.d_model), cfg.np_dtype
+                )
+            if cfg.family == "audio":
+                specs["src_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.np_dtype)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "vlm":
+                specs["media"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_media_tokens, cfg.d_model), cfg.np_dtype
+                )
+            if cfg.family == "audio":
+                # prefill_32k for enc-dec = encode an S-frame source, then
+                # prime the decoder with a BOS token.
+                specs = {
+                    "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                    "src_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.np_dtype),
+                }
+            return specs
+        if shape.kind == "decode":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32),
+            }
+        raise ValueError(shape.kind)
+
+    def cache_specs(self, batch: int, max_len: int):
+        """(SDS tree, logical-axes tree) for the decode-shape dry-runs."""
+        cfg = self.cfg
+        mem_len = cfg.n_media_tokens if cfg.family == "vlm" else (
+            cfg.enc_seq if cfg.family == "audio" else 0
+        )
+        return tf.stack_cache_specs(cfg, self.plan, batch, max_len, mem_len)
+
+    def init_cache(self, batch: int, max_len: int):
+        """Zero-initialised cache (for runnable examples, not the dry-run)."""
+        spec, _ = self.cache_specs(batch, max_len)
+        return jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            spec,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+
+def build(cfg) -> Model:
+    return Model(cfg)

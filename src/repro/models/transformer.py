@@ -1,0 +1,418 @@
+"""Layer plans and stacks — one engine for all ten assigned architectures.
+
+A stack is described by a :class:`Plan`: an unrolled ``prefix`` (e.g.
+DeepSeek-V2's dense first layer) plus a repeated ``period`` of layers that
+runs under ``lax.scan`` (scan-over-layers keeps the HLO a single-layer
+program regardless of depth — essential for 100-layer dry-run compiles).
+Heterogeneous schedules (Jamba's mamba:attn 7:1 interleave with MoE every
+2nd layer; the VLM's cross-attention every 5th layer) are expressed as a
+multi-layer period, so the scanned unit is always structurally homogeneous.
+
+Layer kinds are ``(mixer, ffn)`` pairs:
+  mixer ∈ {"attn", "attn_enc", "mamba", "xattn", "attn_xattn"}
+  ffn   ∈ {"dense", "moe", "none"}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    abstract_init,
+    init_mlp,
+    init_rms_norm,
+    is_abstract,
+    make_param,
+    mlp_forward,
+    rms_norm,
+    split_tree,
+)
+
+Kind = Tuple[str, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    prefix: Tuple[Kind, ...]
+    period: Tuple[Kind, ...]
+    repeats: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.prefix) + len(self.period) * self.repeats
+
+
+def layer_plan(cfg) -> Plan:
+    plan = _layer_plan(cfg)
+    if not cfg.scan_layers:
+        layers = plan.prefix + plan.period * plan.repeats
+        return Plan(tuple(layers), (), 0)
+    return plan
+
+
+def _layer_plan(cfg) -> Plan:
+    if cfg.family == "ssm":
+        return Plan((), (("mamba", "none"),), cfg.n_layers)
+    if cfg.family == "hybrid":
+        per = cfg.attn_every
+        assert cfg.n_layers % per == 0
+        period = []
+        for i in range(per):
+            mixer = "attn" if i == cfg.attn_offset else "mamba"
+            ffn = "dense"
+            if cfg.moe is not None and i % cfg.moe.moe_every == cfg.moe.moe_every - 1:
+                ffn = "moe"
+            period.append((mixer, ffn))
+        return Plan((), tuple(period), cfg.n_layers // per)
+    if cfg.family == "vlm":
+        per = cfg.cross_attn_every
+        assert cfg.n_layers % per == 0
+        period = [("xattn", "dense")] + [("attn", "dense")] * (per - 1)
+        return Plan((), tuple(period), cfg.n_layers // per)
+    if cfg.family == "moe":
+        if cfg.moe.first_dense:
+            return Plan((("attn", "dense"),), (("attn", "moe"),), cfg.n_layers - 1)
+        return Plan((), (("attn", "moe"),), cfg.n_layers)
+    if cfg.family == "audio":
+        return Plan((), (("attn_xattn", "dense"),), cfg.n_layers)
+    return Plan((), (("attn", "dense"),), cfg.n_layers)  # dense
+
+
+def encoder_plan(cfg) -> Optional[Plan]:
+    if not cfg.encdec:
+        return None
+    if not cfg.scan_layers:
+        return Plan((("attn_enc", "dense"),) * cfg.n_enc_layers, (), 0)
+    return Plan((), (("attn_enc", "dense"),), cfg.n_enc_layers)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key: jax.Array, cfg, kind: Kind) -> Dict[str, Any]:
+    mixer, ffn = kind
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": init_rms_norm(d, cfg.np_dtype)}
+    if mixer in ("attn", "attn_xattn"):
+        p["mixer"] = (
+            attn.init_mla(ks[0], cfg) if cfg.mla is not None else attn.init_gqa(ks[0], cfg)
+        )
+    elif mixer == "attn_enc":
+        p["mixer"] = attn.init_gqa(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mixer"] = mb.init_mamba(ks[0], cfg)
+    elif mixer == "xattn":
+        p["mixer"] = attn.init_cross_attn(ks[0], cfg)
+    else:
+        raise ValueError(mixer)
+    if mixer == "attn_xattn":
+        p["ln_x"] = init_rms_norm(d, cfg.np_dtype)
+        p["xattn"] = attn.init_cross_attn(ks[1], cfg)
+    if ffn == "dense":
+        p["ln2"] = init_rms_norm(d, cfg.np_dtype)
+        p["ffn"] = init_mlp(ks[2], d, cfg.d_ff, cfg.np_dtype)
+    elif ffn == "moe":
+        p["ln2"] = init_rms_norm(d, cfg.np_dtype)
+        p["ffn"] = moe_mod.init_moe(ks[2], cfg)
+    return p
+
+
+def _stack_layers(trees: List[Any]):
+    """Stack per-repeat param trees along a new leading 'layers' dim."""
+
+    def stk(*leaves):
+        vals = [l[0] for l in leaves]
+        axes = leaves[0][1]
+        if isinstance(vals[0], jax.ShapeDtypeStruct):
+            v = jax.ShapeDtypeStruct((len(vals), *vals[0].shape), vals[0].dtype)
+        else:
+            v = jnp.stack(vals)
+        return (v, ("layers", *axes))
+
+    is_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 and not isinstance(x[0], dict)
+    return jax.tree.map(stk, *trees, is_leaf=is_leaf)
+
+
+def init_stack(key: jax.Array, cfg, plan: Plan) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    keys = jax.random.split(key, max(len(plan.prefix) + plan.repeats, 1))
+    out["prefix"] = [
+        init_layer(keys[i], cfg, kind) for i, kind in enumerate(plan.prefix)
+    ]
+
+    if plan.repeats:
+        n_pref = len(plan.prefix)
+
+        def one_repeat(k):
+            return {
+                str(j): init_layer(jax.random.fold_in(k, j), cfg, kind)
+                for j, kind in enumerate(plan.period)
+            }
+
+        if is_abstract():
+            rep = one_repeat(keys[n_pref])
+            out["scan"] = _stack_layers([rep] * plan.repeats)
+        else:
+            out["scan"] = _stack_layers(
+                [one_repeat(keys[n_pref + r]) for r in range(plan.repeats)]
+            )
+    else:
+        out["scan"] = {}
+    return out
+
+
+def init_model_tree(key: jax.Array, cfg) -> Dict[str, Any]:
+    """Full parameter tree with (value, logical-axes) leaves."""
+    k_emb, k_head, k_dec, k_enc = jax.random.split(key, 4)
+    tree: Dict[str, Any] = {
+        "embed": make_param(k_emb, (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                            cfg.np_dtype, scale=0.02),
+        "ln_f": init_rms_norm(cfg.d_model, cfg.np_dtype),
+        "layers": init_stack(k_dec, cfg, layer_plan(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = make_param(
+            k_head, (cfg.d_model, cfg.vocab), ("embed", "vocab"), cfg.np_dtype
+        )
+    eplan = encoder_plan(cfg)
+    if eplan is not None:
+        tree["encoder"] = init_stack(k_enc, cfg, eplan)
+        tree["enc_ln_f"] = init_rms_norm(cfg.d_model, cfg.np_dtype)
+    return tree
+
+
+def init_model(key: jax.Array, cfg):
+    """Returns (params, specs)."""
+    return split_tree(init_model_tree(key, cfg))
+
+
+def abstract_model(cfg):
+    """(ShapeDtypeStruct tree, specs tree) without touching device memory."""
+    with abstract_init():
+        return init_model(jax.random.key(0), cfg)
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    params, specs = abstract_model(cfg)
+    total = 0
+    for leaf, ax in zip(jax.tree.leaves(params), jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, tuple))):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if active_only and "experts" in ax and cfg.moe is not None:
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def block_forward(
+    kind: Kind,
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg,
+    *,
+    memory: Optional[jax.Array] = None,
+    cache: Optional[Dict] = None,
+    pos: Optional[jax.Array] = None,
+):
+    """One layer.  Returns (x, new_cache | None, aux_loss)."""
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    c_in = cache or {}
+    new_cache: Dict[str, Any] = {}
+
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mixer in ("attn", "attn_xattn"):
+        if cfg.mla is not None:
+            y, c = attn.mla_forward(p["mixer"], h, cfg, cache=c_in.get("mixer"), pos=pos)
+        else:
+            y, c = attn.gqa_forward(
+                p["mixer"], h, cfg, causal=True, cache=c_in.get("mixer"), pos=pos
+            )
+    elif mixer == "attn_enc":
+        y, c = attn.gqa_forward(p["mixer"], h, cfg, causal=False, cache=None, pos=None)
+    elif mixer == "mamba":
+        y, c = mb.mamba_forward(p["mixer"], h, cfg, cache=c_in.get("mixer"), pos=pos)
+    elif mixer == "xattn":
+        y, c = attn.cross_attn_forward(p["mixer"], h, memory, cfg, cache=c_in.get("mixer"))
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    if c is not None:
+        new_cache["mixer"] = c
+
+    if mixer == "attn_xattn":
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        yx, cx = attn.cross_attn_forward(p["xattn"], hx, memory, cfg, cache=c_in.get("xattn"))
+        x = x + yx
+        if cx is not None:
+            new_cache["xattn"] = cx
+
+    if ffn == "dense":
+        x = x + mlp_forward(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    elif ffn == "moe":
+        y2, a = moe_mod.moe_forward(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        x = x + y2
+        aux = aux + a
+    return x, (new_cache or None), aux
+
+
+def _remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    if getattr(cfg, "remat_policy", "full") == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn, policy=None)
+
+
+def stack_forward(
+    stack_params: Dict[str, Any],
+    x: jax.Array,
+    cfg,
+    plan: Plan,
+    *,
+    memory: Optional[jax.Array] = None,
+    caches: Optional[Dict] = None,
+    pos: Optional[jax.Array] = None,
+):
+    """Run a stack.  Returns (x, new_caches | None, aux).
+
+    ``caches`` layout: {"prefix": [per-layer], "scan": stacked-per-repeat}.
+    Modes: train (no caches in/out) / prefill (cfg.return_cache) / decode
+    (caches given).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    want_cache = cfg.return_cache or caches is not None
+    new_caches: Dict[str, Any] = {"prefix": [], "scan": None}
+
+    for i, kind in enumerate(plan.prefix):
+        c = caches["prefix"][i] if caches is not None else None
+        if cfg.remat and not want_cache and c is None:
+            def one(p, xx, mem, _kind=kind):
+                y, _, a = block_forward(_kind, p, xx, cfg, memory=mem)
+                return y, a
+
+            x, a = _remat(one, cfg)(stack_params["prefix"][i], x, memory)
+            nc = None
+        else:
+            x, nc, a = block_forward(
+                kind, stack_params["prefix"][i], x, cfg, memory=memory, cache=c, pos=pos
+            )
+        new_caches["prefix"].append(nc)
+        aux = aux + a
+
+    if plan.repeats:
+        def period_fn(x, layer_p, layer_c):
+            ncs = {}
+            aux_l = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(plan.period):
+                cj = layer_c[str(j)] if layer_c is not None else None
+                x, nc, a = block_forward(
+                    kind, layer_p[str(j)], x, cfg, memory=memory, cache=cj, pos=pos
+                )
+                ncs[str(j)] = nc
+                aux_l = aux_l + a
+            return x, ncs, aux_l
+
+        if not want_cache:
+            def body(carry, layer_p):
+                xx, acc = carry
+                xx, _, a = period_fn(xx, layer_p, None)
+                return (xx, acc + a), None
+
+            body = _remat(body, cfg)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), stack_params["scan"])
+        elif caches is None:      # prefill: build caches
+            def body(xx, layer_p):
+                xx, ncs, _ = period_fn(xx, layer_p, None)
+                return xx, ncs
+
+            x, scan_caches = jax.lax.scan(body, x, stack_params["scan"])
+            new_caches["scan"] = scan_caches
+        else:                     # decode: thread caches
+            def body(xx, ps_cs):
+                layer_p, layer_c = ps_cs
+                xx, ncs, _ = period_fn(xx, layer_p, layer_c)
+                return xx, ncs
+
+            x, scan_caches = jax.lax.scan(
+                body, x, (stack_params["scan"], caches["scan"])
+            )
+            new_caches["scan"] = scan_caches
+
+    return x, (new_caches if want_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# cache specs (ShapeDtypeStructs + logical axes) for serve-mode dry-runs
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_spec(cfg, kind: Kind, batch: int, max_len: int, mem_len: int):
+    mixer, _ = kind
+    spec: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    if mixer in ("attn", "attn_xattn"):
+        if cfg.mla is not None:
+            spec["mixer"] = attn.mla_cache_spec(cfg, batch, max_len)
+            axes["mixer"] = attn.MLA_CACHE_AXES
+        else:
+            spec["mixer"] = attn.gqa_cache_spec(cfg, batch, max_len)
+            axes["mixer"] = attn.GQA_CACHE_AXES
+    elif mixer == "mamba":
+        spec["mixer"] = mb.mamba_cache_spec(cfg, batch)
+        axes["mixer"] = mb.MAMBA_CACHE_AXES
+    elif mixer == "xattn":
+        spec["mixer"] = attn.cross_cache_spec(cfg, batch, mem_len)
+        axes["mixer"] = attn.CROSS_CACHE_AXES
+    if mixer == "attn_xattn":
+        spec["xattn"] = attn.cross_cache_spec(cfg, batch, mem_len)
+        axes["xattn"] = attn.CROSS_CACHE_AXES
+    return spec, axes
+
+
+def stack_cache_specs(cfg, plan: Plan, batch: int, max_len: int, mem_len: int = 0):
+    spec: Dict[str, Any] = {"prefix": [], "scan": None}
+    axes: Dict[str, Any] = {"prefix": [], "scan": None}
+    for kind in plan.prefix:
+        s, a = _layer_cache_spec(cfg, kind, batch, max_len, mem_len)
+        spec["prefix"].append(s)
+        axes["prefix"].append(a)
+    if plan.repeats:
+        per_s, per_a = {}, {}
+        for j, kind in enumerate(plan.period):
+            s, a = _layer_cache_spec(cfg, kind, batch, max_len, mem_len)
+            per_s[str(j)], per_a[str(j)] = s, a
+        spec["scan"] = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((plan.repeats, *sd.shape), sd.dtype),
+            per_s,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+        axes["scan"] = jax.tree.map(
+            lambda ax: ("layers", *ax),
+            per_a,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x
+            ),
+        )
+    return spec, axes

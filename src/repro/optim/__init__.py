@@ -1,0 +1,2 @@
+from repro.optim.eprop_opt import EpropSGD, EpropSGDConfig  # noqa: F401
+from repro.optim.adamw import AdamW, AdamWConfig  # noqa: F401

@@ -1,0 +1,95 @@
+"""AdamW — pure-JAX pytree optimizer for the LM substrate.
+
+Hand-rolled (no optax in the deployment environment): decoupled weight
+decay, bias-corrected moments, optional global-norm clipping and a linear
+warmup + cosine decay schedule.  State is a flat pytree so it inherits the
+parameters' NamedSharding under pjit (ZeRO-3-equivalent: optimizer state is
+sharded exactly like the FSDP-sharded params).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip: Optional[float] = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to ``min_lr_ratio * lr``."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig):
+        self.cfg = cfg
+
+    def init(self, params: Any) -> Dict[str, Any]:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(
+        self, params: Any, grads: Any, state: Dict[str, Any]
+    ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+        cfg = self.cfg
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        if cfg.clip is not None:
+            scale = jnp.minimum(1.0, cfg.clip / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = schedule(cfg, step)
+        c1 = 1.0 - cfg.beta1 ** step.astype(jnp.float32)
+        c2 = 1.0 - cfg.beta2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = cfg.beta1 * m + (1 - cfg.beta1) * g32
+            v = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g32)
+            mh, vh = m / c1, v / c2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["mu"])
+        flat_v = jax.tree.leaves(state["nu"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        new_state = {"mu": new_m, "nu": new_v, "step": step}
+        return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

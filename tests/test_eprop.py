@@ -1,0 +1,96 @@
+"""e-prop correctness: the factored (MXU) mode must equal the exact
+(per-synapse trace SRAM) mode — the central numerical claim of the TPU
+adaptation (DESIGN.md §2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import eprop
+from repro.core.neuron import NeuronConfig
+from repro.core.rsnn import Presets, init_params, trainable
+from repro.core.eprop import EpropConfig
+
+
+def _setup(key, n_in=12, n_hid=20, n_out=3, T=25, B=2, reset="sub"):
+    cfg = Presets.braille(n_classes=n_out)
+    cfg = cfg.__class__(
+        n_in=n_in, n_hid=n_hid, n_out=n_out, num_ticks=T,
+        neuron=NeuronConfig(alpha=0.9, kappa=0.4, reset=reset),
+        eprop=EpropConfig(),
+    )
+    params = init_params(key, cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    raster = (jax.random.uniform(k1, (T, B, n_in)) < 0.3).astype(jnp.float32)
+    label = jax.random.randint(k2, (B,), 0, n_out)
+    y_star = jax.nn.one_hot(label, n_out)
+    valid = jnp.concatenate(
+        [jnp.zeros((T // 2, B)), jnp.ones((T - T // 2, B))], axis=0
+    )
+    return cfg, params, raster, y_star, valid
+
+
+@pytest.mark.parametrize("reset", ["sub", "zero"])
+@pytest.mark.parametrize("error", ["softmax", "direct"])
+def test_factored_equals_exact(reset, error):
+    cfg, params, raster, y_star, valid = _setup(jax.random.key(0), reset=reset)
+    e_exact = EpropConfig(mode="exact", error=error)
+    e_fact = EpropConfig(mode="factored", error=error)
+    dw1, m1 = eprop.run_sample(params, raster, y_star, valid, cfg.neuron, e_exact)
+    dw2, m2 = eprop.run_sample(params, raster, y_star, valid, cfg.neuron, e_fact)
+    for k in dw1:
+        np.testing.assert_allclose(dw1[k], dw2[k], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(m1["acc_y"], m2["acc_y"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(m1["pred"], m2["pred"])
+
+
+def test_random_feedback_mode():
+    cfg, params, raster, y_star, valid = _setup(jax.random.key(1))
+    ecfg = EpropConfig(mode="factored", feedback="random")
+    params["b_fb"] = jax.random.normal(jax.random.key(9), params["w_out"].shape) * 0.3
+    dw, _ = eprop.run_sample(params, raster, y_star, valid, cfg.neuron, ecfg)
+    assert all(np.isfinite(np.asarray(v)).all() for v in dw.values())
+
+
+def test_updates_descend_per_tick_loss():
+    """Repeated e-prop steps on one sample must reduce the per-tick CE that
+    e-prop's learning signal is derived from (e-prop approximates the true
+    gradient, so we check descent over a short trajectory, not one step)."""
+    cfg, params, raster, y_star, valid = _setup(jax.random.key(2), T=40)
+    ecfg = EpropConfig(mode="factored")
+
+    def per_tick_loss(p):
+        h, xb, pb, zb, err, y_inf, _ = eprop.forward_traces(
+            p, raster, y_star, valid, cfg.neuron, ecfg
+        )
+        # err = softmax(y) - y*; reconstruct CE from the forward outputs:
+        # track loss via a fresh forward instead
+        return err
+
+    def ce(p):
+        out = eprop.run_sample_inference(p, raster, valid, cfg.neuron, ecfg)
+        logp = jax.nn.log_softmax(out["acc_y"])
+        return -(logp * y_star).sum(axis=-1).mean()
+
+    params = dict(params)
+    before = float(ce(params))
+    for _ in range(8):
+        dw, _ = eprop.run_sample(params, raster, y_star, valid, cfg.neuron, ecfg)
+        for k, g in dw.items():
+            params[k] = params[k] - 0.02 * g / (jnp.linalg.norm(g) + 1e-9)
+    after = float(ce(params))
+    assert after < before, (before, after)
+
+
+def test_self_recurrence_masked():
+    cfg, params, raster, y_star, valid = _setup(jax.random.key(3))
+    dw, _ = eprop.run_sample(params, raster, y_star, valid, cfg.neuron, EpropConfig())
+    assert np.allclose(np.diag(np.asarray(dw["w_rec"])), 0.0)
+
+
+def test_inference_matches_training_forward():
+    cfg, params, raster, y_star, valid = _setup(jax.random.key(4))
+    _, m_train = eprop.run_sample(params, raster, y_star, valid, cfg.neuron, EpropConfig())
+    m_inf = eprop.run_sample_inference(params, raster, valid, cfg.neuron, EpropConfig())
+    np.testing.assert_allclose(m_train["acc_y"], m_inf["acc_y"], rtol=1e-5, atol=1e-6)

@@ -1,0 +1,110 @@
+"""Per-kernel allclose vs the ref.py oracles — shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("T,B,N,H,O", [(8, 1, 8, 16, 2), (33, 4, 40, 100, 2),
+                                       (16, 8, 12, 38, 4)])
+@pytest.mark.parametrize("reset", ["sub", "zero"])
+def test_rsnn_step_sweep(T, B, N, H, O, reset):
+    ks = jax.random.split(jax.random.key(T * B + H), 4)
+    raster = (jax.random.uniform(ks[0], (T, B, N)) < 0.25).astype(jnp.float32)
+    w_in = jax.random.normal(ks[1], (N, H)) * 0.5
+    w_rec = jax.random.normal(ks[2], (H, H)) * 0.2 * (1 - jnp.eye(H))
+    w_out = jax.random.normal(ks[3], (H, O)) * 0.3
+    out_k = ops.rsnn_forward(raster, w_in, w_rec, w_out,
+                             alpha=0.95, kappa=0.6, reset=reset)
+    out_r = ref.rsnn_forward_ref(raster, w_in, w_rec, w_out, 0.95, 0.6, 1.0,
+                                 reset=reset)
+    for key in out_r:
+        np.testing.assert_allclose(out_k[key], out_r[key], rtol=3e-5, atol=3e-5,
+                                   err_msg=key)
+
+
+@pytest.mark.parametrize("T,B,N,H,O", [(8, 2, 8, 16, 2), (40, 4, 40, 100, 2)])
+@pytest.mark.parametrize("kappa", [0.0, 0.21, 0.9])
+def test_eprop_update_sweep(T, B, N, H, O, kappa):
+    ks = jax.random.split(jax.random.key(T + H), 6)
+    h = (jax.random.uniform(ks[0], (T, B, H)) < 0.3).astype(jnp.float32)
+    xbar = jax.random.normal(ks[1], (T, B, N))
+    pbar = jax.random.normal(ks[2], (T, B, H))
+    zbar = jax.random.normal(ks[3], (T, B, H))
+    err = jax.random.normal(ks[4], (T, B, O)) * 0.2
+    b_fb = jax.random.normal(ks[5], (H, O)) * 0.4
+    dk = ops.eprop_update(h, xbar, pbar, zbar, err, b_fb, kappa=kappa)
+    dr = ref.eprop_update_ref(h, xbar, pbar, zbar, err, b_fb, kappa)
+    for a, b in zip(dk, dr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_pipeline_equals_factored_eprop():
+    """rsnn_step + eprop_update kernels == core.eprop factored mode."""
+    from repro.core import eprop as ce
+    from repro.core.eprop import EpropConfig
+    from repro.core.neuron import NeuronConfig
+
+    T, B, N, H, O = 20, 3, 10, 24, 2
+    ks = jax.random.split(jax.random.key(5), 5)
+    params = {
+        "w_in": jax.random.normal(ks[0], (N, H)) * 0.5,
+        "w_rec": jax.random.normal(ks[1], (H, H)) * 0.2,
+        "w_out": jax.random.normal(ks[2], (H, O)) * 0.3,
+        "alpha": jnp.float32(0.9),
+    }
+    ncfg = NeuronConfig(alpha=0.9, kappa=0.5)
+    ecfg = EpropConfig(mode="factored")
+    raster = (jax.random.uniform(ks[3], (T, B, N)) < 0.3).astype(jnp.float32)
+    label = jax.random.randint(ks[4], (B,), 0, O)
+    y_star = jax.nn.one_hot(label, O)
+    valid = jnp.ones((T, B))
+
+    dw_core, _ = ce.run_sample(params, raster, y_star, valid, ncfg, ecfg)
+
+    mask = 1 - jnp.eye(H)
+    out = ops.rsnn_forward(raster, params["w_in"], params["w_rec"] * mask,
+                           params["w_out"], alpha=0.9, kappa=0.5)
+    err = (jax.nn.softmax(out["y"], axis=-1) - y_star[None]) * valid[..., None]
+    dw_k = ops.eprop_update(out["h"], out["xbar"], out["pbar"], out["zbar"],
+                            err, params["w_out"], kappa=0.5)
+    np.testing.assert_allclose(dw_k[0], dw_core["w_in"], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dw_k[1] * mask, dw_core["w_rec"], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dw_k[2], dw_core["w_out"], rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,D,bq,bk", [
+    (1, 2, 1, 128, 32, 64, 64),
+    (2, 4, 2, 128, 64, 32, 64),
+    (1, 8, 8, 64, 16, 64, 64),   # MHA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, H, Hkv, S, D, bq, bk, causal):
+    ks = jax.random.split(jax.random.key(B * S + D), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32) * 0.3
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32) * 0.3
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32) * 0.3
+    o_k = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    o_r = ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(o_k, o_r, rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = (jax.random.normal(ks[0], (1, 2, 64, 32)) * 0.3).astype(jnp.bfloat16)
+    k = (jax.random.normal(ks[1], (1, 2, 64, 32)) * 0.3).astype(jnp.bfloat16)
+    v = (jax.random.normal(ks[2], (1, 2, 64, 32)) * 0.3).astype(jnp.bfloat16)
+    o_k = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    o_r = ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        o_k.astype(jnp.float32), o_r.astype(jnp.float32), rtol=3e-2, atol=3e-2
+    )

@@ -1,0 +1,91 @@
+"""MoE dispatch correctness: the capacity/sort dispatch must equal the dense
+soft-combine oracle when capacity is large enough that nothing drops."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as moe_mod
+from repro.models.moe import MoEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class _Cfg:
+    d_model: int
+    moe: MoEConfig
+    np_dtype: object = jnp.float32
+
+
+def _setup(key, n_experts=8, top_k=2, d=16, f=32, B=2, S=24, cf=8.0, n_shared=0):
+    cfg = _Cfg(d_model=d, moe=MoEConfig(
+        n_experts=n_experts, top_k=top_k, d_ff_expert=f,
+        capacity_factor=cf, n_shared=n_shared,
+    ))
+    p = moe_mod.init_moe(key, cfg)
+    params = jax.tree.map(lambda l: l[0] if isinstance(l, tuple) else l, p,
+                          is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, d)) * 0.5
+    return cfg, params, x
+
+
+@pytest.mark.parametrize("n_experts,top_k", [(4, 1), (8, 2), (8, 6)])
+def test_dispatch_matches_dense_oracle(n_experts, top_k):
+    cfg, params, x = _setup(jax.random.key(0), n_experts, top_k)
+    y, aux = moe_mod.moe_forward(params, x, cfg)
+    y_ref = moe_mod.moe_forward_dense_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_shared_experts_added():
+    cfg, params, x = _setup(jax.random.key(1), n_shared=2)
+    y, _ = moe_mod.moe_forward(params, x, cfg)
+    y_ref = moe_mod.moe_forward_dense_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_drops_tokens():
+    """With capacity_factor << 1 some tokens must be dropped (zero output),
+    never mis-routed."""
+    cfg, params, x = _setup(jax.random.key(2), cf=0.25)
+    y, _ = moe_mod.moe_forward(params, x, cfg)
+    y_ref = moe_mod.moe_forward_dense_ref(params, x, cfg)
+    diff = np.abs(np.asarray(y) - np.asarray(y_ref)).max(axis=-1).ravel()
+    matches = (diff < 2e-4)
+    # some tokens routed fully, some dropped — but y is finite everywhere
+    assert np.isfinite(np.asarray(y)).all()
+    assert matches.sum() >= 1
+
+
+def test_router_gates_normalised():
+    xf = jax.random.normal(jax.random.key(3), (64, 16))
+    w = jax.random.normal(jax.random.key(4), (16, 8))
+    gates, experts, aux, z = moe_mod._route(xf, w, 3)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert int(experts.max()) < 8
+    assert float(aux) >= 1.0 - 1e-3   # ≥1 by Cauchy-Schwarz, =1 when balanced
+
+
+def test_grouped_dispatch_matches_global():
+    """§Perf lever: dp-grouped dispatch must be numerically identical to the
+    global-sort dispatch (same gates, per-group capacity ≥ demand)."""
+    cfg, params, x = _setup(jax.random.key(7), n_experts=8, top_k=2, cf=8.0)
+    y0, _ = moe_mod.moe_forward(params, x, cfg)
+    cfg_g = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=8))
+    yg, _ = moe_mod.moe_forward(params, x, cfg_g)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yg), rtol=2e-4, atol=2e-4)
+
+
+def test_grad_flows_through_dispatch():
+    cfg, params, x = _setup(jax.random.key(5))
+
+    def loss(p):
+        y, aux = moe_mod.moe_forward(p, x, cfg)
+        return (y.astype(jnp.float32) ** 2).mean() + aux
+
+    g = jax.grad(loss)(params)
+    total = sum(float(jnp.abs(l).sum()) for l in jax.tree.leaves(g))
+    assert np.isfinite(total) and total > 0

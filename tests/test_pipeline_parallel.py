@@ -1,0 +1,56 @@
+"""GPipe pipeline parallelism: numeric equivalence + multi-device compile.
+
+The multi-device case needs >1 host device, which requires XLA_FLAGS before
+jax init — so it runs in a subprocess (same pattern as the dry-run)."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.pipeline import gpipe, reference_pipeline
+from repro.launch.mesh import make_debug_mesh
+from jax.sharding import Mesh
+
+
+def test_gpipe_single_stage_matches_reference():
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
+    k = jax.random.key(0)
+    params = {"w": jax.random.normal(k, (1, 8, 8)) * 0.5}
+    x = jax.random.normal(jax.random.fold_in(k, 1), (4, 2, 8))
+    fn = lambda p, xb: jnp.tanh(xb @ p["w"])
+    out = gpipe(fn, params, x, mesh=mesh, axis="pod")
+    ref = reference_pipeline(fn, params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_gpipe_multi_stage_subprocess():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, %r)
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.distributed.pipeline import gpipe, reference_pipeline
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4), ("pod",))
+        k = jax.random.key(0)
+        params = {"w": jax.random.normal(k, (4, 8, 8)) * 0.5}
+        x = jax.random.normal(jax.random.fold_in(k, 1), (6, 2, 8))
+        fn = lambda p, xb: jnp.tanh(xb @ p["w"])
+        out = gpipe(fn, params, x, mesh=mesh, axis="pod")
+        ref = reference_pipeline(fn, params, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        hlo = jax.jit(lambda p, xx: gpipe(fn, p, xx, mesh=mesh, axis="pod")
+                      ).lower(params, x).compile().as_text()
+        assert "collective-permute" in hlo, "handoff must be a collective-permute"
+        print("GPIPE_OK")
+    """) % str(Path(__file__).resolve().parents[1] / "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
+                       timeout=300)
+    assert "GPIPE_OK" in r.stdout, r.stdout + r.stderr

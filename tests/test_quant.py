@@ -1,0 +1,59 @@
+"""Fixed-point numerics (ReckOn's 8-bit weight SRAM behaviour)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import QuantSpec, QuantState, from_reckon_regs
+
+
+@given(
+    bits=st.integers(4, 12),
+    frac=st.integers(0, 6),
+    x=st.floats(-100, 100, allow_nan=False),
+)
+@settings(max_examples=100, deadline=None)
+def test_round_nearest_on_grid(bits, frac, x):
+    spec = QuantSpec(bits, frac)
+    q = float(spec.round_nearest(jnp.float32(x)))
+    assert spec.min_val <= q <= spec.max_val
+    k = q / spec.lsb
+    assert abs(k - round(k)) < 1e-4                # exactly on the grid
+    if spec.min_val <= x <= spec.max_val:
+        assert abs(q - x) <= spec.lsb / 2 + 1e-6   # nearest
+
+
+def test_stochastic_rounding_unbiased():
+    spec = QuantSpec(8, 4)
+    x = jnp.full((20000,), 0.3 * spec.lsb + 0.5)
+    out = spec.round_stochastic(x, jax.random.key(0))
+    vals = np.unique(np.asarray(out))
+    assert len(vals) <= 2                          # two adjacent grid points
+    np.testing.assert_allclose(float(out.mean()), float(x[0]), atol=spec.lsb * 0.05)
+
+
+def test_reckon_register_decoding():
+    regs = from_reckon_regs(threshold=0x03F0, alpha_lsb=0x0FE, kappa=0x37)
+    assert regs.alpha == 254.0 / 256.0
+    assert regs.kappa == 55.0 / 256.0
+    assert abs(regs.threshold - 1.0) < 1e-9        # normalised grid
+
+
+def test_quant_state_accumulate_then_round():
+    spec = QuantSpec(8, 4)
+    w = {"w": jnp.asarray([0.5, -0.25, 0.0])}
+    st_ = QuantState.init(w, spec)
+    # Sub-LSB updates must accumulate, not vanish.
+    for _ in range(10):
+        st_ = QuantState.accumulate(st_, {"w": jnp.full((3,), spec.lsb / 8)})
+    st_ = QuantState.commit(st_, spec)
+    moved = np.asarray(st_["q"]["w"]) - np.asarray(w["w"])
+    total = moved + np.asarray(st_["acc"]["w"])
+    np.testing.assert_allclose(total, 10 * spec.lsb / 8, atol=1e-6)
+
+
+def test_ste_gradient_is_identity():
+    spec = QuantSpec(8, 4)
+    g = jax.grad(lambda x: spec.ste(x).sum())(jnp.asarray([0.3, 0.7]))
+    np.testing.assert_allclose(g, 1.0)

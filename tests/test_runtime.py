@@ -1,0 +1,237 @@
+"""Runtime layers: checkpointing, elastic reshard, trainer fault drills,
+pipelines, compression, optimizers."""
+
+import json
+import os
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.elastic import best_mesh_from, reshard
+from repro.distributed.sharding import BASE_RULES, ShardingRules, use_mesh, shard
+from repro.launch.mesh import make_debug_mesh
+from repro.optim.adamw import AdamW, AdamWConfig, schedule
+from repro.optim.compression import (
+    compressed_psum_mean,
+    dequantize_int8,
+    init_residual,
+    quantize_int8,
+    wire_bytes_f32_allreduce,
+    wire_bytes_int8_allgather,
+)
+from repro.train.metrics import StragglerWatchdog
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def _tree(key=0):
+    k = jax.random.key(key)
+    return {
+        "a": jax.random.normal(k, (8, 4)),
+        "b": {"c": jnp.arange(6, dtype=jnp.int32), "d": jnp.float32(3.5)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    t = _tree()
+    mgr.save(5, t, {"note": "x"})
+    restored, manifest = mgr.restore(5, jax.tree.map(np.asarray, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), b)
+    assert manifest["step"] == 5 and manifest["note"] == "x"
+
+
+def test_checkpoint_keep_n_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async_and_atomic(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save_async(7, _tree(7))
+    mgr.wait()
+    assert mgr.latest_step() == 7
+    # a stale .tmp dir (simulated crash mid-save) must not be visible
+    (tmp_path / "step_000000009.tmp").mkdir()
+    assert mgr.latest_step() == 7
+    assert 9 not in mgr.all_steps()
+
+
+def test_checkpoint_restore_ignores_corrupt_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(3, _tree())
+    (tmp_path / "LATEST").write_text("step_000000099")  # dangling pointer
+    assert mgr.latest_step() == 3                       # falls back to scan
+
+
+# ---------------------------------------------------------------- elastic
+
+def test_reshard_preserves_values():
+    mesh = make_debug_mesh(1, 1)
+    rules = ShardingRules(BASE_RULES)
+    host = {"w": np.arange(32, dtype=np.float32).reshape(8, 4)}
+    specs = {"w": ("embed", "mlp")}
+    placed = reshard(host, specs, mesh, rules)
+    np.testing.assert_array_equal(np.asarray(placed["w"]), host["w"])
+
+
+def test_best_mesh_from_survivors():
+    devs = jax.devices() * 8  # simulate 8 "devices" on CPU
+    mesh = best_mesh_from(devs, model_parallel=2)
+    assert mesh.shape["model"] == 2 and mesh.shape["data"] == 4
+    with pytest.raises(ValueError):
+        best_mesh_from(devs[:1], model_parallel=2)
+
+
+# ---------------------------------------------------------------- trainer
+
+def _quadratic_step(nan_at=None):
+    """Minimal step_fn: minimise |w|² with SGD; inject NaN at a given step."""
+
+    def step(params, opt_state, batch):
+        g = jax.tree.map(lambda w: 2 * w, params)
+        new = jax.tree.map(lambda w, gg: w - 0.1 * gg, params, g)
+        step_no = opt_state["step"] + 1
+        loss = sum(jnp.sum(w ** 2) for w in jax.tree.leaves(params))
+        if nan_at is not None:
+            loss = jnp.where(batch["i"] == nan_at, jnp.nan, loss)
+        return new, {"step": step_no}, {"loss": loss, "grad_norm": jnp.float32(1.0)}
+
+    return step
+
+
+def _data():
+    i = 0
+    while True:
+        yield {"i": jnp.int32(i)}
+        i += 1
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    params = {"w": jnp.ones((4,))}
+    tr = Trainer(_quadratic_step(), params, {"step": jnp.int32(0)}, _data(),
+                 TrainerConfig(total_steps=12, ckpt_every=5, ckpt_dir=str(tmp_path),
+                               log_every=1))
+    out = tr.run()
+    assert out["step"] == 12
+    assert tr.ckpt.latest_step() == 12
+    losses = [s.metrics["loss"] for s in tr.metrics.history]
+    assert losses[-1] < losses[0]
+
+
+def test_trainer_rejects_nan_steps(tmp_path):
+    params = {"w": jnp.ones((4,))}
+    tr = Trainer(_quadratic_step(nan_at=3), params, {"step": jnp.int32(0)}, _data(),
+                 TrainerConfig(total_steps=6, ckpt_every=100, ckpt_dir=str(tmp_path)))
+    out = tr.run()
+    assert out["step"] == 6
+    assert out["rejected_steps"] == 1      # batch 3 skipped, training continued
+    assert np.isfinite(np.asarray(tr.params["w"])).all()
+
+
+def test_trainer_aborts_after_max_bad_steps(tmp_path):
+    params = {"w": jnp.ones((4,))}
+
+    def always_nan(params, opt_state, batch):
+        return params, opt_state, {"loss": jnp.nan, "grad_norm": jnp.float32(1)}
+
+    tr = Trainer(always_nan, params, {"step": jnp.int32(0)}, _data(),
+                 TrainerConfig(total_steps=10, max_bad_steps=3,
+                               ckpt_dir=str(tmp_path)))
+    with pytest.raises(RuntimeError):
+        tr.run()
+
+
+def test_trainer_resume(tmp_path):
+    params = {"w": jnp.ones((4,))}
+    tr = Trainer(_quadratic_step(), params, {"step": jnp.int32(0)}, _data(),
+                 TrainerConfig(total_steps=7, ckpt_every=5, ckpt_dir=str(tmp_path)))
+    tr.run()
+    w_end = np.asarray(tr.params["w"]).copy()
+
+    tr2 = Trainer(_quadratic_step(), {"w": jnp.ones((4,))}, {"step": jnp.int32(0)},
+                  _data(), TrainerConfig(total_steps=7, ckpt_dir=str(tmp_path)))
+    assert tr2.restore()
+    assert tr2.step == 7
+    np.testing.assert_allclose(np.asarray(tr2.params["w"]), w_end)
+
+
+def test_straggler_watchdog_flags_outlier():
+    wd = StragglerWatchdog(k=3.0, warmup=4)
+    flagged = []
+    for i in range(30):
+        dt = 1.0 + 0.01 * np.sin(i)
+        if i == 20:
+            dt = 5.0
+        if wd.observe(i, dt):
+            flagged.append(i)
+    assert 20 in flagged and len(flagged) <= 2
+
+
+# ---------------------------------------------------------------- compression
+
+def test_int8_quantization_error_bound():
+    x = np.random.default_rng(0).standard_normal(1000).astype(np.float32)
+    q, s = quantize_int8(jnp.asarray(x))
+    err = np.abs(dequantize_int8(q, s) - x)
+    assert err.max() <= float(s) / 2 + 1e-6
+
+
+def test_compressed_mean_with_error_feedback_converges():
+    """EF makes the time-averaged compressed mean equal the true mean."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((64,)).astype(np.float32))
+    r = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    steps = 50
+    for _ in range(steps):
+        g32 = g + r
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        r = g32 - deq
+        acc = acc + deq
+    np.testing.assert_allclose(np.asarray(acc / steps), np.asarray(g),
+                               atol=float(s) / steps + 1e-4)
+
+
+def test_wire_bytes_accounting():
+    n = 1_000_000
+    f32 = wire_bytes_f32_allreduce(n, 2)
+    int8 = wire_bytes_int8_allgather(n, 2)
+    assert f32 / int8 >= 3.9          # ≈4× compression at pod=2
+
+
+# ---------------------------------------------------------------- optimizers
+
+def test_adamw_schedule_and_descent():
+    cfg = AdamWConfig(lr=5e-2, warmup_steps=5, decay_steps=200, weight_decay=0.0,
+                      clip=None)
+    assert float(schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(schedule(cfg, jnp.int32(5))) - 5e-2) < 1e-9
+    opt = AdamW(cfg)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = opt.update(params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+def test_adamw_clip():
+    opt = AdamW(AdamWConfig(clip=1.0, warmup_steps=0, decay_steps=10))
+    params = {"w": jnp.zeros((3,))}
+    state = opt.init(params)
+    _, _, m = opt.update(params, {"w": jnp.full((3,), 1e6)}, state)
+    assert float(m["grad_norm"]) > 1e5   # reported pre-clip
