@@ -15,7 +15,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.core.controller import ControllerConfig, OnlineLearner
 from repro.core.rsnn import Presets, sram_bytes

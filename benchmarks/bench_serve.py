@@ -1,0 +1,146 @@
+"""Batched serving vs the sequential controller loop (ISSUE 1 tentpole bench).
+
+Measures end-to-end classification throughput on the Braille config:
+
+* **sequential** — the FSM-faithful baseline: one sample at a time through
+  the jit'd single-sample inference entry
+  (:func:`repro.core.controller.make_infer_fn`), host-decoded per request —
+  how the chip serves its AER bus;
+* **batched**    — :class:`repro.serve.BatchedEngine`: requests bucketed by
+  tick length, padded into batch tiles, one jit'd forward per tile shape.
+
+Reports samples/sec for both, the speedup (acceptance: ≥ 4× at batch ≥ 32),
+and the batched path's p50/p99 request latency.  Compile time is excluded
+from both sides via warmup.  A ragged-stream mode exercises the bucketing
+scheduler with mixed tick lengths.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--fast] [--batch 64]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import aer
+from repro.core.controller import make_infer_fn
+from repro.core.rsnn import Presets, init_params, trainable
+from repro.data.braille import BrailleConfig, make_braille_dataset
+from repro.data.pipeline import EventStream
+from repro.serve import BatchedEngine
+from repro.serve.batching import decode_events_host, request_ticks
+
+REPS = 3   # best-of-N measurement passes (noisy shared-CPU containers)
+
+
+def _ragged_stream(base_stream, num_ticks, seed=0):
+    """Re-encode each sample truncated to a random length — mixed-tick
+    traffic for the bucketing scheduler."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for ev in base_stream:
+        t = int(rng.integers(num_ticks // 2, num_ticks + 1))
+        kind = np.asarray(ev, np.uint32) >> 24
+        ticks = np.asarray(ev, np.uint32) & aer.MAX_TICK
+        keep = (ticks < t) | (kind == aer.EVT_LABEL)
+        words = np.asarray(ev, np.uint32)[keep & (kind != aer.EVT_END)]
+        words = np.minimum(words, (words & ~np.uint32(aer.MAX_TICK)) | (t - 1))
+        end = np.uint32((aer.EVT_END << 24) | (t - 1))
+        out.append(np.concatenate([words, [end]]))
+    return out
+
+
+def run_sequential(cfg, weights, stream):
+    infer = make_infer_fn(cfg)
+    # pre-compile every tick-length the stream contains (steady-state timing,
+    # same treatment the batched side gets)
+    for ticks in sorted({request_ticks(ev) for ev in stream}):
+        r, v, _ = decode_events_host([stream[0]], cfg.n_in, ticks, cfg.label_delay)
+        jax.block_until_ready(infer(weights, r[:, 0], v[:, 0])["acc_y"])
+
+    best_wall, preds = float("inf"), []
+    for _ in range(REPS):  # best-of-N: the container CPU is noisy
+        run = []
+        t0 = time.perf_counter()
+        for ev in stream:
+            ticks = request_ticks(ev)
+            raster, valid, _ = decode_events_host([ev], cfg.n_in, ticks, cfg.label_delay)
+            out = infer(weights, raster[:, 0], valid[:, 0])
+            run.append(int(jax.block_until_ready(out["pred"])))
+        wall = time.perf_counter() - t0
+        if wall < best_wall:
+            best_wall, preds = wall, run
+    return preds, len(stream) / best_wall, best_wall
+
+
+def run_batched(cfg, params, stream, batch, granularity=32):
+    eng = BatchedEngine(
+        cfg, params, backend="auto", max_batch=batch, tick_granularity=granularity
+    )
+    eng.serve(iter(stream))      # warm pass: compiles every tile shape
+    best = None
+    for _ in range(REPS):        # best-of-N steady-state pass
+        results, stats = eng.serve(iter(stream))
+        if best is None or stats.wall_s < best[1].wall_s:
+            best = (results, stats)
+    return best
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer requests")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--ragged", action="store_true",
+                    help="mixed tick lengths (exercises bucketing)")
+    opts = ap.parse_args(argv)
+
+    num_ticks = 128
+    n_req = 128 if opts.fast else 512
+    cfg = Presets.braille(n_classes=3, num_ticks=num_ticks)
+    params = init_params(jax.random.key(0), cfg)
+    weights = trainable(params)
+
+    per_class = max(2, n_req // 3)
+    data = make_braille_dataset(
+        "AEU", BrailleConfig(num_ticks=num_ticks, samples_per_class=per_class)
+    )
+    stream = list(EventStream(data, "train"))[:n_req]
+    if opts.ragged:
+        stream = _ragged_stream(stream, num_ticks)
+
+    print(f"braille config: n_in={cfg.n_in} n_hid={cfg.n_hid} n_out={cfg.n_out} "
+          f"T={num_ticks}  requests={len(stream)}  batch={opts.batch}")
+
+    seq_preds, seq_sps, seq_wall = run_sequential(cfg, weights, stream)
+    print(f"sequential controller loop : {seq_sps:9.1f} samples/s  "
+          f"({seq_wall*1e3:8.1f} ms wall)")
+
+    results, stats = run_batched(cfg, params, stream, opts.batch)
+    print(f"batched engine (B≤{opts.batch:3d})   : {stats.samples_per_sec:9.1f} samples/s  "
+          f"({stats.wall_s*1e3:8.1f} ms wall, {stats.batches} tiles, "
+          f"{stats.compiled_shapes} shapes)")
+    print(f"request latency            : p50={stats.p50_latency_s*1e3:.2f} ms  "
+          f"p99={stats.p99_latency_s*1e3:.2f} ms  mean_batch={stats.mean_batch:.1f}")
+
+    speedup = stats.samples_per_sec / seq_sps
+    mism = sum(int(a != b.pred) for a, b in zip(seq_preds, results))
+    print(f"speedup: {speedup:.1f}x   prediction mismatches vs sequential: "
+          f"{mism}/{len(stream)}")
+    if opts.batch < 32:
+        # the ≥4x bar is defined for batch ≥ 32; smaller tiles are
+        # latency-oriented configurations, not the acceptance target
+        print(f"acceptance: n/a at batch {opts.batch} < 32 "
+              f"(outputs match: {'yes' if mism == 0 else 'NO'})")
+        return 0 if mism == 0 else 1
+    status = "PASS" if (speedup >= 4.0 and mism == 0) else "FAIL"
+    print(f"acceptance (≥4x at batch ≥ 32, outputs match): {status}")
+    return 0 if status == "PASS" else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -4,6 +4,7 @@
   Fig. 7/8 Braille 3/4-class online learning        -> bench_braille
   T1/T2   resource analog (two SoC modes)           -> bench_resources
   kernels allclose + µbench                         -> bench_kernels
+  serving batched vs sequential throughput          -> bench_serve
   §Roofline table (from dry-run JSONs, if present)  -> roofline
 
 ``python -m benchmarks.run [--fast]`` — default runs the paper's full
@@ -24,10 +25,11 @@ def main(argv=None):
     opts = ap.parse_args(argv)
 
     from benchmarks import bench_cue, bench_kernels, bench_resources
-    from benchmarks import bench_braille, roofline
+    from benchmarks import bench_braille, bench_serve, roofline
 
     jobs = [
         ("kernels", lambda: bench_kernels.main([])),
+        ("serve", lambda: bench_serve.main(["--fast"] if opts.fast else [])),
         ("cue", lambda: bench_cue.main([])),
         ("resources", lambda: bench_resources.main([])),
         ("braille", lambda: bench_braille.main(
@@ -40,7 +42,11 @@ def main(argv=None):
             continue
         print(f"\n===== {name} =====", flush=True)
         try:
-            fn()
+            rc = fn()
+            # benches return data rows for callers; an int is an exit code
+            # (bench_serve signals acceptance failure with 1)
+            if isinstance(rc, int) and rc != 0:
+                failures.append(name)
         except Exception:
             traceback.print_exc()
             failures.append(name)

@@ -12,7 +12,6 @@ weights at every end-of-sample — true online learning.
 import argparse
 
 import jax
-import numpy as np
 
 from repro.core.controller import ControllerConfig, OnlineLearner
 from repro.core.quant import WEIGHT_SPEC

@@ -9,7 +9,6 @@ where they left off. A final phase reshards the checkpoint onto a different
     PYTHONPATH=src python examples/fault_tolerant_train.py
 """
 
-import os
 import tempfile
 
 import jax
@@ -19,7 +18,7 @@ from repro.configs.base import get_reduced
 from repro.data.tokens import TokenStream, TokenStreamConfig
 from repro.distributed.checkpoint import CheckpointManager
 from repro.distributed.elastic import reshard
-from repro.distributed.sharding import BASE_RULES, ShardingRules, param_shardings, use_mesh
+from repro.distributed.sharding import BASE_RULES, ShardingRules, use_mesh
 from repro.launch.mesh import make_debug_mesh
 from repro.models.model import build
 from repro.optim.adamw import AdamW, AdamWConfig

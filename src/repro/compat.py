@@ -1,0 +1,38 @@
+"""Version shims for the narrow band of jax APIs that moved between releases.
+
+The codebase targets the modern spelling (``jax.shard_map`` with
+``axis_names``/``check_vma``); on older jax (< 0.5) that call is translated
+to ``jax.experimental.shard_map.shard_map`` (``auto``/``check_rep``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, axis_names, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` with the new keyword surface on any jax version.
+
+    ``axis_names`` is the set of *manual* mesh axes; the remainder of the
+    mesh stays under GSPMD ("auto").
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            axis_names=set(axis_names),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=check_vma,
+        auto=auto,
+    )

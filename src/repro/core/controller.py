@@ -20,13 +20,20 @@ Two controller modes mirror the paper's two SoCs:
 * ``X-HEEP mode``  — dataset resident on device, whole epoch is one jit;
 * ``ARM mode``     — dataset streamed in batches, one jit per batch with a
   BATCH_DONE/NEW_BATCH handshake (see ``data/pipeline.py``).
+
+Inference entries: :func:`make_infer_fn` is the *sequential* per-sample
+classify (the FSM's TEST=1 walk, and the baseline
+``benchmarks/bench_serve.py`` measures against);
+:func:`make_batch_infer_fn` is its batch-capable twin.  The batched serving
+runtime (:mod:`repro.serve`) builds on the same math via the fused Pallas
+kernel (:mod:`repro.kernels.rsnn_step`) — construct one with
+``BatchedEngine.from_learner(learner)``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -126,6 +133,44 @@ def make_eval_batch_fn(cfg: RSNNConfig):
     return eval_batch
 
 
+def make_batch_infer_fn(cfg: RSNNConfig):
+    """Batch-capable inference entry: classify a padded/masked batch.
+
+    ``fn(weights, raster (T, B, N_in), valid (T, B)) -> {"acc_y", "pred"}``.
+    This is the exact per-sample math of :func:`make_eval_batch_fn`
+    vectorized over the batch axis — the oracle the serving runtime
+    (:mod:`repro.serve.engine`) is tested against, and its ``"scan"``
+    backend.
+    """
+
+    @jax.jit
+    def infer_batch(weights, raster: jax.Array, valid: jax.Array):
+        params = merge_trainable(
+            {"alpha": jnp.asarray(cfg.neuron.alpha, raster.dtype)}, weights
+        )
+        out = eprop.run_sample_inference(params, raster, valid, cfg.neuron, cfg.eprop)
+        return {"acc_y": out["acc_y"], "pred": out["pred"]}
+
+    return infer_batch
+
+
+def make_infer_fn(cfg: RSNNConfig):
+    """Sequential single-sample classify — the chip's one-at-a-time TEST walk.
+
+    ``fn(weights, raster (T, N_in), valid (T,)) -> {"acc_y" (O,), "pred" ()}``.
+    ``benchmarks/bench_serve.py`` uses this as the baseline the batched
+    engine is measured against.
+    """
+    batched = make_batch_infer_fn(cfg)
+
+    @jax.jit
+    def infer_one(weights, raster: jax.Array, valid: jax.Array):
+        out = batched(weights, raster[:, None, :], valid[:, None])
+        return {"acc_y": out["acc_y"][0], "pred": out["pred"][0]}
+
+    return infer_one
+
+
 @dataclasses.dataclass
 class EpochLog:
     """The ILA trace: per-epoch accuracy counters."""
@@ -190,6 +235,11 @@ class OnlineLearner:
         if split == "val":
             self.log.val_acc.append(acc)
         return acc
+
+    def inference_params(self) -> Dict[str, jax.Array]:
+        """Current weights + alpha as one pytree — what a serving engine
+        (``repro.serve.BatchedEngine.from_learner``) snapshots."""
+        return merge_trainable({"alpha": self.alpha}, self.weights)
 
     def fit(self, pipeline, verbose: bool = False) -> EpochLog:
         for epoch in range(self.ctrl.num_epochs):

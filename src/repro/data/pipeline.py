@@ -126,6 +126,46 @@ class BatchedOffloadPipeline(_Base):
         return self._decode(words, meta)
 
 
+class EventStream:
+    """Serving-side adapter: a dataset split replayed as ragged per-sample
+    AER buffers — the stream of requests a deployed SoC would receive.
+
+    Where the training pipelines above move *batches* toward the device, the
+    stream hands out one trimmed uint32 event buffer at a time (trailing 0x0
+    pad words stripped), ready for ``repro.serve.BatchedEngine.submit`` /
+    ``serve``.  ``repeat`` loops the split to synthesize sustained traffic;
+    ``shuffle`` randomizes arrival order per pass.
+    """
+
+    def __init__(
+        self,
+        dataset: Dict[str, Dict[str, np.ndarray]],
+        split: str = "test",
+        *,
+        repeat: int = 1,
+        shuffle: bool = False,
+        seed: int = 0,
+    ):
+        assert split in dataset, (split, list(dataset))
+        self.meta = dataset[split]
+        self.events = np.asarray(self.meta["events"], np.uint32)
+        self.repeat = repeat
+        self.shuffle = shuffle
+        self._rng = np.random.default_rng(seed)
+
+    def __len__(self) -> int:
+        return self.events.shape[0] * self.repeat
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        from repro.serve.batching import trim_padding
+
+        n = self.events.shape[0]
+        for _ in range(self.repeat):
+            order = self._rng.permutation(n) if self.shuffle else np.arange(n)
+            for i in order:
+                yield trim_padding(self.events[i])
+
+
 def make_pipeline(
     mode: str,
     dataset,

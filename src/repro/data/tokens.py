@@ -9,7 +9,7 @@ restored checkpoint resumes mid-stream (the trainer stores ``data_step``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ per-replica batch (gradient accumulation), which is the trainer's job.
 
 from __future__ import annotations
 
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -14,12 +14,13 @@ Bubble fraction = (S−1)/(n_micro+S−1); the caller picks n_micro ≫ S.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def gpipe(
@@ -67,7 +68,7 @@ def gpipe(
         mask = (s == n_stages - 1).astype(outs.dtype)
         return jax.lax.psum(outs * mask, axis)
 
-    return jax.shard_map(
+    return shard_map(
         inner,
         mesh=mesh,
         axis_names={axis},

@@ -81,11 +81,11 @@ class ShardingRules:
         if axes is None:
             return None
         if isinstance(axes, str):
-            axes = (axes,)
+            return axes if axes in mesh.axis_names else None
+        # Tuple rules keep tuple form even when only one axis survives, so
+        # specs compare stably across meshes with/without the 'pod' axis.
         present = tuple(a for a in axes if a in mesh.axis_names)
-        if not present:
-            return None
-        return present if len(present) > 1 else present[0]
+        return present or None
 
     def override(self, **changes: Axes) -> "ShardingRules":
         t = dict(self.table)

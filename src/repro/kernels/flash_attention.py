@@ -18,7 +18,6 @@ budget, and every matmul dim is a multiple of the 128-lane MXU.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ from functools import partial
 from typing import Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import eprop_update as _eprop
 from repro.kernels import flash_attention as _flash

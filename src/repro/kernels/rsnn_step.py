@@ -17,7 +17,11 @@ Outputs stream the per-tick quantities the factored e-prop update needs
 (h, xbar, pbar, zbar, y) back to HBM — O(T·H) traffic, never O(T·H²).
 
 ReckOn caps N_in/H at 256 ⇒ weights (256×256 f32 = 256 KiB) sit in VMEM for
-the entire sample.  Batch tiles up to ~128 keep total VMEM ≲ 2 MiB.
+the entire sample.  Batch tiles up to ~128 keep total VMEM ≲ 2 MiB — the
+budget the batched serving runtime sizes its tiles against
+(:func:`repro.serve.batching.max_batch_for`); the training-side consumer is
+:mod:`repro.core.controller`, the serving-side consumer is
+:mod:`repro.serve.engine`.
 """
 
 from __future__ import annotations

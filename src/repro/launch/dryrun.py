@@ -31,7 +31,7 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_config
 from repro.distributed.sharding import (

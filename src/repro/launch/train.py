@@ -17,7 +17,6 @@ import argparse
 import sys
 
 import jax
-import numpy as np
 
 from repro.configs.base import get_config, get_reduced
 from repro.data.tokens import TokenStream, TokenStreamConfig

@@ -19,7 +19,6 @@ instead of ``2·H·d_head``.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

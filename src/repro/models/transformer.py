@@ -16,13 +16,11 @@ Layer kinds are ``(mixer, ffn)`` pairs:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import shard
 from repro.models import attention as attn
 from repro.models import mamba as mb
 from repro.models import moe as moe_mod

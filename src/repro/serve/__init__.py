@@ -1,0 +1,23 @@
+"""Batched AER serving runtime over the fused Pallas RSNN kernel.
+
+Turns the per-sample controller loop (:mod:`repro.core.controller`) into a
+throughput-oriented inference service:
+
+* :mod:`repro.serve.batching`  — ragged-stream padding/masking + VMEM sizing;
+* :mod:`repro.serve.scheduler` — request queue, tick-count bucketing;
+* :mod:`repro.serve.engine`    — jit-cached batched forward, stats.
+
+See ``benchmarks/bench_serve.py`` for the throughput comparison against the
+sequential controller loop and ``examples/serve_braille.py`` for an
+end-to-end train-then-serve demo.
+"""
+
+from repro.serve.batching import (
+    DEFAULT_VMEM_BUDGET,
+    KERNEL_SAMPLE_CAP,
+    decode_events_host,
+    max_batch_for,
+    request_ticks,
+)
+from repro.serve.engine import BatchedEngine, ServeResult, ServeStats
+from repro.serve.scheduler import BatchTile, BucketingScheduler, ServeRequest

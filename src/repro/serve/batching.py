@@ -1,0 +1,180 @@
+"""Padding / masking / sizing utilities for the batched serving runtime.
+
+Serving concatenates *ragged* AER sample streams (each request carries its
+own tick count) into rectangular ``(T, B, N_in)`` tiles the fused Pallas
+kernel (:mod:`repro.kernels.rsnn_step`) consumes.  Correctness under padding
+rests on two invariants, both inherited from the controller
+(:mod:`repro.core.controller`):
+
+* padded ticks carry **zero input spikes**, so the membrane dynamics of
+  ticks ``<= end_tick`` are untouched by the padding that follows them;
+* the LI readout is accumulated under the per-sample TARGET_VALID mask
+  (:func:`repro.core.aer.supervision_mask` semantics), which is zero on
+  padded ticks — so ``acc_y`` is bit-identical to running the sample at its
+  native length.
+
+This module also owns the VMEM budget arithmetic: the kernel keeps the whole
+network state resident in VMEM (see the ``rsnn_step.py`` docstring), which
+caps the batch tile at ~128 samples for chip-maximal (256/256/16) networks.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.aer import EVT_END, EVT_LABEL, EVT_SPIKE, MAX_ADDR, MAX_TICK
+from repro.core.rsnn import RSNNConfig
+
+# Hard cap from the kernel contract ("batch tiles up to ~128 keep total
+# VMEM <~ 2 MiB" — kernels/rsnn_step.py).
+KERNEL_SAMPLE_CAP = 128
+
+# Conservative slice of the ~16 MiB/core VMEM left to the serving tile once
+# double-buffered HBM streaming and compiler temporaries are accounted for.
+DEFAULT_VMEM_BUDGET = 4 * 2**20
+
+
+def round_up(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def vmem_bytes_per_sample(cfg: RSNNConfig) -> int:
+    """VMEM bytes one batch row occupies inside the tick kernel.
+
+    Scratch state (v, z, y, xbar, pbar, zbar) plus the double-buffered
+    per-tick input/output blocks; f32 throughout.
+    """
+    h, n, o = cfg.n_hid, cfg.n_in, cfg.n_out
+    scratch = 4 * h + o + n                   # v,z,pbar,zbar (H) + y (O) + xbar (N)
+    blocks = 4 * h + 2 * n + o                # tick in (N) + outs z,h,pbar,zbar,xbar,y
+    return 4 * (scratch + 2 * blocks)
+
+
+def weights_vmem_bytes(cfg: RSNNConfig) -> int:
+    return 4 * (cfg.n_in * cfg.n_hid + cfg.n_hid * cfg.n_hid + cfg.n_hid * cfg.n_out)
+
+
+def max_batch_for(cfg: RSNNConfig, vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
+    """Largest batch tile the VMEM budget admits, capped by the kernel contract."""
+    spare = vmem_budget - weights_vmem_bytes(cfg)
+    if spare <= 0:
+        return 1
+    return int(max(1, min(KERNEL_SAMPLE_CAP, spare // vmem_bytes_per_sample(cfg))))
+
+
+def request_ticks(events: np.ndarray) -> int:
+    """Native tick count of an AER request = end-of-sample tick + 1.
+
+    Falls back to the largest event tick when the END word is missing
+    (a stream cut mid-sample).
+    """
+    words = np.asarray(events, np.uint32)
+    kind = words >> 24
+    ticks = words & MAX_TICK
+    is_end = kind == EVT_END
+    if is_end.any():
+        return int(ticks[is_end].max()) + 1
+    live = kind != 0
+    return int(ticks[live].max()) + 1 if live.any() else 1
+
+
+def bucket_ticks(native_ticks: int, granularity: int, cap: int = MAX_TICK + 1) -> int:
+    """Padded tick length of the bucket a request lands in."""
+    return min(round_up(max(1, native_ticks), granularity), cap)
+
+
+def decode_events_host(
+    events_list: Sequence[np.ndarray],
+    n_in: int,
+    num_ticks: int,
+    label_delay: int = 0,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side AER decode of one bucket → ``(raster, valid, labels)``.
+
+    NumPy mirror of :func:`repro.core.aer.decode_batch` +
+    :func:`repro.core.aer.supervision_mask` (asserted equivalent in
+    ``tests/test_serve.py``) that runs on the host CPU — the serving analog
+    of the SoC's ARM-side AER handling.  Crucially it is *shape-oblivious*:
+    ragged event buffers never force an XLA recompile, only the padded
+    ``(T, B)`` tile shape does.
+
+    Returns ``raster (T, B, n_in) f32``, ``valid (T, B) f32``,
+    ``labels (B,) i32``.
+    """
+    B = len(events_list)
+    raster = np.zeros((num_ticks, B, n_in), np.float32)
+    labels = np.zeros((B,), np.int32)
+
+    # One flat pass over the whole bucket: concatenate every buffer and carry
+    # a per-word sample index — no per-sample Python loop on the hot path.
+    bufs = [np.asarray(w, np.uint32).ravel() for w in events_list]
+    words = np.concatenate(bufs) if bufs else np.zeros(0, np.uint32)
+    b_idx = np.repeat(np.arange(B, dtype=np.int64), [len(w) for w in bufs])
+    kind = words >> 24
+    addr = ((words >> 12) & MAX_ADDR).astype(np.int64)
+    tick = (words & MAX_TICK).astype(np.int64)
+
+    sp = (kind == EVT_SPIKE) & (tick < num_ticks) & (addr < n_in)
+    raster[tick[sp], b_idx[sp], addr[sp]] = 1.0
+
+    # END-less buffers decode with end_tick = 0, exactly like the device path
+    # (aer.decode_sample's masked max) — never the padded bucket length, which
+    # would make the valid mask depend on which bucket the request landed in.
+    label_tick = np.zeros((B,), np.int64)
+    end_tick = np.zeros((B,), np.int64)
+    lab = kind == EVT_LABEL
+    np.maximum.at(labels, b_idx[lab], addr[lab].astype(np.int32))
+    np.maximum.at(label_tick, b_idx[lab], tick[lab])
+    end = kind == EVT_END
+    np.maximum.at(end_tick, b_idx[end], tick[end])
+
+    t_range = np.arange(num_ticks)[:, None]
+    valid = (
+        (t_range >= label_tick[None, :] + label_delay)
+        & (t_range <= end_tick[None, :])
+    ).astype(np.float32)
+    return raster, valid, labels
+
+
+def pad_batch(
+    raster: np.ndarray,
+    valid: np.ndarray,
+    target_b: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Right-pad the batch axis with dead samples (zero input, zero valid).
+
+    Batch sizes are padded to a small set of capacities (powers of two, see
+    :func:`padded_batch_size`) so partially-filled buckets reuse compiled
+    programs instead of minting one jit cache entry per ragged size.
+    """
+    T, B, N = raster.shape
+    if B == target_b:
+        return raster, valid
+    assert B < target_b, (B, target_b)
+    pad_r = np.zeros((T, target_b - B, N), raster.dtype)
+    pad_v = np.zeros((T, target_b - B), valid.dtype)
+    return np.concatenate([raster, pad_r], axis=1), np.concatenate([valid, pad_v], axis=1)
+
+
+def padded_batch_size(b: int, max_batch: int) -> int:
+    """Next power of two ≥ b, clipped to max_batch."""
+    p = 1
+    while p < b:
+        p <<= 1
+    return min(p, max_batch)
+
+
+def trim_padding(events_row: np.ndarray) -> np.ndarray:
+    """Strip the trailing 0x0 pad words a dense event matrix row carries."""
+    words = np.asarray(events_row, np.uint32)
+    live = np.nonzero(words >> 24)[0]
+    return words[: live[-1] + 1] if live.size else words[:0]
+
+
+def split_into_tiles(
+    items: List, max_batch: int
+) -> List[List]:
+    """FIFO-stable chop of a bucket's queue into ≤ max_batch tiles."""
+    return [items[i : i + max_batch] for i in range(0, len(items), max_batch)]

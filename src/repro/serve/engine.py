@@ -1,0 +1,263 @@
+"""Batched inference engine over the fused Pallas RSNN kernel.
+
+This is the serving half of the paper's host↔accelerator split: where
+:class:`repro.core.controller.OnlineLearner` drives ReckOn one sample at a
+time (the FSM's READM → TICK → … → END_S walk), the engine drives the *same*
+network as rectangular batch tiles — many AER streams decoded host-side
+(:func:`repro.serve.batching.decode_events_host`), bucketed by tick length
+(:class:`repro.serve.scheduler.BucketingScheduler`), and pushed through one
+jit-compiled forward per ``(T, B)`` tile shape.
+
+Two numerically-identical backends:
+
+* ``"kernel"`` — the fused Pallas tick kernel
+  (:func:`repro.kernels.rsnn_step.rsnn_forward` via
+  :func:`repro.kernels.ops.rsnn_forward`): whole network state VMEM-resident,
+  two MXU matmuls per tick.  Compiled on TPU; interpreted elsewhere (which is
+  how the parity tests run it on CPU).
+* ``"scan"`` — the controller's own
+  :func:`repro.core.eprop.run_sample_inference` ``lax.scan``, vectorized over
+  the batch axis.  The CPU-native fast path; also the oracle the kernel
+  backend is tested against.
+
+``backend="auto"`` picks ``"kernel"`` on TPU and ``"scan"`` elsewhere.
+Weights are jit *arguments*, not closure constants, so
+:meth:`BatchedEngine.update_weights` (serving a network that is still
+learning online) never recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eprop
+from repro.core.rsnn import RSNNConfig, merge_trainable
+from repro.kernels import ops
+from repro.serve import batching
+from repro.serve.scheduler import BatchTile, BucketingScheduler
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Per-request classification + accounting."""
+
+    rid: int
+    pred: int                 # argmax class
+    logits: np.ndarray        # accumulated LI readout acc_y, shape (n_out,)
+    label: int                # label carried by the AER stream (0 if absent)
+    latency_s: float          # admission → tile completion
+    bucket_ticks: int         # padded tick length served at
+    batch_size: int           # live samples in the tile
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int
+    batches: int
+    wall_s: float
+    samples_per_sec: float
+    p50_latency_s: float
+    p99_latency_s: float
+    mean_batch: float
+    compiled_shapes: int
+
+    @classmethod
+    def collect(
+        cls, results: List[ServeResult], wall_s: float, batches: int, shapes: int
+    ) -> "ServeStats":
+        lat = np.array([r.latency_s for r in results]) if results else np.zeros(1)
+        return cls(
+            requests=len(results),
+            batches=batches,
+            wall_s=wall_s,
+            samples_per_sec=len(results) / wall_s if wall_s > 0 else float("inf"),
+            p50_latency_s=float(np.percentile(lat, 50)),
+            p99_latency_s=float(np.percentile(lat, 99)),
+            mean_batch=(len(results) / batches) if batches else 0.0,
+            compiled_shapes=shapes,
+        )
+
+
+class BatchedEngine:
+    """Batched AER classification service for one :class:`RSNNConfig` network.
+
+    Parameters
+    ----------
+    cfg:
+        The network the weights belong to (e.g. ``Presets.braille(...)``).
+    params:
+        ``{"w_in", "w_rec", "w_out"}`` (+ optional scalar ``"alpha"``) — the
+        same pytree :class:`~repro.core.controller.OnlineLearner` trains.
+    backend:
+        ``"kernel" | "scan" | "auto"`` (see module docstring).
+    max_batch:
+        Batch-tile cap; defaults to the VMEM budget
+        (:func:`repro.serve.batching.max_batch_for`).
+    """
+
+    def __init__(
+        self,
+        cfg: RSNNConfig,
+        params: Dict[str, jax.Array],
+        *,
+        backend: str = "auto",
+        max_batch: Optional[int] = None,
+        tick_granularity: int = 32,
+        vmem_budget: int = batching.DEFAULT_VMEM_BUDGET,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if backend == "auto":
+            backend = "kernel" if jax.default_backend() == "tpu" else "scan"
+        assert backend in ("kernel", "scan"), backend
+        self.cfg = cfg
+        self.backend = backend
+        self.max_batch = max_batch or batching.max_batch_for(cfg, vmem_budget)
+        assert self.max_batch <= batching.KERNEL_SAMPLE_CAP
+        self.tick_granularity = tick_granularity
+        self._clock = clock
+        self._alpha = float(np.asarray(params.get("alpha", cfg.neuron.alpha)))
+        self._weights = {
+            k: jnp.asarray(params[k]) for k in ("w_in", "w_rec", "w_out")
+        }
+        self._fwd_cache: Dict[Tuple[int, int], Callable] = {}
+        self.scheduler = BucketingScheduler(
+            self.max_batch, tick_granularity, clock=clock
+        )
+
+    @classmethod
+    def from_learner(cls, learner, **kw) -> "BatchedEngine":
+        """Serve an :class:`~repro.core.controller.OnlineLearner`'s network."""
+        return cls(learner.cfg, learner.inference_params(), **kw)
+
+    def update_weights(self, weights: Dict[str, jax.Array]) -> None:
+        """Swap in newly-trained weights (no recompilation — weights are
+        jit arguments)."""
+        self._weights = {
+            k: jnp.asarray(weights[k]) for k in ("w_in", "w_rec", "w_out")
+        }
+
+    # ---------------------------------------------------------------- forward
+
+    def _rec_mask(self) -> jnp.ndarray:
+        if self.cfg.eprop.mask_self_recurrence:
+            return 1.0 - jnp.eye(self.cfg.n_hid, dtype=jnp.float32)
+        return jnp.ones((self.cfg.n_hid, self.cfg.n_hid), jnp.float32)
+
+    def _forward(self, num_ticks: int, batch: int) -> Callable:
+        """jit'd ``fn(weights, raster (T,B,N), valid (T,B)) -> acc_y (B,O)``,
+        cached per tile shape."""
+        key = (num_ticks, batch)
+        fn = self._fwd_cache.get(key)
+        if fn is not None:
+            return fn
+        ncfg, ecfg = self.cfg.neuron, self.cfg.eprop
+        alpha = self._alpha
+        rec_mask = self._rec_mask()
+
+        if self.backend == "kernel":
+
+            def raw(weights, raster, valid):
+                out = ops.rsnn_forward(
+                    raster,
+                    weights["w_in"],
+                    weights["w_rec"] * rec_mask,
+                    weights["w_out"],
+                    alpha=alpha,
+                    kappa=ncfg.kappa,
+                    v_th=ncfg.v_th,
+                    reset=ncfg.reset,
+                    boxcar_width=ncfg.boxcar_width,
+                )
+                w_inf = (
+                    valid[..., None]
+                    if ecfg.infer_window == "valid"
+                    else jnp.ones_like(valid)[..., None]
+                )
+                return (out["y"] * w_inf).sum(axis=0)
+
+        else:
+
+            def raw(weights, raster, valid):
+                params = merge_trainable(
+                    {"alpha": jnp.asarray(alpha, raster.dtype)}, weights
+                )
+                return eprop.run_sample_inference(params, raster, valid, ncfg, ecfg)[
+                    "acc_y"
+                ]
+
+        fn = jax.jit(raw)
+        self._fwd_cache[key] = fn
+        return fn
+
+    # ----------------------------------------------------------------- serving
+
+    def run_tile(self, tile: BatchTile) -> List[ServeResult]:
+        """Decode, pad, classify one batch tile; per-request results."""
+        events = [r.events for r in tile.requests]
+        raster, valid, labels = batching.decode_events_host(
+            events, self.cfg.n_in, tile.num_ticks, self.cfg.label_delay
+        )
+        b_live = len(events)
+        b_pad = batching.padded_batch_size(b_live, self.max_batch)
+        raster, valid = batching.pad_batch(raster, valid, b_pad)
+        fn = self._forward(tile.num_ticks, b_pad)
+        acc_y = fn(self._weights, jnp.asarray(raster), jnp.asarray(valid))
+        acc_y = np.asarray(jax.block_until_ready(acc_y))[:b_live]
+        t_done = self._clock()
+        return [
+            ServeResult(
+                rid=req.rid,
+                pred=int(np.argmax(acc_y[i])),
+                logits=acc_y[i],
+                label=int(labels[i]),
+                latency_s=t_done - req.t_submit,
+                bucket_ticks=tile.num_ticks,
+                batch_size=b_live,
+            )
+            for i, req in enumerate(tile.requests)
+        ]
+
+    def submit(self, events: np.ndarray, meta: Optional[dict] = None) -> int:
+        return self.scheduler.submit(events, meta)
+
+    def serve(
+        self, stream: Iterable[np.ndarray], flush: bool = True
+    ) -> Tuple[List[ServeResult], ServeStats]:
+        """Run a whole stream of AER sample buffers; results in admission
+        (rid) order plus throughput/latency stats.
+
+        Tiles are released as soon as a bucket fills (steady-state batching);
+        ``flush`` drains the partial buckets at end-of-stream.
+        """
+        t0 = self._clock()
+        results: List[ServeResult] = []
+        batches = 0
+        for events in stream:
+            self.submit(events)
+            for tile in self.scheduler.ready_tiles():
+                results.extend(self.run_tile(tile))
+                batches += 1
+        if flush:
+            for tile in self.scheduler.drain():
+                results.extend(self.run_tile(tile))
+                batches += 1
+        wall = self._clock() - t0
+        results.sort(key=lambda r: r.rid)
+        stats = ServeStats.collect(results, wall, batches, len(self._fwd_cache))
+        return results, stats
+
+    def warmup(self, num_ticks: int, batch: Optional[int] = None) -> None:
+        """Pre-compile the forward for one tile shape (excluded-from-bench
+        compile time; also useful before latency-sensitive serving)."""
+        b = batching.padded_batch_size(batch or self.max_batch, self.max_batch)
+        t = batching.bucket_ticks(num_ticks, self.tick_granularity)
+        fn = self._forward(t, b)
+        raster = jnp.zeros((t, b, self.cfg.n_in), jnp.float32)
+        valid = jnp.ones((t, b), jnp.float32)
+        jax.block_until_ready(fn(self._weights, raster, valid))

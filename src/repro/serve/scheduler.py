@@ -1,0 +1,116 @@
+"""Request queue + tick-count bucketing for the batched serving runtime.
+
+The FPGA controller serves one AER sample at a time (IDLE → READM → TICK →
+… → END_S).  At service scale that FSM becomes a *scheduler*: concurrent
+sample streams are admitted into a queue, grouped by padded tick length
+("buckets"), and released as rectangular batch tiles sized to the kernel's
+VMEM budget (:func:`repro.serve.batching.max_batch_for`).
+
+Determinism contract (tested in ``tests/test_serve.py``): admission order is
+FIFO within a bucket, buckets drain in ascending tick length, and the same
+request sequence always yields the same tiles — no wall-clock dependence in
+tile *composition* (the clock only stamps latency accounting).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.serve import batching
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One admitted AER sample stream."""
+
+    rid: int                      # admission index, unique per scheduler
+    events: np.ndarray            # ragged uint32 AER buffer (§3.1 word format)
+    native_ticks: int             # end-of-sample tick + 1
+    bucket: int                   # padded tick length this request serves at
+    t_submit: float               # admission timestamp (latency accounting)
+    meta: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class BatchTile:
+    """A rectangular unit of work: ≤ max_batch requests, one tick length."""
+
+    num_ticks: int
+    requests: List[ServeRequest]
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+class BucketingScheduler:
+    """FIFO admission → per-tick-length buckets → ≤ ``max_batch`` tiles.
+
+    ``tick_granularity`` trades padding waste against compiled-program
+    diversity: every request pays at most ``granularity - 1`` dead ticks,
+    and the engine compiles at most ``ceil(max_ticks / granularity)``
+    distinct time lengths.
+    """
+
+    def __init__(
+        self,
+        max_batch: int,
+        tick_granularity: int = 32,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        assert max_batch >= 1 and tick_granularity >= 1
+        self.max_batch = max_batch
+        self.tick_granularity = tick_granularity
+        self._clock = clock
+        self._buckets: Dict[int, List[ServeRequest]] = OrderedDict()
+        self._next_rid = 0
+
+    def submit(self, events: np.ndarray, meta: Optional[dict] = None) -> int:
+        """Admit one AER sample stream; returns its request id."""
+        events = batching.trim_padding(events)
+        native = batching.request_ticks(events)
+        bucket = batching.bucket_ticks(native, self.tick_granularity)
+        req = ServeRequest(
+            rid=self._next_rid,
+            events=events,
+            native_ticks=native,
+            bucket=bucket,
+            t_submit=self._clock(),
+            meta=meta,
+        )
+        self._next_rid += 1
+        self._buckets.setdefault(bucket, []).append(req)
+        return req.rid
+
+    @property
+    def pending(self) -> int:
+        return sum(len(v) for v in self._buckets.values())
+
+    def ready_tiles(self) -> Iterator[BatchTile]:
+        """Release only *full* tiles (steady-state serving keeps partial
+        buckets queued for more arrivals)."""
+        yield from self._drain(full_only=True)
+
+    def drain(self) -> Iterator[BatchTile]:
+        """Release everything, full tiles first within each bucket —
+        end-of-stream flush."""
+        yield from self._drain(full_only=False)
+
+    def _drain(self, full_only: bool) -> Iterator[BatchTile]:
+        for ticks in sorted(self._buckets):
+            queue = self._buckets[ticks]
+            tiles = batching.split_into_tiles(queue, self.max_batch)
+            keep: List[ServeRequest] = []
+            for tile in tiles:
+                if full_only and len(tile) < self.max_batch:
+                    keep.extend(tile)
+                else:
+                    yield BatchTile(num_ticks=ticks, requests=tile)
+            self._buckets[ticks] = keep
+        self._buckets = OrderedDict(
+            (k, v) for k, v in self._buckets.items() if v
+        )

@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-import time
 from collections import deque
 from pathlib import Path
 from typing import Deque, Dict, List, Optional

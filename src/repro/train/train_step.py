@@ -19,13 +19,13 @@ Three variants (all pure functions of (params, opt_state, batch)):
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.optim.adamw import AdamW
 from repro.optim.compression import compressed_psum_mean
 
@@ -122,7 +122,7 @@ def make_train_step_compressed(
             metrics.update(om)
             return params, opt_state, residual, metrics
 
-        return jax.shard_map(
+        return shard_map(
             body,
             mesh=mesh,
             axis_names={"pod"},   # data/model stay under GSPMD inside

@@ -24,7 +24,6 @@ import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.checkpoint import CheckpointManager

@@ -1,0 +1,105 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The property tests (``test_aer.py``, ``test_quant.py``,
+``test_attention_blocked.py``) are written against the real hypothesis API,
+which is declared in ``requirements.txt`` and installed in CI.  Offline
+environments without it fall back to this shim so the suite still *collects
+and runs* the properties: each strategy first yields its edge cases
+(bounds, every element of a ``sampled_from``), then seeded-random samples.
+
+Supported surface (only what the tests use):
+
+* ``given(**kwargs)`` with keyword strategies,
+* ``settings(max_examples=..., deadline=...)`` in either decorator order,
+* ``strategies.integers / floats / booleans / sampled_from``.
+
+No shrinking, no example database — failures report the generated kwargs in
+the assertion message instead.
+"""
+
+from __future__ import annotations
+
+import random
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    """A generator of example values: edge cases first, then random draws."""
+
+    def __init__(self, edges, draw):
+        self._edges = list(edges)
+        self._draw = draw
+
+    def example(self, rng: random.Random, i: int):
+        if i < len(self._edges):
+            return self._edges[i]
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        [min_value, max_value],
+        lambda rng: rng.randint(min_value, max_value),
+    )
+
+
+def floats(min_value=None, max_value=None, allow_nan=True, allow_infinity=None) -> _Strategy:
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+    edges = [lo, hi] + ([0.0] if lo < 0.0 < hi else [])
+    return _Strategy(edges, lambda rng: rng.uniform(lo, hi))
+
+
+def booleans() -> _Strategy:
+    return _Strategy([False, True], lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(elements, lambda rng: rng.choice(elements))
+
+
+strategies = types.SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    booleans=booleans,
+    sampled_from=sampled_from,
+)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper():
+            max_examples = wrapper._fallback_max_examples
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            keys = sorted(strats)
+            for i in range(max_examples):
+                kwargs = {k: strats[k].example(rng, i) for k in keys}
+                try:
+                    fn(**kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example (hypothesis-fallback): {kwargs!r}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # carry settings through when @settings is applied outside @given
+        wrapper._fallback_max_examples = getattr(
+            fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES
+        )
+        return wrapper
+
+    return deco

@@ -1,9 +1,26 @@
 import os
+import sys
 
 # Tests must see the real single CPU device (the 512-device override is
 # dryrun.py-only, per the launch contract).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Make tests/ importable regardless of pytest's import mode, so the
+# `_hypothesis_fallback` shim resolves when hypothesis isn't installed.
+sys.path.insert(0, os.path.dirname(__file__))
+
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_collection_modifyitems(config, items):
+    """Auto-skip ``tpu``-marked tests off-TPU; CI additionally deselects
+    ``slow`` and ``tpu`` via ``-m`` (see .github/workflows/ci.yml)."""
+    if jax.default_backend() == "tpu":
+        return
+    skip_tpu = pytest.mark.skip(reason="requires a TPU backend")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip_tpu)

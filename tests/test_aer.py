@@ -2,8 +2,11 @@
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # declared in requirements.txt; CI installs the real thing
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import aer
 

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # declared in requirements.txt; CI installs the real thing
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels.ref import attention_ref
 from repro.models.attention import blocked_attention, decode_attention

@@ -9,7 +9,7 @@ import pytest
 
 from repro.core import eprop
 from repro.core.neuron import NeuronConfig
-from repro.core.rsnn import Presets, init_params, trainable
+from repro.core.rsnn import Presets, init_params
 from repro.core.eprop import EpropConfig
 
 

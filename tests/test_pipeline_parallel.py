@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.pipeline import gpipe, reference_pipeline
-from repro.launch.mesh import make_debug_mesh
 from jax.sharding import Mesh
 
 

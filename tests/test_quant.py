@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # declared in requirements.txt; CI installs the real thing
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.quant import QuantSpec, QuantState, from_reckon_regs
 

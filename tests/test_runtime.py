@@ -1,11 +1,7 @@
 """Runtime layers: checkpointing, elastic reshard, trainer fault drills,
 pipelines, compression, optimizers."""
 
-import json
-import os
-import threading
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +10,7 @@ import pytest
 
 from repro.distributed.checkpoint import CheckpointManager
 from repro.distributed.elastic import best_mesh_from, reshard
-from repro.distributed.sharding import BASE_RULES, ShardingRules, use_mesh, shard
+from repro.distributed.sharding import BASE_RULES, ShardingRules
 from repro.launch.mesh import make_debug_mesh
 from repro.optim.adamw import AdamW, AdamWConfig, schedule
 from repro.optim.compression import (

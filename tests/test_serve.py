@@ -1,0 +1,246 @@
+"""The batched serving runtime: bucketing determinism, padding/masking
+correctness, and batched-vs-per-sample numerical parity (ISSUE 1 acceptance:
+allclose at rtol 1e-5 against the sequential controller inference, with the
+kernel backend exercised in CPU interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aer
+from repro.core.controller import make_batch_infer_fn, make_infer_fn
+from repro.core.rsnn import Presets, RSNNConfig, init_params, trainable
+from repro.data.braille import BrailleConfig, make_braille_dataset
+from repro.data.pipeline import EventStream
+from repro.serve import BatchedEngine, BucketingScheduler, max_batch_for
+from repro.serve import batching
+
+
+def _random_request(rng, n_in, ticks, density=0.25, label=1):
+    raster = (rng.random((ticks, n_in)) < density).astype(np.float32)
+    return aer.encode_sample(raster, label, label_tick=max(0, ticks // 4),
+                             end_tick=ticks - 1)
+
+
+# --------------------------------------------------------------------------
+# batching utilities
+# --------------------------------------------------------------------------
+
+
+def test_host_decode_matches_device_decode():
+    """decode_events_host == aer.decode_batch + supervision_mask."""
+    rng = np.random.default_rng(0)
+    n_in, T = 12, 40
+    bufs = [_random_request(rng, n_in, T, label=i % 3) for i in range(5)]
+    padded = aer.pad_events(bufs)
+
+    raster_h, valid_h, labels_h = batching.decode_events_host(bufs, n_in, T)
+    s = aer.decode_batch(jnp.asarray(padded), n_in, T)
+    valid_d = jax.vmap(lambda lt, et: aer.supervision_mask(lt, et, T, 0))(
+        s.label_tick, s.end_tick
+    )
+    np.testing.assert_array_equal(raster_h, np.moveaxis(np.asarray(s.raster), 0, 1))
+    np.testing.assert_array_equal(valid_h, np.asarray(valid_d).T)
+    np.testing.assert_array_equal(labels_h, np.asarray(s.label))
+
+    # END-less buffer (stream cut mid-sample): end_tick must mirror the
+    # device decode's masked-max default (0), never the padded bucket length
+    cut = bufs[0][:-1]
+    _, valid_c, _ = batching.decode_events_host([cut], n_in, T)
+    s_c = aer.decode_sample(jnp.asarray(cut), n_in, T)
+    mask_c = aer.supervision_mask(s_c.label_tick, s_c.end_tick, T, 0)
+    assert int(s_c.end_tick) == 0
+    np.testing.assert_array_equal(valid_c[:, 0], np.asarray(mask_c))
+
+
+def test_request_ticks_and_bucketing():
+    rng = np.random.default_rng(1)
+    ev = _random_request(rng, 8, 37)
+    assert batching.request_ticks(ev) == 37
+    assert batching.bucket_ticks(37, 32) == 64
+    assert batching.bucket_ticks(32, 32) == 32
+    assert batching.bucket_ticks(5000, 32) == aer.MAX_TICK + 1  # 12-bit cap
+
+
+def test_vmem_budget_respects_kernel_cap():
+    # chip-maximal network still fits the documented ~128-sample tile
+    big = RSNNConfig(n_in=256, n_hid=256, n_out=16)
+    assert 1 <= max_batch_for(big) <= batching.KERNEL_SAMPLE_CAP
+    # tiny network is capped by the kernel contract, not the budget
+    assert max_batch_for(Presets.braille(n_classes=3)) == batching.KERNEL_SAMPLE_CAP
+    # starved budget degrades gracefully
+    assert max_batch_for(big, vmem_budget=1 << 10) == 1
+
+
+def test_pad_batch_and_padded_size():
+    r = np.ones((10, 3, 4), np.float32)
+    v = np.ones((10, 3), np.float32)
+    rp, vp = batching.pad_batch(r, v, 8)
+    assert rp.shape == (10, 8, 4) and vp.shape == (10, 8)
+    assert rp[:, 3:].sum() == 0 and vp[:, 3:].sum() == 0
+    assert batching.padded_batch_size(3, 64) == 4
+    assert batching.padded_batch_size(64, 64) == 64
+    assert batching.padded_batch_size(65, 64) == 64
+
+
+# --------------------------------------------------------------------------
+# scheduler
+# --------------------------------------------------------------------------
+
+
+def test_bucketing_is_stable_and_complete():
+    """Same request sequence ⇒ same tiles; every request appears exactly once;
+    FIFO order within a bucket."""
+    lengths = [17, 33, 64, 12, 40, 64, 90, 17, 33, 5, 128, 77] * 3
+
+    def build():
+        sched = BucketingScheduler(max_batch=4, tick_granularity=32, clock=lambda: 0.0)
+        for t in lengths:
+            sched.submit(_random_request(np.random.default_rng(t), 8, t))
+        return list(sched.drain())
+
+    tiles_a, tiles_b = build(), build()
+    assert [(t.num_ticks, [r.rid for r in t.requests]) for t in tiles_a] == [
+        (t.num_ticks, [r.rid for r in t.requests]) for t in tiles_b
+    ]
+    rids = [r.rid for t in tiles_a for r in t.requests]
+    assert sorted(rids) == list(range(len(lengths)))
+    for tile in tiles_a:
+        assert len(tile) <= 4
+        assert all(r.bucket == tile.num_ticks for r in tile.requests)
+        assert [r.rid for r in tile.requests] == sorted(r.rid for r in tile.requests)
+    # buckets drain in ascending tick length
+    assert [t.num_ticks for t in tiles_a] == sorted(t.num_ticks for t in tiles_a)
+
+
+def test_ready_tiles_releases_only_full_tiles():
+    sched = BucketingScheduler(max_batch=3, tick_granularity=32, clock=lambda: 0.0)
+    rng = np.random.default_rng(3)
+    for _ in range(7):
+        sched.submit(_random_request(rng, 8, 20))
+    full = list(sched.ready_tiles())
+    assert [len(t) for t in full] == [3, 3]
+    assert sched.pending == 1
+    rest = list(sched.drain())
+    assert [len(t) for t in rest] == [1]
+    assert sched.pending == 0
+
+
+# --------------------------------------------------------------------------
+# engine parity vs the sequential controller path
+# --------------------------------------------------------------------------
+
+
+def _parity_setup(seed=0, n_req=12):
+    cfg = Presets.braille(n_classes=3, num_ticks=64)
+    params = init_params(jax.random.key(seed), cfg)
+    rng = np.random.default_rng(seed)
+    reqs = [
+        _random_request(rng, cfg.n_in, int(rng.integers(20, 65)), label=i % 3)
+        for i in range(n_req)
+    ]
+    return cfg, params, reqs
+
+
+def _sequential_oracle(cfg, params, results, reqs):
+    """Classify each request alone through the controller's per-sample entry,
+    at the same padded tick length the engine served it at."""
+    infer = make_infer_fn(cfg)
+    weights = trainable(params)
+    out = []
+    by_rid = {r.rid: r for r in results}
+    for rid, ev in enumerate(reqs):
+        T = by_rid[rid].bucket_ticks
+        raster, valid, _ = batching.decode_events_host([ev], cfg.n_in, T,
+                                                       cfg.label_delay)
+        o = infer(weights, raster[:, 0], valid[:, 0])
+        out.append(np.asarray(o["acc_y"]))
+    return out
+
+
+@pytest.mark.parametrize("backend", ["scan", "kernel"])
+def test_batched_matches_per_sample_controller(backend):
+    """Padded/masked batched outputs == per-sample controller inference
+    (kernel backend runs the Pallas kernel in interpret mode on CPU)."""
+    cfg, params, reqs = _parity_setup(n_req=10)
+    eng = BatchedEngine(cfg, params, backend=backend, max_batch=4,
+                        tick_granularity=32)
+    results, stats = eng.serve(iter(reqs))
+    assert [r.rid for r in results] == list(range(len(reqs)))
+    oracle = _sequential_oracle(cfg, params, results, reqs)
+    for r, acc_y in zip(results, oracle):
+        np.testing.assert_allclose(r.logits, acc_y, rtol=1e-5, atol=1e-5)
+        assert r.pred == int(np.argmax(acc_y))
+    assert stats.requests == len(reqs)
+
+
+def test_batched_matches_controller_batch_entry():
+    """Engine scan backend == controller's make_batch_infer_fn on the same
+    padded tile (exercises the batch-capable controller entry)."""
+    cfg, params, reqs = _parity_setup(seed=4, n_req=6)
+    weights = trainable(params)
+    T = 64
+    raster, valid, _ = batching.decode_events_host(reqs, cfg.n_in, T,
+                                                   cfg.label_delay)
+    batch_out = make_batch_infer_fn(cfg)(weights, jnp.asarray(raster),
+                                         jnp.asarray(valid))
+    eng = BatchedEngine(cfg, params, backend="scan", max_batch=8,
+                        tick_granularity=64)
+    results, _ = eng.serve(iter(reqs))
+    np.testing.assert_allclose(
+        np.stack([r.logits for r in results]),
+        np.asarray(batch_out["acc_y"]),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_padding_does_not_corrupt_readout():
+    """A sample classified in a half-empty padded tile gets the same acc_y
+    as in a full tile — dead rows and dead ticks are invisible."""
+    cfg, params, reqs = _parity_setup(seed=5, n_req=5)
+    eng_small = BatchedEngine(cfg, params, backend="scan", max_batch=2,
+                              tick_granularity=32)
+    eng_big = BatchedEngine(cfg, params, backend="scan", max_batch=8,
+                            tick_granularity=32)
+    res_a, _ = eng_small.serve(iter(reqs))
+    res_b, _ = eng_big.serve(iter(reqs))
+    for a, b in zip(res_a, res_b):
+        np.testing.assert_allclose(a.logits, b.logits, rtol=1e-5, atol=1e-6)
+        assert a.pred == b.pred
+
+
+def test_update_weights_no_recompile_and_changes_output():
+    cfg, params, reqs = _parity_setup(seed=6, n_req=4)
+    eng = BatchedEngine(cfg, params, backend="scan", max_batch=4,
+                        tick_granularity=64)
+    res1, stats1 = eng.serve(iter(reqs))
+    new_w = {k: v * 1.5 for k, v in trainable(params).items()}
+    eng.update_weights(new_w)
+    res2, stats2 = eng.serve(iter(reqs))
+    assert stats2.compiled_shapes == stats1.compiled_shapes  # no new programs
+    assert any(
+        not np.allclose(a.logits, b.logits) for a, b in zip(res1, res2)
+    )
+
+
+def test_serve_eventstream_end_to_end():
+    """EventStream (data/pipeline.py) → engine: labels round-trip and stats
+    account for every request."""
+    data = make_braille_dataset(
+        "AEU", BrailleConfig(num_ticks=32, samples_per_class=8)
+    )
+    cfg = Presets.braille(n_classes=3, num_ticks=32)
+    params = init_params(jax.random.key(7), cfg)
+    stream = EventStream(data, "test")
+    eng = BatchedEngine(cfg, params, backend="scan", max_batch=8)
+    results, stats = eng.serve(iter(stream))
+    assert stats.requests == len(stream) == len(results)
+    decoded = aer.decode_batch(
+        jnp.asarray(data["test"]["events"]), cfg.n_in, 32
+    )
+    np.testing.assert_array_equal(
+        [r.label for r in results], np.asarray(decoded.label)
+    )
+    assert stats.p99_latency_s >= stats.p50_latency_s >= 0.0
+    assert stats.batches >= 1 and stats.samples_per_sec > 0

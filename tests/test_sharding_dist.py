@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import get_reduced, Shape
+from repro.configs.base import get_reduced
 from repro.distributed.sharding import (
     BASE_RULES,
     ShardingRules,

@@ -69,17 +69,22 @@ def test_quantized_online_learning_still_learns(cue_data):
     assert max(log.val_acc) >= 0.7
 
 
+@pytest.mark.slow
 def test_braille_smoke_difficulty_ordering():
-    """3-class must be easier than the AEOU 4-class subset (paper: 90% vs 60%)."""
+    """3-class must be easier than the AEOU 4-class subset (paper: 90% vs 60%).
+
+    12 epochs: short-horizon test accuracy is noisy (the 3-class curve dips
+    around epoch 8 before recovering), so the smoke budget sits past the dip.
+    """
     accs = {}
     for subset in ("AEU", "AEOU"):
         data = make_braille_dataset(subset)
         ncls = 3 if subset == "AEU" else 4
         cfg = Presets.braille(n_classes=ncls, num_ticks=data["train"]["num_ticks"])
         pipe = make_pipeline("arm", data, samples_per_batch=70)
-        learner = OnlineLearner(cfg, ControllerConfig(num_epochs=8, eval_every=8),
+        learner = OnlineLearner(cfg, ControllerConfig(num_epochs=12, eval_every=12),
                                 EpropSGDConfig(lr=0.01, clip=10.0), jax.random.key(1))
-        for ep in range(8):
+        for ep in range(12):
             learner.train_epoch(pipe, ep)
         accs[subset] = learner.eval_epoch(pipe, 0, split="test")
     assert accs["AEU"] > accs["AEOU"]
