@@ -1,10 +1,28 @@
-"""Paper §4.3 / Figs. 7–8 — Braille digit classification (online learning).
+"""Paper §4.3 / Figs. 7–8 — Braille online learning, both commit modes.
 
 ReckOn network per the paper: 12 inputs, 38 recurrent (reset-to-zero),
 N-class readout, SPI registers threshold=0x03F0, alpha=0x0FE, kappa=0x37,
 ARM-mode batched offload, validation every 5 epochs.
 
-Paper numbers (test): AEU 90% (best val 93% @45, avg val 78.9%);
+Two training loops (ISSUE 2 tentpole):
+
+* ``--commit sample`` — the END_S scan: one e-prop commit per sample,
+  bit-faithful to the chip's fully-online walk (the paper protocol);
+* ``--commit batch``  — the END_B commit: each BRAM-sized batch runs as one
+  rectangular ``(T, B, N)`` tile through the execution backend and the
+  summed ``dw`` commits once per batch.  The optimizer scales its clip
+  threshold by sqrt(K) (so the effective per-commit step grows ~sqrt(K)
+  where clipping binds, as it does on Braille), and batch mode additionally
+  takes an empirically tuned 2x lr — matched-accuracy-validated at K=70 by
+  this smoke, not a K-dependent rule.
+
+``--smoke`` runs the CI acceptance check on the AEU subset at the 12-epoch
+budget: steady-state training throughput of both modes on device-resident
+batches (decode/offload excluded on both sides, as ``bench_serve`` excludes
+compile) must show ≥3x for batch-commit, with test accuracy within 0.10 of
+the sequential run at the same seed.
+
+Paper numbers (test, 200 epochs): AEU 90% (best val 93% @45, avg val 78.9%);
 Space+AEU 78.8%; AEOU 60%.
 """
 
@@ -14,31 +32,52 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controller import ControllerConfig, OnlineLearner
-from repro.core.rsnn import Presets
+from repro.core.backend import ExecutionBackend
+from repro.core.controller import (
+    ControllerConfig,
+    OnlineLearner,
+    decode_events_to_batch,
+    make_batch_commit_train_fn,
+    make_train_batch_fn,
+)
+from repro.core.rsnn import Presets, init_params, trainable
 from repro.data.braille import SUBSETS, make_braille_dataset
 from repro.data.pipeline import make_pipeline
-from repro.optim.eprop_opt import EpropSGDConfig
+from repro.optim.eprop_opt import EpropSGD, EpropSGDConfig
 
 PAPER = {"AEU": 0.90, "SAEU": 0.788, "AEOU": 0.60}
+REPS = 5   # best-of-N timing passes (noisy shared-CPU containers)
+
+
+def _opt_cfg(n_train: int, commit: str) -> EpropSGDConfig:
+    # 1/(1+t/τ) decay with τ ≈ 25 epochs of per-sample updates stabilises the
+    # long online run (fixed-lr e-prop oscillates past ~30 epochs); the decay
+    # counter advances per *sample* in both commit modes (num_updates).
+    # Batch commits take a tuned 2x lr (fewer, larger, stale-gradient steps;
+    # the sqrt(K) part of the large-batch step comes from the optimizer's
+    # clip-threshold scaling, which binds on this task) — validated against
+    # the sequential run's accuracy at samples_per_batch=70 by the smoke.
+    lr = 0.01 if commit == "sample" else 0.02
+    return EpropSGDConfig(lr=lr, clip=10.0, decay_tau=25.0 * n_train)
 
 
 def run(subset: str, epochs: int = 200, seed: int = 1, eval_every: int = 5,
-        verbose: bool = False):
+        verbose: bool = False, commit: str = "sample", backend: str = "auto",
+        samples_per_batch: int = 70):
     data = make_braille_dataset(subset)
     n_classes = len(SUBSETS[subset])
     cfg = Presets.braille(n_classes=n_classes, num_ticks=data["train"]["num_ticks"])
-    pipe = make_pipeline("arm", data, samples_per_batch=70)
+    pipe = make_pipeline("arm", data, samples_per_batch=samples_per_batch)
     n_train = data["train"]["events"].shape[0]
     learner = OnlineLearner(
         cfg,
-        ControllerConfig(num_epochs=epochs, eval_every=eval_every),
-        # 1/(1+t/τ) decay with τ ≈ 25 epochs of updates stabilises the long
-        # online run (fixed-lr e-prop oscillates past ~30 epochs).
-        EpropSGDConfig(lr=0.01, clip=10.0, decay_tau=25.0 * n_train),
+        ControllerConfig(num_epochs=epochs, eval_every=eval_every, commit=commit),
+        _opt_cfg(n_train, commit),
         jax.random.key(seed),
+        backend=backend,
     )
     t0 = time.time()
     for ep in range(epochs):
@@ -52,6 +91,8 @@ def run(subset: str, epochs: int = 200, seed: int = 1, eval_every: int = 5,
         "subset": subset,
         "classes": n_classes,
         "source": data["train"]["source"],
+        "commit": commit,
+        "backend": learner.backend.backend,
         "test_acc": float(test),
         "val_best": float(np.max(learner.log.val_acc)),
         "val_avg": float(np.mean(learner.log.val_acc)),
@@ -61,27 +102,106 @@ def run(subset: str, epochs: int = 200, seed: int = 1, eval_every: int = 5,
     }
 
 
+def measure_train_throughput(subset: str = "AEU", spb: int = 70, seed: int = 1,
+                             backend: str = "auto"):
+    """Steady-state training samples/sec of both commit modes on
+    device-resident decoded batches (offload/decode and compile excluded on
+    both sides — the tile-compute comparison the tentpole targets)."""
+    data = make_braille_dataset(subset)
+    n_classes = len(SUBSETS[subset])
+    cfg = Presets.braille(n_classes=n_classes, num_ticks=data["train"]["num_ticks"])
+    full = decode_events_to_batch(
+        jnp.asarray(data["train"]["events"]), cfg.n_in, cfg.num_ticks
+    )
+    n_train = int(full["label"].shape[0])
+    chunks = [
+        {k: v[i:i + spb] for k, v in full.items()}
+        for i in range(0, n_train - n_train % spb, spb)
+    ]
+    be = ExecutionBackend(cfg, backend)
+    weights = trainable(init_params(jax.random.key(seed), cfg))
+    out = {"backend": be.backend, "samples_per_batch": spb}
+    for commit, builder in (("sample", make_train_batch_fn),
+                            ("batch", make_batch_commit_train_fn)):
+        opt = EpropSGD(_opt_cfg(n_train, commit))
+        fn = builder(cfg, opt, be)
+        state, key = opt.init(weights), jax.random.key(0)
+        jax.block_until_ready(fn(weights, state, chunks[0], key)[0]["w_in"])
+        best = float("inf")
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            for chunk in chunks:
+                w, _, _ = fn(weights, state, chunk, key)
+            jax.block_until_ready(w["w_in"])
+            best = min(best, time.perf_counter() - t0)
+        n = spb * len(chunks)
+        out[commit] = {"samples_per_sec": n / best, "wall_s": best, "n": n}
+    out["speedup"] = (
+        out["batch"]["samples_per_sec"] / out["sample"]["samples_per_sec"]
+    )
+    return out
+
+
+def smoke(seed: int = 1, epochs: int = 12, backend: str = "auto", verbose=False):
+    """CI acceptance: END_B ≥3x END_S throughput at matched accuracy."""
+    thr = measure_train_throughput("AEU", spb=70, seed=seed, backend=backend)
+    print(f"[{thr['backend']}] END_S sequential commit : "
+          f"{thr['sample']['samples_per_sec']:9.1f} samples/s")
+    print(f"[{thr['backend']}] END_B batch commit      : "
+          f"{thr['batch']['samples_per_sec']:9.1f} samples/s "
+          f"(speedup {thr['speedup']:.2f}x)")
+
+    rows = []
+    for commit in ("sample", "batch"):
+        r = run("AEU", epochs=epochs, seed=seed, eval_every=epochs,
+                commit=commit, backend=backend, verbose=verbose)
+        r.update(train_samples_per_sec=thr[commit]["samples_per_sec"])
+        rows.append(r)
+        print(f"  {commit:6s} commit: test={r['test_acc']:.3f} "
+              f"val_best={r['val_best']:.3f} ({r['seconds']:.1f}s/{epochs}ep)")
+    acc_gap = rows[0]["test_acc"] - rows[1]["test_acc"]
+    ok = thr["speedup"] >= 3.0 and acc_gap <= 0.10
+    print(f"acceptance (≥3x, batch within 0.10 of sequential accuracy): "
+          f"{'PASS' if ok else 'FAIL'} "
+          f"(speedup {thr['speedup']:.2f}x, acc gap {acc_gap:+.3f})")
+    return {"rc": 0 if ok else 1, "rows": rows, "throughput": thr}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--classes", default="AEU,SAEU,AEOU")
     ap.add_argument("--epochs", type=int, default=200)
+    ap.add_argument("--commit", default="sample", choices=["sample", "batch"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "scan", "kernel"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="AEU 12-epoch acceptance check (throughput + parity)")
     ap.add_argument("--verbose", action="store_true")
     opts = ap.parse_args(argv)
+
+    if opts.smoke:
+        return smoke(backend=opts.backend, verbose=opts.verbose)
+
     rows = []
     for subset in opts.classes.split(","):
-        r = run(subset, epochs=opts.epochs, verbose=opts.verbose)
+        r = run(subset, epochs=opts.epochs, verbose=opts.verbose,
+                commit=opts.commit, backend=opts.backend)
         rows.append(r)
         print(
-            f"{subset:5s} [{r['source']}] test={r['test_acc']:.3f} "
-            f"(paper {r['paper_test']:.3f})  val_best={r['val_best']:.3f} "
-            f"val_avg={r['val_avg']:.3f}  {r['seconds']:.0f}s/{r['epochs']}ep"
+            f"{subset:5s} [{r['source']}] {r['commit']} commit "
+            f"test={r['test_acc']:.3f} (paper {r['paper_test']:.3f})  "
+            f"val_best={r['val_best']:.3f} val_avg={r['val_avg']:.3f}  "
+            f"{r['seconds']:.0f}s/{r['epochs']}ep"
         )
     print("name,us_per_call,derived")
     for r in rows:
         per_epoch = r["seconds"] / r["epochs"] * 1e6
         print(f"braille_{r['subset']},{per_epoch:.0f},test={r['test_acc']:.3f}")
-    return rows
+    return {"rc": 0, "rows": rows}
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    out = main()
+    sys.exit(out["rc"] if isinstance(out, dict) else 0)

@@ -1,27 +1,57 @@
 """Benchmark entry point: one benchmark per paper table/figure.
 
   Fig. 6  cue accumulation (both controller modes)  -> bench_cue
-  Fig. 7/8 Braille 3/4-class online learning        -> bench_braille
+  Fig. 7/8 Braille online learning (both commits)   -> bench_braille
   T1/T2   resource analog (two SoC modes)           -> bench_resources
   kernels allclose + µbench                         -> bench_kernels
   serving batched vs sequential throughput          -> bench_serve
   §Roofline table (from dry-run JSONs, if present)  -> roofline
 
 ``python -m benchmarks.run [--fast]`` — default runs the paper's full
-200-epoch Braille protocol; ``--fast`` trims it to 25 epochs.
+200-epoch Braille protocol; ``--fast`` trims braille to its 12-epoch smoke
+(throughput + commit-mode parity) and shrinks the serving stream.
+
+Machine-readable outputs (the cross-PR perf trajectory, uploaded as CI
+artifacts): ``BENCH_train.json`` (training samples/sec per commit mode +
+accuracy) and ``BENCH_serve.json`` (serving samples/sec, p50/p99 latency)
+are written to ``--out-dir`` (default: cwd) for every run that includes the
+corresponding benchmark.
+
+Benchmarks return either data rows, or a dict with an ``"rc"`` exit code
+plus payloads run.py folds into the JSON reports; a non-zero rc (or an
+exception) fails the whole run — CI propagates it.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
+import time
 import traceback
+from pathlib import Path
+
+
+def _write_report(path: Path, payload: dict) -> None:
+    import jax
+
+    payload = {
+        "schema": 1,
+        "unix_time": time.time(),
+        "jax_backend": jax.default_backend(),
+        "host": platform.machine(),
+        **payload,
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--out-dir", default=".")
     opts = ap.parse_args(argv)
 
     from benchmarks import bench_cue, bench_kernels, bench_resources
@@ -33,23 +63,42 @@ def main(argv=None):
         ("cue", lambda: bench_cue.main([])),
         ("resources", lambda: bench_resources.main([])),
         ("braille", lambda: bench_braille.main(
-            ["--epochs", "25"] if opts.fast else ["--epochs", "200"])),
+            ["--smoke"] if opts.fast else ["--epochs", "200"])),
         ("roofline", lambda: roofline.main([])),
     ]
     failures = []
+    reports = {}
     for name, fn in jobs:
         if opts.only and name not in opts.only.split(","):
             continue
         print(f"\n===== {name} =====", flush=True)
         try:
             rc = fn()
+            if isinstance(rc, dict):
+                reports[name] = rc
+                rc = rc.get("rc", 0)
             # benches return data rows for callers; an int is an exit code
-            # (bench_serve signals acceptance failure with 1)
             if isinstance(rc, int) and rc != 0:
                 failures.append(name)
         except Exception:
             traceback.print_exc()
             failures.append(name)
+
+    out_dir = Path(opts.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    if "braille" in reports:
+        r = reports["braille"]
+        _write_report(out_dir / "BENCH_train.json", {
+            "benchmark": "braille_training",
+            "rows": r.get("rows", []),
+            "throughput": r.get("throughput"),
+        })
+    if "serve" in reports and reports["serve"].get("serve"):
+        _write_report(out_dir / "BENCH_serve.json", {
+            "benchmark": "batched_serving",
+            **reports["serve"]["serve"],
+        })
+
     if failures:
         print(f"\nFAILED: {failures}")
         return 1

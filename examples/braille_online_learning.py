@@ -2,11 +2,15 @@
 
 Mirrors the paper's ARM-mode SoC: the dataset lives host-side; batches of
 samples are offloaded to a device buffer (the shared BRAM) with prefetch;
-the AER-decoder loop trains on each sample as it streams through, updating
-weights at every end-of-sample — true online learning.
+the AER-decoder loop trains on each sample as it streams through.
+``--commit sample`` (default) updates weights at every end-of-sample — true
+online learning; ``--commit batch`` runs each offloaded batch as one
+rectangular tile through the execution backend and commits the summed
+update at the END_B boundary (multi-x faster, see
+``benchmarks/bench_braille.py --smoke``).
 
     PYTHONPATH=src python examples/braille_online_learning.py \
-        [--classes AEU|SAEU|AEOU] [--epochs 50] [--quant]
+        [--classes AEU|SAEU|AEOU] [--epochs 50] [--commit sample|batch] [--quant]
 """
 
 import argparse
@@ -25,6 +29,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--classes", default="AEU", choices=list(SUBSETS))
     ap.add_argument("--epochs", type=int, default=50)
+    ap.add_argument("--commit", default="sample", choices=["sample", "batch"],
+                    help="END_S per-sample commit (chip-faithful) or END_B "
+                         "batch commit (one tile per offloaded batch)")
     ap.add_argument("--quant", action="store_true",
                     help="8-bit weight grid with accumulate-then-round commits "
                          "(the chip's weight-SRAM behaviour)")
@@ -40,12 +47,14 @@ def main():
     cfg = Presets.braille(n_classes=len(SUBSETS[opts.classes]),
                           num_ticks=data["train"]["num_ticks"])
     opt_cfg = EpropSGDConfig(
-        lr=0.01, clip=10.0,
+        # batch commits take a tuned 2x lr (see bench_braille._opt_cfg)
+        lr=0.01 if opts.commit == "sample" else 0.02, clip=10.0,
         quant=WEIGHT_SPEC if opts.quant else None,
         stochastic_round=opts.quant,
     )
     learner = OnlineLearner(
-        cfg, ControllerConfig(num_epochs=opts.epochs, eval_every=5),
+        cfg, ControllerConfig(num_epochs=opts.epochs, eval_every=5,
+                              commit=opts.commit),
         opt_cfg, jax.random.key(1),
     )
     for ep in range(opts.epochs):

@@ -1,12 +1,15 @@
 """Train-then-serve Braille demo: the ARM-mode SoC as an inference service.
 
 Trains ReckOn on the Braille task with online e-prop (exactly like
-``braille_online_learning.py``), then snapshots the learned weights into the
-batched serving runtime (:mod:`repro.serve`) and pushes the test split
-through it as a ragged AER request stream — reporting classification
-accuracy, throughput, and request-latency percentiles.  Mid-stream the
-engine's weights are hot-swapped (``update_weights``) to show that serving a
-still-learning network costs no recompilation.
+``braille_online_learning.py``), then serves the learner's network through
+the batched serving runtime (:mod:`repro.serve`) as a ragged AER request
+stream — reporting classification accuracy, throughput, and request-latency
+percentiles.  ``BatchedEngine.from_learner`` shares the learner's
+:class:`~repro.core.backend.ExecutionBackend`, so when training continues
+mid-serve the engine hot-swaps the live weights (``update_weights``) with
+zero recompilation — the paper's online-learning-while-serving experiment at
+service scale (the interleaved feed is
+:func:`repro.data.pipeline.interleave_train_serve`).
 
     PYTHONPATH=src python examples/serve_braille.py \
         [--classes AEU|SAEU|AEOU] [--epochs 20] [--batch 32]
@@ -19,7 +22,7 @@ import jax
 from repro.core.controller import ControllerConfig, OnlineLearner
 from repro.core.rsnn import Presets
 from repro.data.braille import SUBSETS, make_braille_dataset
-from repro.data.pipeline import EventStream, make_pipeline
+from repro.data.pipeline import EventStream, interleave_train_serve, make_pipeline
 from repro.optim.eprop_opt import EpropSGDConfig
 from repro.serve import BatchedEngine
 
@@ -63,14 +66,27 @@ def main():
     print(f"serving accuracy: {correct / max(stats.requests, 1):.1%} "
           f"(paper: AEU 90%, SAEU 78.8%, AEOU 60%)")
 
-    # --- hot weight swap: keep learning, keep serving ----------------------
-    learner.train_epoch(pipe, opts.epochs)
-    engine.update_weights(learner.weights)
-    results2, stats2 = engine.serve(iter(EventStream(data, "test")))
+    # --- online learning while serving: one backend, live weights ----------
+    # from_learner shared the learner's ExecutionBackend, so training commits
+    # and serving tiles interleave through one jit cache — no recompiles.
+    shapes_before = stats.compiled_shapes
+    results2 = []
+    for kind, item in interleave_train_serve(
+        pipe, EventStream(data, "test"), epoch=opts.epochs, serve_per_batch=16
+    ):
+        if kind == "train":
+            learner.train_batch(item)
+            engine.update_weights(learner.weights)   # live weights, hot
+        else:
+            engine.submit(item)
+            for tile in engine.scheduler.ready_tiles():
+                results2.extend(engine.run_tile(tile))
+    for tile in engine.scheduler.drain():
+        results2.extend(engine.run_tile(tile))
     correct2 = sum(int(r.pred == r.label) for r in results2)
-    print(f"after one more online epoch + update_weights (no recompile: "
-          f"{stats2.compiled_shapes} cached shapes): "
-          f"accuracy {correct2 / max(stats2.requests, 1):.1%}")
+    print(f"interleaved train+serve epoch (shared backend, "
+          f"{engine.engine.compiled_shapes('inference') - shapes_before} new "
+          f"compiled shapes): accuracy {correct2 / max(len(results2), 1):.1%}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,290 @@
+"""Backend-dispatched execution engine shared by training, eval and serving.
+
+Before this layer existed, backend choice lived in two places: the serving
+engine (:mod:`repro.serve.engine`) hard-coded its own kernel-vs-scan
+``_forward`` dispatch, and training always took the pure-JAX scan in
+:mod:`repro.core.eprop`.  :class:`ExecutionBackend` absorbs both: one object
+owns the jit caches for every rectangular ``(T, B)`` tile the system runs —
+an inference tile served to clients, an eval tile of the validation split, or
+a training tile whose summed e-prop update commits at the END_B boundary —
+so a learner and a serving engine can share compiled programs and live
+weights (see ``BatchedEngine.from_learner``).
+
+Operations (all take the weight pytree as an *argument*, never a closure
+constant, so swapping in newly-trained weights hits the same compiled
+program):
+
+* :meth:`ExecutionBackend.inference`       — classify a padded/masked tile;
+* :meth:`ExecutionBackend.forward_traces`  — forward pass emitting the
+  O(T·H) per-tick quantities (h, xbar, pbar, zbar, err, …) the factored
+  e-prop update consumes;
+* :meth:`ExecutionBackend.eprop_update`    — reverse-filter + matmuls turning
+  those traces into the batch-summed ``dw`` pytree;
+* :meth:`ExecutionBackend.train_tile`      — fused forward + update for one
+  training tile (what the END_B batch-commit controller mode calls).
+
+Backends:
+
+* ``"kernel"`` — the fused Pallas kernels (:func:`repro.kernels.ops.rsnn_forward`
+  + :func:`repro.kernels.ops.eprop_update`): whole network state VMEM-resident,
+  two MXU matmuls per tick.  Compiled on TPU; interpreted elsewhere (which is
+  how the parity tests run it on CPU).
+* ``"scan"``   — the reference ``lax.scan`` implementations in
+  :mod:`repro.core.eprop`.  The CPU-native fast path and the oracle the
+  kernel backend is tested against.  ``train_tile`` honours
+  ``cfg.eprop.mode`` (``"exact"`` per-synapse traces or ``"factored"``);
+  ``forward_traces``/``eprop_update`` are factored-only by construction.
+
+``backend="auto"`` resolves to ``"kernel"`` on TPU and ``"scan"`` elsewhere.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import eprop
+from repro.core.rsnn import RSNNConfig
+from repro.kernels import ops
+from repro.kernels.rsnn_step import KERNEL_SAMPLE_CAP
+
+# A traces pytree: the per-tick quantities of one forward pass, all (T, B, ·).
+Traces = Dict[str, jax.Array]
+
+
+def resolve_backend(backend: str) -> str:
+    """``"auto"`` → ``"kernel"`` on TPU, ``"scan"`` elsewhere."""
+    if backend == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "scan"
+    assert backend in ("kernel", "scan"), backend
+    return backend
+
+
+class ExecutionBackend:
+    """One jit-cache-owning execution object for a single :class:`RSNNConfig`.
+
+    Parameters
+    ----------
+    cfg:
+        The network all tiles run against.
+    backend:
+        ``"kernel" | "scan" | "auto"`` (see module docstring).
+    alpha:
+        Scalar membrane decay baked into the compiled programs (the single
+        "alphas LSBs" SPI register).  Defaults to ``cfg.neuron.alpha``; the
+        factored e-prop maths requires it scalar either way.
+    """
+
+    def __init__(
+        self, cfg: RSNNConfig, backend: str = "auto", alpha: Optional[float] = None
+    ):
+        self.cfg = cfg
+        self.backend = resolve_backend(backend)
+        if self.backend == "kernel":
+            # The Pallas kernels implement the factored reformulation only;
+            # exact mode (per-synapse trace SRAM, bit-faithful) must run the
+            # reference scan — fail loudly rather than silently diverge.
+            assert cfg.eprop.mode == "factored", (
+                "kernel backend is factored-only; use backend='scan' for "
+                f"eprop mode={cfg.eprop.mode!r}"
+            )
+        self.alpha = float(cfg.neuron.alpha if alpha is None else alpha)
+        if cfg.eprop.mask_self_recurrence:
+            self._mask = 1.0 - jnp.eye(cfg.n_hid, dtype=jnp.float32)
+        else:
+            self._mask = jnp.ones((cfg.n_hid, cfg.n_hid), jnp.float32)
+        self._shapes: Dict[str, set] = {}
+        self._jit_inference = jax.jit(self._inference_impl)
+        self._jit_forward = jax.jit(self._forward_impl)
+        self._jit_update = jax.jit(self._update_impl)
+        self._jit_train = jax.jit(self._train_impl)
+
+    # ------------------------------------------------------------- plumbing
+
+    def _note(self, op: str, shape: Tuple[int, ...]) -> None:
+        if self.backend == "kernel" and len(shape) > 1:
+            # the kernel keeps whole-tile state VMEM-resident; oversized tiles
+            # must be split upstream (ARM-mode batching / serve tile sizing)
+            assert shape[1] <= KERNEL_SAMPLE_CAP, (
+                f"{op} tile batch {shape[1]} exceeds the kernel VMEM contract "
+                f"({KERNEL_SAMPLE_CAP} samples) — stream smaller batches"
+            )
+        self._shapes.setdefault(op, set()).add(tuple(shape[:2]))
+
+    def compiled_shapes(self, op: Optional[str] = None) -> int:
+        """Distinct ``(T, B)`` tile shapes this backend has been asked to run
+        (per op, or total) — the serving stats' recompile counter."""
+        if op is not None:
+            return len(self._shapes.get(op, ()))
+        return sum(len(s) for s in self._shapes.values())
+
+    def _merge(self, weights: Dict[str, jax.Array], dtype) -> Dict[str, jax.Array]:
+        params = dict(weights)
+        params.setdefault("alpha", jnp.asarray(self.alpha, dtype))
+        return params
+
+    def _feedback(self, weights: Dict[str, jax.Array]) -> jax.Array:
+        return (
+            weights["b_fb"]
+            if self.cfg.eprop.feedback == "random"
+            else weights["w_out"]
+        )
+
+    def _kernel_forward(self, weights, raster):
+        ncfg = self.cfg.neuron
+        return ops.rsnn_forward(
+            raster,
+            weights["w_in"],
+            weights["w_rec"] * self._mask,
+            weights["w_out"],
+            alpha=self.alpha,
+            kappa=ncfg.kappa,
+            v_th=ncfg.v_th,
+            reset=ncfg.reset,
+            boxcar_width=ncfg.boxcar_width,
+        )
+
+    def _infer_weight(self, valid: jax.Array) -> jax.Array:
+        if self.cfg.eprop.infer_window == "valid":
+            return valid[..., None]
+        return jnp.ones_like(valid)[..., None]
+
+    # ------------------------------------------------------------ inference
+
+    def _inference_impl(self, weights, raster, valid):
+        ncfg, ecfg = self.cfg.neuron, self.cfg.eprop
+        if self.backend == "kernel":
+            out = self._kernel_forward(weights, raster)
+            acc_y = (out["y"] * self._infer_weight(valid)).sum(axis=0)
+            T, B = valid.shape
+            return {
+                "acc_y": acc_y,
+                "pred": jnp.argmax(acc_y, axis=-1),
+                "spike_rate": out["z"].sum() / (T * B * self.cfg.n_hid),
+            }
+        params = self._merge(weights, raster.dtype)
+        return eprop.run_sample_inference(params, raster, valid, ncfg, ecfg)
+
+    def inference(
+        self, weights: Dict[str, jax.Array], raster: jax.Array, valid: jax.Array
+    ) -> Dict[str, jax.Array]:
+        """Classify one ``(T, B)`` tile → ``{"acc_y", "pred", "spike_rate"}``."""
+        self._note("inference", raster.shape)
+        return self._jit_inference(weights, raster, valid)
+
+    # ------------------------------------------------------- forward traces
+
+    def _forward_impl(self, weights, raster, y_star, valid):
+        ncfg, ecfg = self.cfg.neuron, self.cfg.eprop
+        if self.backend == "kernel":
+            out = self._kernel_forward(weights, raster)
+            err = eprop.readout_error(out["y"], y_star, ecfg) * valid[..., None]
+            return {
+                "h": out["h"],
+                "xbar": out["xbar"],
+                "pbar": out["pbar"],
+                "zbar": out["zbar"],
+                "err": err,
+                "y_inf": out["y"] * self._infer_weight(valid),
+                "n_spk": out["z"].sum(axis=(1, 2)),
+            }
+        params = self._merge(weights, raster.dtype)
+        h, xbar, pbar, zbar, err, y_inf, n_spk = eprop.forward_traces(
+            params, raster, y_star, valid, ncfg, ecfg
+        )
+        return {
+            "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar,
+            "err": err, "y_inf": y_inf, "n_spk": n_spk,
+        }
+
+    def forward_traces(
+        self,
+        weights: Dict[str, jax.Array],
+        raster: jax.Array,
+        y_star: jax.Array,
+        valid: jax.Array,
+    ) -> Traces:
+        """Forward one ``(T, B)`` tile, emitting the factored-update traces."""
+        self._note("forward_traces", raster.shape)
+        return self._jit_forward(weights, raster, y_star, valid)
+
+    # --------------------------------------------------------- eprop update
+
+    def _update_impl(self, weights, traces):
+        ncfg, ecfg = self.cfg.neuron, self.cfg.eprop
+        if self.backend == "kernel":
+            dw_in, dw_rec, dw_out = ops.eprop_update(
+                traces["h"], traces["xbar"], traces["pbar"], traces["zbar"],
+                traces["err"], self._feedback(weights), kappa=ncfg.kappa,
+            )
+            return {"w_in": dw_in, "w_rec": dw_rec * self._mask, "w_out": dw_out}
+        params = self._merge(weights, traces["h"].dtype)
+        return eprop.factored_update(
+            params, traces["h"], traces["xbar"], traces["pbar"],
+            traces["zbar"], traces["err"], ncfg, ecfg,
+        )
+
+    def eprop_update(
+        self, weights: Dict[str, jax.Array], traces: Traces
+    ) -> Dict[str, jax.Array]:
+        """Traces → batch-summed positive-gradient ``dw`` pytree."""
+        self._note("eprop_update", traces["h"].shape)
+        return self._jit_update(weights, traces)
+
+    # ----------------------------------------------------------- train tile
+
+    def _train_impl(self, weights, raster, y_star, valid):
+        ncfg, ecfg = self.cfg.neuron, self.cfg.eprop
+        if self.backend == "kernel":
+            traces = self._forward_impl(weights, raster, y_star, valid)
+            dw = self._update_impl(weights, traces)
+            acc_y = traces["y_inf"].sum(axis=0)
+            T, B = valid.shape
+            metrics = {
+                "acc_y": acc_y,
+                "pred": jnp.argmax(acc_y, axis=-1),
+                "spike_rate": traces["n_spk"].sum() / (T * B * self.cfg.n_hid),
+            }
+            return dw, metrics
+        params = self._merge(weights, raster.dtype)
+        return eprop.run_sample(params, raster, y_star, valid, ncfg, ecfg)
+
+    def train_tile(
+        self,
+        weights: Dict[str, jax.Array],
+        raster: jax.Array,
+        y_star: jax.Array,
+        valid: jax.Array,
+    ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+        """One fused forward + e-prop update over a ``(T, B)`` training tile.
+
+        Returns ``(dw, metrics)`` where ``dw`` is summed over the batch axis —
+        the quantity a controller commits at an END_S (B=1) or END_B (B=K)
+        boundary.  The scan backend dispatches on ``cfg.eprop.mode`` (exact /
+        factored); the kernel backend is factored by construction.
+        """
+        self._note("train_tile", raster.shape)
+        return self._jit_train(weights, raster, y_star, valid)
+
+
+BackendLike = Union[str, ExecutionBackend]
+
+
+def as_backend(
+    cfg: RSNNConfig, backend: BackendLike, alpha: Optional[float] = None
+) -> ExecutionBackend:
+    """Coerce a backend name or an existing :class:`ExecutionBackend`.
+
+    Passing an existing instance is how a serving engine shares one jit
+    cache (and therefore live weights without recompilation) with the
+    learner that trains through it.
+    """
+    if isinstance(backend, ExecutionBackend):
+        assert backend.cfg == cfg, "shared backend built for a different config"
+        assert alpha is None or backend.alpha == float(alpha), (
+            "shared backend baked a different alpha than the caller's params"
+        )
+        return backend
+    return ExecutionBackend(cfg, backend, alpha=alpha)

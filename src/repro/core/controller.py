@@ -1,44 +1,50 @@
 """The AER-decoder controller — the paper's FSM as jit-able scans.
 
 The FPGA FSM (Fig. 3 / Fig. 5) walks IDLE → READM → TICK → SPIKE/LABEL →
-END_S → (END_B) → END_E, driving one sample at a time through ReckOn and
-committing an e-prop weight update at each end-of-sample.  Here the walk
-becomes structured tensor code:
+END_S → (END_B) → END_E, driving samples through ReckOn and committing
+e-prop weight updates as it goes.  Here the walk becomes structured tensor
+code, with every forward/update executed through one
+:class:`repro.core.backend.ExecutionBackend` (``"kernel"`` = fused Pallas
+kernels, ``"scan"`` = reference ``lax.scan``):
 
 * the READM/TICK/SPIKE scatter is :func:`repro.core.aer.decode_batch`
   (event words → dense rasters);
-* the per-sample END_S commit is a ``lax.scan`` over samples whose carry is
-  the weight pytree — faithfully *online*: sample ``s+1`` sees the weights
-  updated by sample ``s``, exactly like the chip;
-* END_B (batch boundary, ARM mode) is the host-side loop of
-  :class:`repro.data.pipeline.BatchedOffloadPipeline`;
+* ``commit="sample"`` (END_S, X-HEEP-faithful): a ``lax.scan`` over samples
+  whose carry is the weight pytree — *online*: sample ``s+1`` sees the
+  weights updated by sample ``s``, exactly like the chip
+  (:func:`make_train_batch_fn`);
+* ``commit="batch"`` (END_B, ARM mode): the whole BRAM-sized batch runs as
+  one rectangular ``(T, B, N)`` tile through the backend's fused forward +
+  e-prop update, and the batch-summed ``dw`` commits once at the batch
+  boundary (:func:`make_batch_commit_train_fn`) — the high-throughput mode
+  ``benchmarks/bench_braille.py`` measures against the sequential loop;
 * the EPOCH_ACC counter sampled by the ILA is the ``correct`` counter folded
   through the scan.
 
-Two controller modes mirror the paper's two SoCs:
-
-* ``X-HEEP mode``  — dataset resident on device, whole epoch is one jit;
-* ``ARM mode``     — dataset streamed in batches, one jit per batch with a
-  BATCH_DONE/NEW_BATCH handshake (see ``data/pipeline.py``).
+Two pipeline modes mirror the paper's two SoCs (see ``data/pipeline.py``):
+``X-HEEP`` — dataset resident on device, whole epoch is one jit; ``ARM`` —
+dataset streamed in batches with a BATCH_DONE/NEW_BATCH handshake.
 
 Inference entries: :func:`make_infer_fn` is the *sequential* per-sample
 classify (the FSM's TEST=1 walk, and the baseline
 ``benchmarks/bench_serve.py`` measures against);
 :func:`make_batch_infer_fn` is its batch-capable twin.  The batched serving
-runtime (:mod:`repro.serve`) builds on the same math via the fused Pallas
-kernel (:mod:`repro.kernels.rsnn_step`) — construct one with
-``BatchedEngine.from_learner(learner)``.
+runtime (:mod:`repro.serve.engine`) no longer owns its own dispatch — it
+drives the same :class:`~repro.core.backend.ExecutionBackend` object, which
+is how ``BatchedEngine.from_learner(learner)`` serves live weights from a
+still-training learner without recompiling.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import aer, eprop
+from repro.core.backend import BackendLike, ExecutionBackend, as_backend
 from repro.core.rsnn import RSNNConfig, init_params, merge_trainable, trainable
 from repro.optim.eprop_opt import EpropSGD, EpropSGDConfig
 
@@ -53,9 +59,15 @@ class ControllerConfig:
     label_delay: int = 0              # delayed-supervision offset
     eval_every: int = 1               # validation cadence (paper: every 5 for Braille)
     shuffle: bool = False             # chip replays BRAM order; keep False for parity
+    commit: str = "sample"            # "sample" (END_S, X-HEEP) | "batch" (END_B, ARM)
+
+    def __post_init__(self):
+        assert self.commit in ("sample", "batch"), self.commit
 
 
-# A decoded batch on device: {"raster": (S,T,N), "label": (S,), "valid": (S,T)}.
+# A decoded batch on device: {"raster": (S, T, N) sample-major rasters,
+# "label": (S,), "valid": (S, T)}.  Training/eval entries transpose to the
+# tick-major (T, B, N) layout the execution backend consumes.
 DeviceBatch = dict
 
 
@@ -70,25 +82,29 @@ def decode_events_to_batch(
     return DeviceBatch(raster=s.raster, label=s.label, valid=valid)
 
 
-def make_train_batch_fn(cfg: RSNNConfig, opt: EpropSGD):
+def make_train_batch_fn(
+    cfg: RSNNConfig, opt: EpropSGD, backend: Optional[ExecutionBackend] = None
+):
     """Build the jit'd END_S loop: scan over samples, online weight commit.
+
+    Layout contract: ``batch["raster"]`` is **sample-major** ``(S, T, N)`` —
+    ``lax.scan`` iterates the leading sample axis and each ``(T, N)`` sample
+    is lifted to a tick-major ``(T, 1, N)`` tile for the backend.  (The seed
+    code carried a no-op ``swapaxes(·, 0, 0)`` here; the transpose it gestured
+    at never existed — samples arrive sample-major from the decoder.)
 
     Returns ``fn(weights, opt_state, batch, key) -> (weights, opt_state,
     metrics)`` where metrics carries the EPOCH_ACC-style counters.
     """
+    backend = backend or ExecutionBackend(cfg, "scan")
 
     def sample_step(carry, sample):
         weights, opt_state, key = carry
         key, sub = jax.random.split(key)
-        raster = sample["raster"][:, None, :]          # (T, 1, N_in)
+        raster = sample["raster"][:, None, :]          # (T, N) -> (T, 1, N)
         y_star = jax.nn.one_hot(sample["label"], cfg.n_out)[None, :]
         valid = sample["valid"][:, None]
-        params = merge_trainable(
-            {"alpha": jnp.asarray(cfg.neuron.alpha, raster.dtype)}, weights
-        )
-        dw, metrics = eprop.run_sample(
-            params, raster, y_star, valid, cfg.neuron, cfg.eprop
-        )
+        dw, metrics = backend.train_tile(weights, raster, y_star, valid)
         weights, opt_state = opt.update(weights, dw, opt_state, sub)
         correct = (metrics["pred"][0] == sample["label"]).astype(jnp.int32)
         return (weights, opt_state, key), (correct, metrics["spike_rate"])
@@ -96,7 +112,7 @@ def make_train_batch_fn(cfg: RSNNConfig, opt: EpropSGD):
     @jax.jit
     def train_batch(weights, opt_state, batch: Dict[str, jax.Array], key):
         samples = {
-            "raster": jnp.swapaxes(batch["raster"], 0, 0),  # (S, T, N)
+            "raster": batch["raster"],                 # (S, T, N) sample-major
             "label": batch["label"],
             "valid": batch["valid"],
         }
@@ -112,17 +128,76 @@ def make_train_batch_fn(cfg: RSNNConfig, opt: EpropSGD):
     return train_batch
 
 
-def make_eval_batch_fn(cfg: RSNNConfig):
-    """Inference-only epoch (TEST=1 path): vmapped over samples, no updates."""
+def batch_commit_update(
+    cfg: RSNNConfig,
+    opt: EpropSGD,
+    backend: ExecutionBackend,
+    weights,
+    opt_state,
+    batch: Dict[str, jax.Array],
+    key=None,
+):
+    """The END_B commit core: one rectangular tile, one weight commit.
+
+    The ARM-mode SoC streams a BRAM-sized batch through ReckOn and commits at
+    the END_B boundary (§3.3, Fig. 5).  Here the whole ``(S, T, N)`` batch is
+    transposed to one tick-major ``(T, S, N)`` tile, pushed through the
+    backend's fused forward + e-prop update (on the kernel backend: the
+    Pallas ``rsnn_step`` + ``eprop_update`` pipeline), and the batch-summed
+    ``dw`` is committed once.  Every sample in the batch sees the
+    batch-start weights — the defining difference from the END_S scan, where
+    sample ``s+1`` sees sample ``s``'s update.
+
+    The optimizer is told the commit represents ``S`` samples
+    (``num_updates=S``) so lr decay and gradient clipping keep per-sample
+    semantics across the two commit modes.
+
+    Returns ``(weights, opt_state, dw, metrics)``; trace inside a jit
+    (:func:`make_batch_commit_train_fn` and
+    :func:`repro.train.eprop_step.make_eprop_commit_step` both do).
+    """
+    raster = jnp.swapaxes(batch["raster"], 0, 1)   # (S, T, N) -> (T, S, N)
+    valid = jnp.swapaxes(batch["valid"], 0, 1)     # (S, T)    -> (T, S)
+    y_star = jax.nn.one_hot(batch["label"], cfg.n_out)
+    dw, metrics = backend.train_tile(weights, raster, y_star, valid)
+    num = batch["label"].shape[0]
+    weights, opt_state = opt.update(
+        weights, dw, opt_state, key, num_updates=float(num)
+    )
+    return weights, opt_state, dw, metrics
+
+
+def make_batch_commit_train_fn(
+    cfg: RSNNConfig, opt: EpropSGD, backend: Optional[ExecutionBackend] = None
+):
+    """Build the jit'd END_B training entry over :func:`batch_commit_update`,
+    reporting the controller's EPOCH_ACC-style counters."""
+    backend = backend or ExecutionBackend(cfg, "scan")
+
+    @jax.jit
+    def train_batch(weights, opt_state, batch: Dict[str, jax.Array], key):
+        weights, opt_state, _, metrics = batch_commit_update(
+            cfg, opt, backend, weights, opt_state, batch, key
+        )
+        correct = (metrics["pred"] == batch["label"]).astype(jnp.int32)
+        return weights, opt_state, {
+            "correct": correct.sum(),
+            "count": batch["label"].shape[0],
+            "spike_rate": metrics["spike_rate"],
+        }
+
+    return train_batch
+
+
+def make_eval_batch_fn(cfg: RSNNConfig, backend: Optional[ExecutionBackend] = None):
+    """Inference-only epoch (TEST=1 path): one batched tile, no updates."""
+    backend = backend or ExecutionBackend(cfg, "scan")
 
     @jax.jit
     def eval_batch(weights, batch: Dict[str, jax.Array]):
-        params = merge_trainable(
-            {"alpha": jnp.asarray(cfg.neuron.alpha, batch["raster"].dtype)}, weights
-        )
         raster = jnp.swapaxes(batch["raster"], 0, 1)       # (T, S, N_in)
         valid = jnp.swapaxes(batch["valid"], 0, 1)         # (T, S)
-        out = eprop.run_sample_inference(params, raster, valid, cfg.neuron, cfg.eprop)
+        out = backend.inference(weights, raster, valid)
         correct = (out["pred"] == batch["label"]).astype(jnp.int32)
         return {
             "correct": correct.sum(),
@@ -139,8 +214,8 @@ def make_batch_infer_fn(cfg: RSNNConfig):
     ``fn(weights, raster (T, B, N_in), valid (T, B)) -> {"acc_y", "pred"}``.
     This is the exact per-sample math of :func:`make_eval_batch_fn`
     vectorized over the batch axis — the oracle the serving runtime
-    (:mod:`repro.serve.engine`) is tested against, and its ``"scan"``
-    backend.
+    (:mod:`repro.serve.engine`) is tested against, and the ``"scan"``
+    backend of :class:`repro.core.backend.ExecutionBackend`.
     """
 
     @jax.jit
@@ -192,6 +267,13 @@ class OnlineLearner:
     :mod:`repro.data.pipeline` (``batches(split, epoch)`` yielding device
     batches) — ResidentPipeline replays one big batch (X-HEEP mode),
     BatchedOffloadPipeline streams BRAM-sized chunks (ARM mode).
+
+    ``backend`` selects the execution engine every train/eval tile runs
+    through: a name (``"kernel" | "scan" | "auto"``) or an existing
+    :class:`~repro.core.backend.ExecutionBackend` to share (e.g. with a
+    :class:`repro.serve.BatchedEngine` serving this learner's live weights).
+    ``ctrl.commit`` selects the training loop: ``"sample"`` = per-sample
+    END_S commit (X-HEEP-faithful), ``"batch"`` = END_B batch commit (ARM).
     """
 
     def __init__(
@@ -200,25 +282,43 @@ class OnlineLearner:
         ctrl: ControllerConfig,
         opt_cfg: EpropSGDConfig,
         key: jax.Array,
+        backend: BackendLike = "auto",
     ):
         self.cfg, self.ctrl = cfg, ctrl
         self.opt = EpropSGD(opt_cfg)
         params = init_params(key, cfg)
         self.weights = self.opt.quantize_init(trainable(params))
         self.alpha = params["alpha"]
+        if cfg.eprop.feedback == "random":
+            # random feedback matrices ride with the weights (fixed, untrained)
+            self.weights["b_fb"] = params["b_fb"]
         self.opt_state = self.opt.init(self.weights)
         self.key = jax.random.fold_in(key, 1)
-        self._train_fn = make_train_batch_fn(cfg, self.opt)
-        self._eval_fn = make_eval_batch_fn(cfg)
+        self.backend = as_backend(cfg, backend, alpha=float(params["alpha"]))
+        train_builder = (
+            make_batch_commit_train_fn
+            if ctrl.commit == "batch"
+            else make_train_batch_fn
+        )
+        self._train_fn = train_builder(cfg, self.opt, self.backend)
+        self._eval_fn = make_eval_batch_fn(cfg, self.backend)
         self.log = EpochLog(train_acc=[], val_acc=[])
+
+    def train_batch(self, batch: DeviceBatch) -> Dict[str, jax.Array]:
+        """Train on one device batch (one END_B commit, or one END_S scan over
+        its samples, per ``ctrl.commit``) — the entry the interleaved
+        train-while-serve feed (:func:`repro.data.pipeline.interleave_train_serve`)
+        drives."""
+        self.key, sub = jax.random.split(self.key)
+        self.weights, self.opt_state, m = self._train_fn(
+            self.weights, self.opt_state, batch, sub
+        )
+        return m
 
     def train_epoch(self, pipeline, epoch: int) -> float:
         correct = total = 0
         for batch in pipeline.batches("train", epoch):
-            self.key, sub = jax.random.split(self.key)
-            self.weights, self.opt_state, m = self._train_fn(
-                self.weights, self.opt_state, batch, sub
-            )
+            m = self.train_batch(batch)
             correct += int(m["correct"])
             total += int(m["count"])
         acc = correct / max(total, 1)

@@ -166,6 +166,38 @@ class EventStream:
                 yield trim_padding(self.events[i])
 
 
+def interleave_train_serve(
+    pipeline,
+    stream,
+    epoch: int = 0,
+    split: str = "train",
+    serve_per_batch: int = 8,
+) -> Iterator[tuple]:
+    """Online-learning-while-serving feed: the paper's second experiment at
+    service scale.
+
+    Yields ``("train", device_batch)`` items from a training pipeline
+    interleaved with ``("serve", events)`` request buffers from an
+    :class:`EventStream` — the ARM SoC answering live queries between END_B
+    commits.  ``serve_per_batch`` requests are released after each training
+    batch; leftover requests drain at the end of the epoch.  The consumer
+    (see ``examples/serve_braille.py`` and ``tests/test_backend.py``) trains
+    an :class:`~repro.core.controller.OnlineLearner` on the train items and
+    pushes the serve items through a :class:`repro.serve.BatchedEngine`
+    sharing the learner's execution backend.
+    """
+    requests = iter(stream)
+    for batch in pipeline.batches(split, epoch):
+        yield ("train", batch)
+        for _ in range(serve_per_batch):
+            try:
+                yield ("serve", next(requests))
+            except StopIteration:
+                break
+    for ev in requests:
+        yield ("serve", ev)
+
+
 def make_pipeline(
     mode: str,
     dataset,

@@ -19,15 +19,21 @@ Outputs stream the per-tick quantities the factored e-prop update needs
 ReckOn caps N_in/H at 256 ⇒ weights (256×256 f32 = 256 KiB) sit in VMEM for
 the entire sample.  Batch tiles up to ~128 keep total VMEM ≲ 2 MiB — the
 budget the batched serving runtime sizes its tiles against
-(:func:`repro.serve.batching.max_batch_for`); the training-side consumer is
-:mod:`repro.core.controller`, the serving-side consumer is
-:mod:`repro.serve.engine`.
+(:func:`repro.serve.batching.max_batch_for`).  The sole consumer is the
+``"kernel"`` backend of :class:`repro.core.backend.ExecutionBackend`, which
+training (END_S/END_B commits), evaluation and serving all dispatch through.
 """
 
 from __future__ import annotations
 
 import functools
 from typing import Dict
+
+# The kernel's VMEM contract: batch tiles up to ~128 samples keep the whole
+# network state + double-buffered tick blocks ≲ 2 MiB for chip-maximal
+# (256/256/16) networks.  Enforced by the execution backend for every kernel
+# tile and by the serving runtime's tile sizing (repro.serve.batching).
+KERNEL_SAMPLE_CAP = 128
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,6 @@ single-device (smoke tests).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Tuple
 
 import jax

@@ -52,13 +52,18 @@ class EpropSGD:
             state["acc"] = jax.tree.map(jnp.zeros_like, weights)
         return state
 
-    def _clip(self, dw):
+    def _clip(self, dw, num_updates: float = 1.0):
         if self.cfg.clip is None:
             return dw
         gn = jnp.sqrt(
             sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(dw)) + 1e-12
         )
-        scale = jnp.minimum(1.0, self.cfg.clip / gn)
+        # An END_B commit is the sum of num_updates per-sample updates.  Under
+        # the clipped regime the per-sample steps behave like bounded noisy
+        # directions whose sum grows ~sqrt(K), so the commit threshold scales
+        # with sqrt(num_updates) — K× would admit single steps on the order of
+        # the weight norm itself (empirically divergent on Braille).
+        scale = jnp.minimum(1.0, self.cfg.clip * jnp.sqrt(num_updates) / gn)
         return jax.tree.map(lambda g: g * scale, dw)
 
     def update(
@@ -67,37 +72,50 @@ class EpropSGD:
         dw: Dict[str, jax.Array],
         state: Dict,
         key: Optional[jax.Array] = None,
+        num_updates: float = 1.0,
     ) -> Tuple[Dict[str, jax.Array], Dict]:
+        """Commit one update.  Only keys present in ``dw`` move; extra weight
+        entries (e.g. a fixed random-feedback matrix ``b_fb``) pass through.
+
+        ``num_updates`` is how many per-sample e-prop updates this commit
+        represents: 1 for an END_S commit, the batch size for an END_B
+        batch commit whose ``dw`` is the per-sample sum.  It advances the lr
+        decay counter and scales the clip threshold so both commit modes see
+        the same per-sample schedule.
+        """
         cfg = self.cfg
-        dw = self._clip(dw)
+        keys_w = [k for k in weights if k in dw]
+        dw = self._clip({k: dw[k] for k in keys_w}, num_updates)
         count = state["count"]
-        state = dict(state, count=count + 1.0)
+        state = dict(state, count=count + num_updates)
         scale = 1.0 / (1.0 + count / cfg.decay_tau) if cfg.decay_tau > 0 else 1.0
         lr = {
             k: cfg.lr * scale * (cfg.lr_out_scale if k == "w_out" else 1.0)
-            for k in weights
+            for k in keys_w
         }
-        step = {k: lr[k] * dw[k] for k in weights}
+        step = {k: lr[k] * dw[k] for k in keys_w}
 
         if cfg.momentum:
-            mu = {k: cfg.momentum * state["mu"][k] + step[k] for k in weights}
+            mu = dict(state["mu"])
+            mu.update({k: cfg.momentum * state["mu"][k] + step[k] for k in keys_w})
             state = dict(state, mu=mu)
-            step = mu
+            step = {k: mu[k] for k in keys_w}
 
         if cfg.quant is None:
-            new_w = {k: weights[k] - step[k] for k in weights}
+            new_w = dict(weights)
+            new_w.update({k: weights[k] - step[k] for k in keys_w})
             return new_w, state
 
         # Quantized path: weights are grid values; accumulate the (negative)
         # update into the float residual, then commit back onto the grid.
         spec: QuantSpec = cfg.quant
-        acc = {k: state["acc"][k] - step[k] for k in weights}
-        new_w, new_acc = {}, {}
+        acc = {k: state["acc"][k] - step[k] for k in keys_w}
+        new_w, new_acc = dict(weights), dict(state["acc"])
         if cfg.stochastic_round:
             assert key is not None, "stochastic rounding needs an rng key"
-            keys = jax.random.split(key, len(weights))
-            key_map = {k: keys[i] for i, k in enumerate(sorted(weights))}
-        for k in weights:
+            rks = jax.random.split(key, len(keys_w))
+            key_map = {k: rks[i] for i, k in enumerate(sorted(keys_w))}
+        for k in keys_w:
             tot = weights[k] + acc[k]
             q = (
                 spec.round_stochastic(tot, key_map[k])

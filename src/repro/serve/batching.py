@@ -28,8 +28,8 @@ from repro.core.aer import EVT_END, EVT_LABEL, EVT_SPIKE, MAX_ADDR, MAX_TICK
 from repro.core.rsnn import RSNNConfig
 
 # Hard cap from the kernel contract ("batch tiles up to ~128 keep total
-# VMEM <~ 2 MiB" — kernels/rsnn_step.py).
-KERNEL_SAMPLE_CAP = 128
+# VMEM <~ 2 MiB") — owned by the kernel, re-exported for tile sizing.
+from repro.kernels.rsnn_step import KERNEL_SAMPLE_CAP  # noqa: F401
 
 # Conservative slice of the ~16 MiB/core VMEM left to the serving tile once
 # double-buffered HBM streaming and compiler temporaries are accounted for.

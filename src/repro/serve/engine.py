@@ -1,29 +1,24 @@
-"""Batched inference engine over the fused Pallas RSNN kernel.
+"""Batched inference engine over the shared execution backend.
 
 This is the serving half of the paper's host↔accelerator split: where
-:class:`repro.core.controller.OnlineLearner` drives ReckOn one sample at a
-time (the FSM's READM → TICK → … → END_S walk), the engine drives the *same*
-network as rectangular batch tiles — many AER streams decoded host-side
-(:func:`repro.serve.batching.decode_events_host`), bucketed by tick length
-(:class:`repro.serve.scheduler.BucketingScheduler`), and pushed through one
-jit-compiled forward per ``(T, B)`` tile shape.
+:class:`repro.core.controller.OnlineLearner` drives ReckOn sample-by-sample
+or batch-by-batch through an
+:class:`~repro.core.backend.ExecutionBackend`, the engine drives the *same*
+backend object as rectangular inference tiles — many AER streams decoded
+host-side (:func:`repro.serve.batching.decode_events_host`), bucketed by
+tick length (:class:`repro.serve.scheduler.BucketingScheduler`), and pushed
+through one compiled forward per ``(T, B)`` tile shape.
 
-Two numerically-identical backends:
-
-* ``"kernel"`` — the fused Pallas tick kernel
-  (:func:`repro.kernels.rsnn_step.rsnn_forward` via
-  :func:`repro.kernels.ops.rsnn_forward`): whole network state VMEM-resident,
-  two MXU matmuls per tick.  Compiled on TPU; interpreted elsewhere (which is
-  how the parity tests run it on CPU).
-* ``"scan"`` — the controller's own
-  :func:`repro.core.eprop.run_sample_inference` ``lax.scan``, vectorized over
-  the batch axis.  The CPU-native fast path; also the oracle the kernel
-  backend is tested against.
-
-``backend="auto"`` picks ``"kernel"`` on TPU and ``"scan"`` elsewhere.
-Weights are jit *arguments*, not closure constants, so
+Backend dispatch (``"kernel"`` = fused Pallas kernels, ``"scan"`` = the
+reference ``lax.scan``, ``"auto"`` = kernel on TPU / scan elsewhere) lives in
+:mod:`repro.core.backend`, not here; the engine just submits tiles.  Weights
+are jit *arguments*, not closure constants, so
 :meth:`BatchedEngine.update_weights` (serving a network that is still
-learning online) never recompiles.
+learning online) never recompiles — and because an
+:class:`~repro.core.backend.ExecutionBackend` instance can be passed in
+directly (``BatchedEngine.from_learner`` does exactly that), the engine and
+a live :class:`~repro.core.controller.OnlineLearner` share one jit cache:
+train, swap weights, serve, no recompile.
 """
 
 from __future__ import annotations
@@ -36,9 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import eprop
-from repro.core.rsnn import RSNNConfig, merge_trainable
-from repro.kernels import ops
+from repro.core.backend import BackendLike, as_backend
+from repro.core.rsnn import RSNNConfig
 from repro.serve import batching
 from repro.serve.scheduler import BatchTile, BucketingScheduler
 
@@ -95,7 +89,9 @@ class BatchedEngine:
         ``{"w_in", "w_rec", "w_out"}`` (+ optional scalar ``"alpha"``) — the
         same pytree :class:`~repro.core.controller.OnlineLearner` trains.
     backend:
-        ``"kernel" | "scan" | "auto"`` (see module docstring).
+        ``"kernel" | "scan" | "auto"``, or an existing
+        :class:`~repro.core.backend.ExecutionBackend` to share its jit cache
+        (the online-learning-while-serving configuration).
     max_batch:
         Batch-tile cap; defaults to the VMEM budget
         (:func:`repro.serve.batching.max_batch_for`).
@@ -106,94 +102,46 @@ class BatchedEngine:
         cfg: RSNNConfig,
         params: Dict[str, jax.Array],
         *,
-        backend: str = "auto",
+        backend: BackendLike = "auto",
         max_batch: Optional[int] = None,
         tick_granularity: int = 32,
         vmem_budget: int = batching.DEFAULT_VMEM_BUDGET,
         clock: Callable[[], float] = time.monotonic,
     ):
-        if backend == "auto":
-            backend = "kernel" if jax.default_backend() == "tpu" else "scan"
-        assert backend in ("kernel", "scan"), backend
         self.cfg = cfg
-        self.backend = backend
+        alpha = float(np.asarray(params.get("alpha", cfg.neuron.alpha)))
+        self.engine = as_backend(cfg, backend, alpha=alpha)
+        self.backend = self.engine.backend
         self.max_batch = max_batch or batching.max_batch_for(cfg, vmem_budget)
         assert self.max_batch <= batching.KERNEL_SAMPLE_CAP
         self.tick_granularity = tick_granularity
         self._clock = clock
-        self._alpha = float(np.asarray(params.get("alpha", cfg.neuron.alpha)))
         self._weights = {
-            k: jnp.asarray(params[k]) for k in ("w_in", "w_rec", "w_out")
+            k: jnp.asarray(v)
+            for k, v in params.items()
+            if k in ("w_in", "w_rec", "w_out", "b_fb")
         }
-        self._fwd_cache: Dict[Tuple[int, int], Callable] = {}
         self.scheduler = BucketingScheduler(
             self.max_batch, tick_granularity, clock=clock
         )
 
     @classmethod
     def from_learner(cls, learner, **kw) -> "BatchedEngine":
-        """Serve an :class:`~repro.core.controller.OnlineLearner`'s network."""
+        """Serve an :class:`~repro.core.controller.OnlineLearner`'s network
+        through the learner's own execution backend — shared jit cache, so
+        ``update_weights(learner.weights)`` mid-training re-uses the exact
+        programs the learner compiled (and vice versa)."""
+        kw.setdefault("backend", learner.backend)
         return cls(learner.cfg, learner.inference_params(), **kw)
 
     def update_weights(self, weights: Dict[str, jax.Array]) -> None:
         """Swap in newly-trained weights (no recompilation — weights are
         jit arguments)."""
         self._weights = {
-            k: jnp.asarray(weights[k]) for k in ("w_in", "w_rec", "w_out")
+            k: jnp.asarray(v)
+            for k, v in weights.items()
+            if k in ("w_in", "w_rec", "w_out", "b_fb")
         }
-
-    # ---------------------------------------------------------------- forward
-
-    def _rec_mask(self) -> jnp.ndarray:
-        if self.cfg.eprop.mask_self_recurrence:
-            return 1.0 - jnp.eye(self.cfg.n_hid, dtype=jnp.float32)
-        return jnp.ones((self.cfg.n_hid, self.cfg.n_hid), jnp.float32)
-
-    def _forward(self, num_ticks: int, batch: int) -> Callable:
-        """jit'd ``fn(weights, raster (T,B,N), valid (T,B)) -> acc_y (B,O)``,
-        cached per tile shape."""
-        key = (num_ticks, batch)
-        fn = self._fwd_cache.get(key)
-        if fn is not None:
-            return fn
-        ncfg, ecfg = self.cfg.neuron, self.cfg.eprop
-        alpha = self._alpha
-        rec_mask = self._rec_mask()
-
-        if self.backend == "kernel":
-
-            def raw(weights, raster, valid):
-                out = ops.rsnn_forward(
-                    raster,
-                    weights["w_in"],
-                    weights["w_rec"] * rec_mask,
-                    weights["w_out"],
-                    alpha=alpha,
-                    kappa=ncfg.kappa,
-                    v_th=ncfg.v_th,
-                    reset=ncfg.reset,
-                    boxcar_width=ncfg.boxcar_width,
-                )
-                w_inf = (
-                    valid[..., None]
-                    if ecfg.infer_window == "valid"
-                    else jnp.ones_like(valid)[..., None]
-                )
-                return (out["y"] * w_inf).sum(axis=0)
-
-        else:
-
-            def raw(weights, raster, valid):
-                params = merge_trainable(
-                    {"alpha": jnp.asarray(alpha, raster.dtype)}, weights
-                )
-                return eprop.run_sample_inference(params, raster, valid, ncfg, ecfg)[
-                    "acc_y"
-                ]
-
-        fn = jax.jit(raw)
-        self._fwd_cache[key] = fn
-        return fn
 
     # ----------------------------------------------------------------- serving
 
@@ -206,9 +154,10 @@ class BatchedEngine:
         b_live = len(events)
         b_pad = batching.padded_batch_size(b_live, self.max_batch)
         raster, valid = batching.pad_batch(raster, valid, b_pad)
-        fn = self._forward(tile.num_ticks, b_pad)
-        acc_y = fn(self._weights, jnp.asarray(raster), jnp.asarray(valid))
-        acc_y = np.asarray(jax.block_until_ready(acc_y))[:b_live]
+        out = self.engine.inference(
+            self._weights, jnp.asarray(raster), jnp.asarray(valid)
+        )
+        acc_y = np.asarray(jax.block_until_ready(out["acc_y"]))[:b_live]
         t_done = self._clock()
         return [
             ServeResult(
@@ -249,7 +198,9 @@ class BatchedEngine:
                 batches += 1
         wall = self._clock() - t0
         results.sort(key=lambda r: r.rid)
-        stats = ServeStats.collect(results, wall, batches, len(self._fwd_cache))
+        stats = ServeStats.collect(
+            results, wall, batches, self.engine.compiled_shapes("inference")
+        )
         return results, stats
 
     def warmup(self, num_ticks: int, batch: Optional[int] = None) -> None:
@@ -257,7 +208,8 @@ class BatchedEngine:
         compile time; also useful before latency-sensitive serving)."""
         b = batching.padded_batch_size(batch or self.max_batch, self.max_batch)
         t = batching.bucket_ticks(num_ticks, self.tick_granularity)
-        fn = self._forward(t, b)
         raster = jnp.zeros((t, b, self.cfg.n_in), jnp.float32)
         valid = jnp.ones((t, b), jnp.float32)
-        jax.block_until_ready(fn(self._weights, raster, valid))
+        jax.block_until_ready(
+            self.engine.inference(self._weights, raster, valid)["acc_y"]
+        )

@@ -1,2 +1,3 @@
 from repro.train.train_step import make_train_step, opt_state_specs  # noqa: F401
 from repro.train.serve_step import make_decode_step, make_prefill  # noqa: F401
+from repro.train.eprop_step import epoch_batches, make_eprop_commit_step  # noqa: F401

@@ -1,0 +1,79 @@
+"""e-prop batch-commit step for the fault-tolerant :class:`~repro.train.trainer.Trainer`.
+
+The generic trainer wants ``step_fn(params, opt_state, batch) -> (params,
+opt_state, metrics)`` with finite ``loss``/``grad_norm`` metrics (NaN steps
+are rolled back, checkpoints are cut on a cadence).  This module adapts the
+SNN online-learning stack to that interface: one END_B batch commit per
+trainer step, executed through a shared
+:class:`~repro.core.backend.ExecutionBackend` — the same object a
+:class:`repro.serve.BatchedEngine` can serve live weights from.
+
+``loss`` is the mean cross-entropy of the accumulated LI readout (the
+quantity the e-prop learning signal is derived from) and ``grad_norm`` the
+global norm of the committed ``dw`` — so the trainer's non-finite-step
+rejection guards the weight SRAM exactly like it guards the LM substrate.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import BackendLike, as_backend
+from repro.core.controller import batch_commit_update
+from repro.core.rsnn import RSNNConfig
+from repro.optim.eprop_opt import EpropSGD
+
+
+def make_eprop_commit_step(
+    cfg: RSNNConfig, opt: EpropSGD, backend: BackendLike = "auto"
+) -> Callable:
+    """Build a Trainer-compatible END_B step over ``(S, T, N)`` device batches.
+
+    Note: float-weight configurations only — the trainer step carries no rng,
+    so ``stochastic_round`` commits are not supported here (use
+    :class:`~repro.core.controller.OnlineLearner` for those).
+    """
+    assert not opt.cfg.stochastic_round, (
+        "Trainer steps carry no rng key; stochastic rounding needs OnlineLearner"
+    )
+    engine = as_backend(cfg, backend)
+
+    @jax.jit
+    def step(weights, opt_state, batch):
+        new_w, new_opt, dw, metrics = batch_commit_update(
+            cfg, opt, engine, weights, opt_state, batch
+        )
+        y_star = jax.nn.one_hot(batch["label"], cfg.n_out)
+        logp = jax.nn.log_softmax(metrics["acc_y"])
+        loss = -(logp * y_star).sum(axis=-1).mean()
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(dw))
+        )
+        acc = (metrics["pred"] == batch["label"]).mean()
+        return new_w, new_opt, {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "accuracy": acc,
+            "spike_rate": metrics["spike_rate"],
+        }
+
+    return step
+
+
+def epoch_batches(
+    pipeline, split: str = "train", max_epochs: Optional[int] = None
+) -> Iterator[dict]:
+    """Flatten a pipeline's epochs into the endless batch iterator the
+    Trainer consumes (``max_epochs`` bounds it for tests)."""
+    epoch = 0
+    while max_epochs is None or epoch < max_epochs:
+        yielded = False
+        for batch in pipeline.batches(split, epoch):
+            yielded = True
+            yield batch
+        if not yielded:
+            return
+        epoch += 1

@@ -1,8 +1,6 @@
 """Runtime layers: checkpointing, elastic reshard, trainer fault drills,
 pipelines, compression, optimizers."""
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,9 +12,7 @@ from repro.distributed.sharding import BASE_RULES, ShardingRules
 from repro.launch.mesh import make_debug_mesh
 from repro.optim.adamw import AdamW, AdamWConfig, schedule
 from repro.optim.compression import (
-    compressed_psum_mean,
     dequantize_int8,
-    init_residual,
     quantize_int8,
     wire_bytes_f32_allreduce,
     wire_bytes_int8_allgather,
