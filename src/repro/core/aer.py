@@ -76,12 +76,21 @@ def encode_sample(
     if end_tick is None:
         end_tick = T - 1
     assert T - 1 <= MAX_TICK and N - 1 <= MAX_ADDR
+    # Validate + mask the label/end fields like pack() does.  The seed code
+    # OR'd them in raw, so an out-of-range label or tick bled into the type
+    # byte and silently corrupted the word stream.
+    label, label_tick, end_tick = int(label), int(label_tick), int(end_tick)
+    assert 0 <= label <= MAX_ADDR, f"label {label} exceeds the 12-bit field"
+    assert 0 <= label_tick <= MAX_TICK, f"label_tick {label_tick} exceeds 12 bits"
+    assert 0 <= end_tick <= MAX_TICK, f"end_tick {end_tick} exceeds 12 bits"
     t_idx, n_idx = np.nonzero(raster)
     words = (np.uint32(EVT_SPIKE) << 24) | (n_idx.astype(np.uint32) << 12) | t_idx.astype(
         np.uint32
     )
-    label_word = np.uint32((EVT_LABEL << 24) | (int(label) << 12) | int(label_tick))
-    end_word = np.uint32((EVT_END << 24) | int(end_tick))
+    label_word = np.uint32(
+        (EVT_LABEL << 24) | ((label & MAX_ADDR) << 12) | (label_tick & MAX_TICK)
+    )
+    end_word = np.uint32((EVT_END << 24) | (end_tick & MAX_TICK))
     # stable sort by tick; label sorts within its tick after spikes (type order
     # is irrelevant to the decode semantics).
     all_words = np.concatenate([words, np.array([label_word], np.uint32)])

@@ -36,16 +36,29 @@ Backends:
   ``forward_traces``/``eprop_update`` are factored-only by construction.
 
 ``backend="auto"`` resolves to ``"kernel"`` on TPU and ``"scan"`` elsewhere.
+
+Hardware-equivalence mode: pass ``quant=QuantizedMode(...)`` (or set it on
+``cfg.neuron.quant``) and every tile executes ReckOn's fixed-point datapath —
+weights snapped to their 8-bit SRAM codes, membrane integrate / leak /
+threshold / reset on the saturating 12-bit grid, leak registers as
+``reg/256`` multipliers.  Both backends then reproduce the integer golden
+reference (:mod:`repro.core.quant_ref`) tick-for-tick; the e-prop *traces*
+stay float (the chip's trace SRAM is wider than the commit grid) and the
+learning signal is evaluated on ``y / threshold`` so lr/clip settings carry
+over from the float model.  Readout accumulators (``acc_y``, serving
+logits) are then in membrane-grid units — argmax is unaffected.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import eprop
+from repro.core.quant import QuantizedMode
 from repro.core.rsnn import RSNNConfig
 from repro.kernels import ops
 from repro.kernels.rsnn_step import KERNEL_SAMPLE_CAP
@@ -75,10 +88,20 @@ class ExecutionBackend:
         Scalar membrane decay baked into the compiled programs (the single
         "alphas LSBs" SPI register).  Defaults to ``cfg.neuron.alpha``; the
         factored e-prop maths requires it scalar either way.
+    quant:
+        Hardware-equivalence mode: a :class:`~repro.core.quant.QuantizedMode`
+        describing the chip's fixed-point grids/registers.  Defaults to
+        ``cfg.neuron.quant``; passing it here overlays a float config
+        without rebuilding it.  When active, ``alpha`` is pinned to the
+        register value ``alpha_reg/256``.
     """
 
     def __init__(
-        self, cfg: RSNNConfig, backend: str = "auto", alpha: Optional[float] = None
+        self,
+        cfg: RSNNConfig,
+        backend: str = "auto",
+        alpha: Optional[float] = None,
+        quant: Optional[QuantizedMode] = None,
     ):
         self.cfg = cfg
         self.backend = resolve_backend(backend)
@@ -90,7 +113,20 @@ class ExecutionBackend:
                 "kernel backend is factored-only; use backend='scan' for "
                 f"eprop mode={cfg.eprop.mode!r}"
             )
+        self.quant = quant if quant is not None else cfg.neuron.quant
+        # the neuron config every scan/kernel tile actually runs against
+        self._ncfg = (
+            cfg.neuron
+            if self.quant == cfg.neuron.quant
+            else dataclasses.replace(cfg.neuron, quant=self.quant)
+        )
         self.alpha = float(cfg.neuron.alpha if alpha is None else alpha)
+        if self.quant is not None:
+            assert alpha is None or abs(float(alpha) - self.quant.alpha) < 1e-9, (
+                "quantized mode: alpha is driven by alpha_reg "
+                f"({self.quant.alpha}), caller passed {alpha}"
+            )
+            self.alpha = self.quant.alpha
         if cfg.eprop.mask_self_recurrence:
             self._mask = 1.0 - jnp.eye(cfg.n_hid, dtype=jnp.float32)
         else:
@@ -100,6 +136,7 @@ class ExecutionBackend:
         self._jit_forward = jax.jit(self._forward_impl)
         self._jit_update = jax.jit(self._update_impl)
         self._jit_train = jax.jit(self._train_impl)
+        self._jit_dynamics = jax.jit(self._dynamics_impl)
 
     # ------------------------------------------------------------- plumbing
 
@@ -133,18 +170,34 @@ class ExecutionBackend:
         )
 
     def _kernel_forward(self, weights, raster):
-        ncfg = self.cfg.neuron
+        ncfg, q = self._ncfg, self.quant
+        if q is not None:
+            w_in = q.to_membrane(weights["w_in"])
+            w_rec = q.to_membrane(weights["w_rec"]) * self._mask
+            w_out = q.to_membrane(weights["w_out"])
+        else:
+            w_in = weights["w_in"]
+            w_rec = weights["w_rec"] * self._mask
+            w_out = weights["w_out"]
         return ops.rsnn_forward(
             raster,
-            weights["w_in"],
-            weights["w_rec"] * self._mask,
-            weights["w_out"],
+            w_in,
+            w_rec,
+            w_out,
             alpha=self.alpha,
             kappa=ncfg.kappa,
             v_th=ncfg.v_th,
             reset=ncfg.reset,
             boxcar_width=ncfg.boxcar_width,
+            quant=q,
         )
+
+    def _y_err(self, y: jax.Array) -> jax.Array:
+        """Readout values as the error path sees them: normalised units in
+        quantized mode (``y / threshold``), identity otherwise."""
+        if self.quant is None:
+            return y
+        return y * (1.0 / float(self.quant.threshold))
 
     def _infer_weight(self, valid: jax.Array) -> jax.Array:
         if self.cfg.eprop.infer_window == "valid":
@@ -154,7 +207,7 @@ class ExecutionBackend:
     # ------------------------------------------------------------ inference
 
     def _inference_impl(self, weights, raster, valid):
-        ncfg, ecfg = self.cfg.neuron, self.cfg.eprop
+        ncfg, ecfg = self._ncfg, self.cfg.eprop
         if self.backend == "kernel":
             out = self._kernel_forward(weights, raster)
             acc_y = (out["y"] * self._infer_weight(valid)).sum(axis=0)
@@ -177,10 +230,11 @@ class ExecutionBackend:
     # ------------------------------------------------------- forward traces
 
     def _forward_impl(self, weights, raster, y_star, valid):
-        ncfg, ecfg = self.cfg.neuron, self.cfg.eprop
+        ncfg, ecfg = self._ncfg, self.cfg.eprop
         if self.backend == "kernel":
             out = self._kernel_forward(weights, raster)
-            err = eprop.readout_error(out["y"], y_star, ecfg) * valid[..., None]
+            err = eprop.readout_error(
+                self._y_err(out["y"]), y_star, ecfg) * valid[..., None]
             return {
                 "h": out["h"],
                 "xbar": out["xbar"],
@@ -213,7 +267,7 @@ class ExecutionBackend:
     # --------------------------------------------------------- eprop update
 
     def _update_impl(self, weights, traces):
-        ncfg, ecfg = self.cfg.neuron, self.cfg.eprop
+        ncfg, ecfg = self._ncfg, self.cfg.eprop
         if self.backend == "kernel":
             dw_in, dw_rec, dw_out = ops.eprop_update(
                 traces["h"], traces["xbar"], traces["pbar"], traces["zbar"],
@@ -236,7 +290,7 @@ class ExecutionBackend:
     # ----------------------------------------------------------- train tile
 
     def _train_impl(self, weights, raster, y_star, valid):
-        ncfg, ecfg = self.cfg.neuron, self.cfg.eprop
+        ncfg, ecfg = self._ncfg, self.cfg.eprop
         if self.backend == "kernel":
             traces = self._forward_impl(weights, raster, y_star, valid)
             dw = self._update_impl(weights, traces)
@@ -268,12 +322,39 @@ class ExecutionBackend:
         self._note("train_tile", raster.shape)
         return self._jit_train(weights, raster, y_star, valid)
 
+    # ------------------------------------------------------------- dynamics
+
+    def _dynamics_impl(self, weights, raster):
+        if self.backend == "kernel":
+            out = self._kernel_forward(weights, raster)
+            return {"v": out["v"], "z": out["z"], "y": out["y"]}
+        params = self._merge(weights, raster.dtype)
+        out = eprop.forward_dynamics(params, raster, self._ncfg, self.cfg.eprop)
+        return {"v": out["v"], "z": out["z"], "y": out["y"]}
+
+    def dynamics(
+        self, weights: Dict[str, jax.Array], raster: jax.Array
+    ) -> Dict[str, jax.Array]:
+        """Full state trajectories for one ``(T, B)`` tile: post-reset
+        membrane ``v`` (T, B, H), spikes ``z``, readout ``y`` (T, B, O).
+
+        The hardware-equivalence probe: in quantized mode both backends
+        reproduce the integer golden reference
+        (:func:`repro.core.quant_ref.golden_forward`) exactly on these —
+        asserted in ``tests/test_quant_equivalence.py``.
+        """
+        self._note("dynamics", raster.shape)
+        return self._jit_dynamics(weights, raster)
+
 
 BackendLike = Union[str, ExecutionBackend]
 
 
 def as_backend(
-    cfg: RSNNConfig, backend: BackendLike, alpha: Optional[float] = None
+    cfg: RSNNConfig,
+    backend: BackendLike,
+    alpha: Optional[float] = None,
+    quant: Optional[QuantizedMode] = None,
 ) -> ExecutionBackend:
     """Coerce a backend name or an existing :class:`ExecutionBackend`.
 
@@ -283,8 +364,11 @@ def as_backend(
     """
     if isinstance(backend, ExecutionBackend):
         assert backend.cfg == cfg, "shared backend built for a different config"
-        assert alpha is None or backend.alpha == float(alpha), (
-            "shared backend baked a different alpha than the caller's params"
+        assert alpha is None or backend.alpha == float(alpha) or (
+            backend.quant is not None and abs(backend.quant.alpha - float(alpha)) < 1e-9
+        ), "shared backend baked a different alpha than the caller's params"
+        assert quant is None or backend.quant == quant, (
+            "shared backend runs a different quantized mode than the caller's"
         )
         return backend
-    return ExecutionBackend(cfg, backend, alpha=alpha)
+    return ExecutionBackend(cfg, backend, alpha=alpha, quant=quant)

@@ -25,6 +25,16 @@ Two pipeline modes mirror the paper's two SoCs (see ``data/pipeline.py``):
 ``X-HEEP`` — dataset resident on device, whole epoch is one jit; ``ARM`` —
 dataset streamed in batches with a BATCH_DONE/NEW_BATCH handshake.
 
+Hardware-equivalence mode: configs with ``cfg.neuron.quant`` set (e.g.
+``Presets.braille(quantized=True)``) run every forward through ReckOn's
+fixed-point datapath — the backend picks the mode up from the config, and
+pairing it with a quantized :class:`~repro.optim.eprop_opt.EpropSGD`
+(``EpropSGDConfig(quant=WEIGHT_SPEC, stochastic_round=True)``) makes the
+whole END_S/END_B walk chip-faithful: 8-bit SRAM weights, accumulate-then-
+round commits, integer membranes.  A float optimizer over a quantized
+config is quantization-aware training instead (float master weights,
+quantized datapath).
+
 Inference entries: :func:`make_infer_fn` is the *sequential* per-sample
 classify (the FSM's TEST=1 walk, and the baseline
 ``benchmarks/bench_serve.py`` measures against);
@@ -215,7 +225,9 @@ def make_batch_infer_fn(cfg: RSNNConfig):
     This is the exact per-sample math of :func:`make_eval_batch_fn`
     vectorized over the batch axis — the oracle the serving runtime
     (:mod:`repro.serve.engine`) is tested against, and the ``"scan"``
-    backend of :class:`repro.core.backend.ExecutionBackend`.
+    backend of :class:`repro.core.backend.ExecutionBackend`.  Quantized
+    configs thread through ``cfg.neuron.quant`` (``acc_y`` is then in
+    membrane-grid units, like the backend's).
     """
 
     @jax.jit

@@ -36,6 +36,7 @@ Both modes share the forward LIF/LI dynamics from :mod:`repro.core.neuron`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Tuple
 
 import jax
@@ -73,6 +74,37 @@ def _feedback(params: Dict[str, jax.Array], cfg: EpropConfig) -> jax.Array:
     return params["w_out"] if cfg.feedback == "symmetric" else params["b_fb"]
 
 
+def _datapath(params: Dict[str, jax.Array], ncfg: NeuronConfig, ecfg: EpropConfig):
+    """Resolve the dynamics-side weights + readout error scale per datapath.
+
+    Float mode: weights as-is, matmuls via ``@``, errors straight off ``y``.
+    Quantized mode (``ncfg.quant``): weights are snapped to their SRAM codes
+    and scaled onto the membrane grid (integer values in float32 — exact),
+    matmuls pin ``Precision.HIGHEST`` so the integer accumulations stay
+    exact on TPU, and the readout error is evaluated on ``y / threshold``
+    (normalised units) so learning-signal magnitudes — and therefore lr /
+    clip settings — carry over from the float model.
+
+    Returns ``(w_in, w_rec_masked, w_out, rec_mask, y_scale, dot)``.
+    """
+    rec_mask = _rec_mask(params["w_rec"], ecfg)
+    q = ncfg.quant
+    if q is None:
+        return (
+            params["w_in"], params["w_rec"] * rec_mask, params["w_out"],
+            rec_mask, 1.0, lambda a, b: a @ b,
+        )
+    dot = functools.partial(jnp.dot, precision=jax.lax.Precision.HIGHEST)
+    return (
+        q.to_membrane(params["w_in"]),
+        q.to_membrane(params["w_rec"]) * rec_mask,
+        q.to_membrane(params["w_out"]),
+        rec_mask,
+        1.0 / float(q.threshold),
+        dot,
+    )
+
+
 # ---------------------------------------------------------------------------
 # exact mode — per-synapse trace SRAM, tick-by-tick (faithful)
 # ---------------------------------------------------------------------------
@@ -98,8 +130,7 @@ def run_sample_exact(
 
     alpha = jnp.broadcast_to(jnp.asarray(params["alpha"], dtype), (H,))
     kappa = jnp.asarray(ncfg.kappa, dtype)
-    rec_mask = _rec_mask(params["w_rec"], ecfg)
-    w_rec = params["w_rec"] * rec_mask
+    w_in_d, w_rec_d, w_out_d, rec_mask, y_scale, dot = _datapath(params, ncfg, ecfg)
     b_fb = _feedback(params, ecfg)
 
     def tick(carry, inp):
@@ -107,9 +138,9 @@ def run_sample_exact(
          dw_in, dw_rec, dw_out, acc_y, n_spk) = carry
         x_t, valid_t = inp
 
-        current = x_t @ params["w_in"] + z @ w_rec
+        current = dot(x_t, w_in_d) + dot(z, w_rec_d)
         v_new, z_new, v_pre = lif_step(v, current, alpha, ncfg)
-        y_new = li_step(y, z_new @ params["w_out"], kappa)
+        y_new = li_step(y, dot(z_new, w_out_d), kappa, ncfg)
 
         h = pseudo_derivative(v_pre, ncfg)                       # (B, H)
         eps_in = alpha[None, None, :] * eps_in + x_t[:, :, None]   # (B, N_in, H)
@@ -118,7 +149,8 @@ def run_sample_exact(
         ebar_rec = kappa * ebar_rec + h[:, None, :] * eps_rec
         zbar = kappa * zbar + z_new
 
-        err = readout_error(y_new, y_star, ecfg) * valid_t[:, None]   # (B, N_out)
+        # y_scale is 1.0 in float mode (exact identity multiply)
+        err = readout_error(y_new * y_scale, y_star, ecfg) * valid_t[:, None]
         L = err @ b_fb.T                                              # (B, H)
 
         dw_in = dw_in + jnp.einsum("bih,bh->ih", ebar_in, L)
@@ -177,20 +209,19 @@ def forward_traces(
     alpha = jnp.asarray(params["alpha"], dtype)
     assert alpha.ndim == 0, "factored e-prop requires scalar alpha (see module doc)"
     kappa = jnp.asarray(ncfg.kappa, dtype)
-    rec_mask = _rec_mask(params["w_rec"], ecfg)
-    w_rec = params["w_rec"] * rec_mask
+    w_in_d, w_rec_d, w_out_d, _, y_scale, dot = _datapath(params, ncfg, ecfg)
 
     def tick(carry, inp):
         v, z, y, xbar, pbar, zbar = carry
         x_t, valid_t = inp
-        current = x_t @ params["w_in"] + z @ w_rec
+        current = dot(x_t, w_in_d) + dot(z, w_rec_d)
         v_new, z_new, v_pre = lif_step(v, current, alpha, ncfg)
-        y_new = li_step(y, z_new @ params["w_out"], kappa)
+        y_new = li_step(y, dot(z_new, w_out_d), kappa, ncfg)
         h = pseudo_derivative(v_pre, ncfg)
         xbar = alpha * xbar + x_t        # alpha-filtered input trace   (B, N_in)
         pbar = alpha * pbar + z          # alpha-filtered presyn spikes (B, H)
         zbar = kappa * zbar + z_new      # kappa-filtered spikes        (B, H)
-        err = readout_error(y_new, y_star, ecfg) * valid_t[:, None]
+        err = readout_error(y_new * y_scale, y_star, ecfg) * valid_t[:, None]
         w_inf = valid_t[:, None] if ecfg.infer_window == "valid" else jnp.ones_like(valid_t)[:, None]
         outs = (h, xbar, pbar, zbar, err, y_new * w_inf, z_new.sum())
         return (v_new, z_new, y_new, xbar, pbar, zbar), outs
@@ -285,14 +316,14 @@ def run_sample_inference(
     dtype = params["w_in"].dtype
     alpha = jnp.broadcast_to(jnp.asarray(params["alpha"], dtype), (H,))
     kappa = jnp.asarray(ncfg.kappa, dtype)
-    w_rec = params["w_rec"] * _rec_mask(params["w_rec"], ecfg)
+    w_in_d, w_rec_d, w_out_d, _, _, dot = _datapath(params, ncfg, ecfg)
 
     def tick(carry, inp):
         v, z, y, acc_y, n_spk = carry
         x_t, valid_t = inp
-        current = x_t @ params["w_in"] + z @ w_rec
+        current = dot(x_t, w_in_d) + dot(z, w_rec_d)
         v_new, z_new, _ = lif_step(v, current, alpha, ncfg)
-        y_new = li_step(y, z_new @ params["w_out"], kappa)
+        y_new = li_step(y, dot(z_new, w_out_d), kappa, ncfg)
         w_inf = valid_t[:, None] if ecfg.infer_window == "valid" else 1.0
         return (v_new, z_new, y_new, acc_y + y_new * w_inf, n_spk + z_new.sum()), None
 
@@ -305,3 +336,37 @@ def run_sample_inference(
         "pred": jnp.argmax(acc_y, axis=-1),
         "spike_rate": n_spk / (T * B * H),
     }
+
+
+def forward_dynamics(
+    params: Dict[str, jax.Array],
+    raster: jax.Array,      # (T, B, N_in)
+    ncfg: NeuronConfig,
+    ecfg: EpropConfig,
+) -> Dict[str, jax.Array]:
+    """Forward pass emitting the full state trajectories — the probe the
+    bit-true golden-reference equivalence tests drive.
+
+    Returns ``{"v": post-reset membrane (T, B, H), "v_pre": pre-reset
+    membrane, "z": spikes, "y": readout (T, B, O)}``.  In quantized mode
+    every value is an integer on the membrane grid (carried in float32).
+    """
+    T, B, n_in = raster.shape
+    H = params["w_rec"].shape[0]
+    n_out = params["w_out"].shape[1]
+    dtype = params["w_in"].dtype
+    alpha = jnp.broadcast_to(jnp.asarray(params["alpha"], dtype), (H,))
+    kappa = jnp.asarray(ncfg.kappa, dtype)
+    w_in_d, w_rec_d, w_out_d, _, _, dot = _datapath(params, ncfg, ecfg)
+
+    def tick(carry, x_t):
+        v, z, y = carry
+        current = dot(x_t, w_in_d) + dot(z, w_rec_d)
+        v_new, z_new, v_pre = lif_step(v, current, alpha, ncfg)
+        y_new = li_step(y, dot(z_new, w_out_d), kappa, ncfg)
+        return (v_new, z_new, y_new), (v_new, v_pre, z_new, y_new)
+
+    carry0 = (jnp.zeros((B, H), dtype), jnp.zeros((B, H), dtype),
+              jnp.zeros((B, n_out), dtype))
+    _, (v, v_pre, z, y) = jax.lax.scan(tick, carry0, raster)
+    return {"v": v, "v_pre": v_pre, "z": z, "y": y}

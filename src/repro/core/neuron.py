@@ -19,10 +19,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.quant import QuantizedMode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,17 +36,33 @@ class NeuronConfig:
     surrogate: str = "boxcar"      # "boxcar" | "triangular"
     boxcar_width: float = 0.5      # half-width of the boxcar, in units of v_th
     gamma: float = 0.3             # surrogate damping (Bellec et al.)
+    # Hardware-equivalence mode: when set, lif_step/li_step execute ReckOn's
+    # fixed-point datapath (12-bit saturating membrane grid, floor-leak via
+    # the 8-bit registers) instead of the float dynamics, with v_th replaced
+    # by the raw threshold register.  Membranes, currents and weights are
+    # then integer values carried in float32 (see repro.core.quant).
+    quant: Optional[QuantizedMode] = None
+
+    def effective_v_th(self) -> float:
+        """The spiking threshold the datapath compares against: the raw
+        membrane-grid register in quantized mode, ``v_th`` otherwise."""
+        return float(self.quant.threshold) if self.quant is not None else self.v_th
 
 
 def pseudo_derivative(v_pre: jax.Array, cfg: NeuronConfig) -> jax.Array:
-    """Surrogate d z / d v evaluated at the pre-reset membrane potential."""
+    """Surrogate d z / d v evaluated at the pre-reset membrane potential.
+
+    In quantized mode ``v_pre`` lives on the membrane-grid so the window is
+    evaluated around the raw threshold register — same boxcar, chip units.
+    """
+    v_th = cfg.effective_v_th()
     if cfg.surrogate == "boxcar":
-        return (jnp.abs(v_pre - cfg.v_th) < cfg.boxcar_width * cfg.v_th).astype(
+        return (jnp.abs(v_pre - v_th) < cfg.boxcar_width * v_th).astype(
             v_pre.dtype
         )
     if cfg.surrogate == "triangular":
         return cfg.gamma * jnp.maximum(
-            0.0, 1.0 - jnp.abs(v_pre - cfg.v_th) / cfg.v_th
+            0.0, 1.0 - jnp.abs(v_pre - v_th) / v_th
         ).astype(v_pre.dtype)
     raise ValueError(f"unknown surrogate {cfg.surrogate!r}")
 
@@ -84,11 +102,22 @@ def lif_step(
       ``(v_new, z_new, v_pre)`` — post-reset membrane, spikes, and the
       pre-reset membrane (the value the surrogate derivative is evaluated at,
       mirroring what ReckOn's update pipeline exposes to the e-prop unit).
+
+    With ``cfg.quant`` set this is the chip's fixed-point pipeline instead:
+    ``v_pre = sat(floor(v * alpha_reg/256) + current)`` on the signed
+    membrane grid, threshold/reset against the raw threshold register
+    (``alpha`` is ignored — the register drives the leak).
     """
-    v_pre = alpha * v + current
-    z = (v_pre >= cfg.v_th).astype(v.dtype)
+    q = cfg.quant
+    if q is not None:
+        v_pre = q.sat(q.leak(v, q.alpha_reg) + current)
+        v_th = jnp.asarray(float(q.threshold), v.dtype)
+    else:
+        v_pre = alpha * v + current
+        v_th = cfg.v_th
+    z = (v_pre >= v_th).astype(v.dtype)
     if cfg.reset == "sub":
-        v_new = v_pre - z * cfg.v_th
+        v_new = v_pre - z * v_th
     elif cfg.reset == "zero":
         v_new = v_pre * (1.0 - z)
     else:
@@ -100,6 +129,7 @@ def lif_step_surrogate(
     v: jax.Array, current: jax.Array, alpha: jax.Array, cfg: NeuronConfig
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """LIF step using the surrogate-gradient spike (differentiable, for BPTT)."""
+    assert cfg.quant is None, "the BPTT reference path is float-only"
     v_pre = alpha * v + current
     z = spike(v_pre, jnp.asarray(cfg.v_th, v.dtype), cfg)
     if cfg.reset == "sub":
@@ -109,6 +139,19 @@ def lif_step_surrogate(
     return v_new, z, v_pre
 
 
-def li_step(y: jax.Array, current: jax.Array, kappa: jax.Array) -> jax.Array:
-    """One leaky-integrator readout step: ``y' = kappa * y + current``."""
+def li_step(
+    y: jax.Array,
+    current: jax.Array,
+    kappa: jax.Array,
+    cfg: Optional[NeuronConfig] = None,
+) -> jax.Array:
+    """One leaky-integrator readout step: ``y' = kappa * y + current``.
+
+    Quantized mode (``cfg.quant`` set): the readout membranes live on the
+    same saturating integer grid as the hidden layer, leaked through the
+    8-bit kappa register — ``y' = sat(floor(y * kappa_reg/256) + current)``.
+    """
+    q = cfg.quant if cfg is not None else None
+    if q is not None:
+        return q.sat(q.leak(y, q.kappa_reg) + current)
     return kappa * y + current

@@ -80,10 +80,121 @@ class QuantSpec:
         return x + jax.lax.stop_gradient(self.round_nearest(x) - x)
 
 
-# Membrane-potential grid of the taped-out chip (12-bit signed integer grid,
-# threshold registers are raw integers on this grid).
-MEMBRANE_SPEC = QuantSpec(bits=16, frac=0)
+# Membrane-potential grid of the taped-out chip: 12-bit signed integer grid,
+# threshold registers are raw integers on this grid.  The paper's Braille
+# threshold 0x03F0 = 1008 must be representable (and is: v_max = 2047); the
+# seed carried a 16-bit grid here, which silently gave the membrane 16x the
+# chip's headroom — saturation behaviour was wrong (regression-tested in
+# tests/test_quant.py::test_membrane_spec_matches_chip).
+MEMBRANE_SPEC = QuantSpec(bits=12, frac=0)
 WEIGHT_SPEC = QuantSpec(bits=8, frac=4)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedMode:
+    """Bit-true configuration of ReckOn's fixed-point tick datapath.
+
+    This is the contract the hardware-equivalence execution mode implements
+    (``ExecutionBackend(cfg, quant=QuantizedMode(...))``), and the one the
+    integer golden reference (:mod:`repro.core.quant_ref`) is written
+    against:
+
+    * **membrane grid** — signed integers on ``membrane_spec``
+      (:data:`MEMBRANE_SPEC`: 12-bit on the taped-out chip), saturating
+      arithmetic.  Thresholds are raw integers on this grid (the paper
+      programs ``0x03F0`` = 1008 for Braille).
+    * **leakage** — 8-bit fractional multipliers: one leak step is
+      ``v <- floor(v * (reg & 0xFF) / 256)`` (the hardware's multiply +
+      arithmetic-shift-right-by-8, which floors toward -inf).
+    * **weight SRAM** — 8-bit signed codes on the ``weight_spec`` grid
+      (``Q(8, 4)``: float value ``k / 16``).  The datapath accumulates a
+      weight word onto the membrane with a fixed gain of
+      ``threshold >> weight_spec.frac`` membrane LSBs per weight LSB, so the
+      normalised float model (``v_th = 1.0``, weights on the ``Q(8,4)``
+      grid) and the integer model are *commensurate*: one weight LSB is
+      exactly ``1/2**frac`` of the threshold on both sides.  This is what
+      the paper's threshold value buys — ``0x03F0`` is divisible by 16
+      (asserted below).
+
+    All derived JAX helpers keep integer values in float32 carriers: every
+    quantity that appears in the datapath is an exact integer below 2**24,
+    where float32 arithmetic (add, multiply by ``reg/256``, floor, clip) is
+    exact — so the same Pallas kernels and ``lax.scan`` programs execute the
+    integer datapath without a dtype change, and match the NumPy int64
+    golden reference bit for bit (``tests/test_quant_equivalence.py``).
+    """
+
+    threshold: int = 0x03F0        # membrane-grid integer (SPI register)
+    alpha_reg: int = 0x0FE         # hidden-layer leak register ("alphas LSBs")
+    kappa_reg: int = 0x37          # readout leak register
+    membrane_spec: QuantSpec = MEMBRANE_SPEC
+    weight_spec: QuantSpec = WEIGHT_SPEC
+
+    def __post_init__(self):
+        assert self.membrane_spec.frac == 0, (
+            "the membrane grid is a raw integer grid (frac=0)"
+        )
+        assert 0 < self.threshold <= self.v_max, (
+            f"threshold {self.threshold:#x} not representable on the "
+            f"{self.membrane_spec.bits}-bit membrane grid (max {self.v_max})"
+        )
+        assert self.threshold % (1 << self.weight_spec.frac) == 0, (
+            f"threshold {self.threshold:#x} must be divisible by "
+            f"2**frac={1 << self.weight_spec.frac} so the weight grid lands "
+            "on whole membrane LSBs (the chip's 0x03F0 does)"
+        )
+
+    # ------------------------------------------------------------ membrane
+    @property
+    def v_min(self) -> int:
+        return int(self.membrane_spec.min_val)
+
+    @property
+    def v_max(self) -> int:
+        return int(self.membrane_spec.max_val)
+
+    # ------------------------------------------------------------ leakage
+    @property
+    def alpha(self) -> float:
+        """The float decay the registers encode (``reg/256``) — what the
+        normalised float model and the e-prop trace filters use."""
+        return float(self.alpha_reg & 0xFF) / 256.0
+
+    @property
+    def kappa(self) -> float:
+        return float(self.kappa_reg & 0xFF) / 256.0
+
+    def leak(self, v: jax.Array, reg: int) -> jax.Array:
+        """One hardware leak step: ``floor(v * reg / 256)``.
+
+        ``reg/256`` is an exact power-of-two-denominator float and
+        ``|v * reg| < 2**24``, so the float32 multiply is exact and the floor
+        reproduces the chip's arithmetic shift (floors toward -inf for
+        negative membranes, matching ``>> 8`` on two's complement).
+        """
+        return jnp.floor(v * (float(reg & 0xFF) / 256.0))
+
+    def sat(self, v: jax.Array) -> jax.Array:
+        """Saturate onto the signed membrane grid."""
+        return jnp.clip(v, float(self.v_min), float(self.v_max))
+
+    # ------------------------------------------------------------- weights
+    @property
+    def w_gain(self) -> int:
+        """Membrane LSBs one weight LSB contributes (integer by the
+        commensurability assert in ``__post_init__``)."""
+        return self.threshold >> self.weight_spec.frac
+
+    def weight_codes(self, w: jax.Array) -> jax.Array:
+        """Float weights → signed SRAM codes (integer-valued float32)."""
+        spec = self.weight_spec
+        lo = -(2.0 ** (spec.bits - 1))
+        hi = 2.0 ** (spec.bits - 1) - 1
+        return jnp.clip(jnp.round(jnp.asarray(w) / spec.lsb), lo, hi)
+
+    def to_membrane(self, w: jax.Array) -> jax.Array:
+        """Float weights → membrane-grid integers the datapath accumulates."""
+        return self.weight_codes(w) * float(self.w_gain)
 
 
 @dataclasses.dataclass(frozen=True)

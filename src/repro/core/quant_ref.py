@@ -1,0 +1,116 @@
+"""Integer golden reference for the quantized ReckOn tick datapath.
+
+This is the bit-true oracle of the hardware-equivalence execution mode: a
+plain NumPy / int64 walk of the chip's per-tick pipeline exactly as
+:class:`repro.core.quant.QuantizedMode` specifies it —
+
+  per tick t:
+    current  = x[t] @ W_in + z @ W_rec          (weight codes * w_gain, int)
+    v_pre    = sat( floor(v * alpha_reg / 256) + current )
+    z_new    = v_pre >= threshold
+    v        = v_pre - z_new * threshold        (reset="sub")
+             | v_pre * (1 - z_new)              (reset="zero")
+    y        = sat( floor(y * kappa_reg / 256) + z_new @ W_out )
+    acc_y   += y * valid[t]                     (TARGET_VALID readout window)
+
+with every quantity a signed integer on the 12-bit membrane grid and every
+saturation/floor exactly where the RTL puts it.  The quantized ``"scan"``
+and ``"kernel"`` backends of :class:`repro.core.backend.ExecutionBackend`
+are asserted to reproduce these trajectories tick-for-tick
+(``tests/test_quant_equivalence.py``) — that equivalence is the paper's
+central software↔chip validation, restated as a unit test.
+
+Everything here is deliberately dumb: Python loop over ticks, int64 NumPy,
+no JAX — slow, obvious, and with enough headroom that overflow is
+impossible for chip-maximal networks (|current| <= 512 * 128 * w_gain <
+2**23 per tick before saturation).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.quant import QuantizedMode
+
+
+def weight_codes(w: np.ndarray, mode: QuantizedMode) -> np.ndarray:
+    """Float weights → signed SRAM codes (int64), round-to-nearest-even.
+
+    Mirrors :meth:`QuantizedMode.weight_codes` (``jnp.round`` rounds half to
+    even, as does ``np.rint``).
+    """
+    spec = mode.weight_spec
+    lo, hi = -(1 << (spec.bits - 1)), (1 << (spec.bits - 1)) - 1
+    return np.clip(np.rint(np.asarray(w, np.float64) / spec.lsb), lo, hi).astype(
+        np.int64
+    )
+
+
+def _leak(v: np.ndarray, reg: int) -> np.ndarray:
+    """``floor(v * reg / 256)`` — multiply + arithmetic shift right by 8."""
+    return np.floor_divide(v * (reg & 0xFF), 256)
+
+
+def golden_forward(
+    raster: np.ndarray,          # (T, B, N_in) {0,1}
+    w_in: np.ndarray,            # (N_in, H) float weights (any values)
+    w_rec: np.ndarray,           # (H, H) float weights — pre-masked
+    w_out: np.ndarray,           # (H, O) float weights
+    mode: QuantizedMode,
+    *,
+    reset: str = "sub",
+    boxcar_width: float = 0.5,
+    valid: Optional[np.ndarray] = None,   # (T, B) TARGET_VALID mask
+) -> Dict[str, np.ndarray]:
+    """Run the bit-true integer datapath over one ``(T, B)`` tile.
+
+    Returns int64 trajectories: post-reset membrane ``v`` (T, B, H),
+    pre-reset ``v_pre``, spikes ``z``, boxcar pseudo-derivative ``h``,
+    readout ``y`` (T, B, O), the valid-window readout accumulator ``acc_y``
+    (B, O) and its argmax ``pred`` (B,).
+    """
+    assert reset in ("sub", "zero"), reset
+    raster = np.asarray(raster)
+    T, B, n_in = raster.shape
+    H = w_rec.shape[0]
+    O = w_out.shape[1]
+    x = raster.astype(np.int64)
+    if valid is None:
+        valid = np.ones((T, B), np.int64)
+    valid = np.asarray(valid).astype(np.int64)
+
+    gain = mode.w_gain
+    win = weight_codes(w_in, mode) * gain
+    wrec = weight_codes(w_rec, mode) * gain
+    wout = weight_codes(w_out, mode) * gain
+    vth = int(mode.threshold)
+    v_lo, v_hi = mode.v_min, mode.v_max
+    # boxcar half-width on the membrane grid (float compare, same as the
+    # JAX datapaths evaluate it — exact for the integer operands)
+    bc = boxcar_width * vth
+
+    v = np.zeros((B, H), np.int64)
+    z = np.zeros((B, H), np.int64)
+    y = np.zeros((B, O), np.int64)
+    acc_y = np.zeros((B, O), np.int64)
+    out = {
+        "v": np.zeros((T, B, H), np.int64),
+        "v_pre": np.zeros((T, B, H), np.int64),
+        "z": np.zeros((T, B, H), np.int64),
+        "h": np.zeros((T, B, H), np.int64),
+        "y": np.zeros((T, B, O), np.int64),
+    }
+    for t in range(T):
+        current = x[t] @ win + z @ wrec
+        v_pre = np.clip(_leak(v, mode.alpha_reg) + current, v_lo, v_hi)
+        z = (v_pre >= vth).astype(np.int64)
+        v = v_pre - z * vth if reset == "sub" else v_pre * (1 - z)
+        y = np.clip(_leak(y, mode.kappa_reg) + z @ wout, v_lo, v_hi)
+        acc_y += y * valid[t][:, None]
+        out["v_pre"][t], out["v"][t], out["z"][t], out["y"][t] = v_pre, v, z, y
+        out["h"][t] = (np.abs(v_pre - vth) < bc).astype(np.int64)
+    out["acc_y"] = acc_y
+    out["pred"] = np.argmax(acc_y, axis=-1)
+    return out

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.eprop import EpropConfig
 from repro.core.neuron import NeuronConfig
+from repro.core.quant import QuantizedMode
 
 MAX_IN = 256
 MAX_HID = 256
@@ -128,18 +129,34 @@ class Presets:
         return RSNNConfig(**kw)
 
     @staticmethod
-    def braille(n_classes: int = 3, num_ticks: int = 256, **over) -> RSNNConfig:
+    def braille(
+        n_classes: int = 3, num_ticks: int = 256, quantized: bool = False, **over
+    ) -> RSNNConfig:
         """§4.3: 12 input, 38 recurrent (reset-to-zero), N-class readout.
 
         Hyperparameters from the paper: threshold ``0x03F0``, alpha LSBs
         ``0x0FE`` (254/256), kappa ``0x37`` (55/256).
+
+        ``quantized=True`` arms the hardware-equivalence mode: the same SPI
+        register values drive ReckOn's fixed-point datapath
+        (:class:`repro.core.quant.QuantizedMode` — 8-bit weight SRAM,
+        saturating 12-bit membrane grid, ``reg/256`` leaks), which every
+        :class:`~repro.core.backend.ExecutionBackend` built from this config
+        picks up automatically.
         """
         kw = dict(
             n_in=12,
             n_hid=38,
             n_out=n_classes,
             num_ticks=num_ticks,
-            neuron=NeuronConfig(alpha=254.0 / 256.0, kappa=55.0 / 256.0, reset="zero"),
+            neuron=NeuronConfig(
+                alpha=254.0 / 256.0,
+                kappa=55.0 / 256.0,
+                reset="zero",
+                quant=QuantizedMode(
+                    threshold=0x03F0, alpha_reg=0x0FE, kappa_reg=0x37
+                ) if quantized else None,
+            ),
             eprop=EpropConfig(mode="factored", error="softmax", infer_window="valid"),
         )
         kw.update(over)

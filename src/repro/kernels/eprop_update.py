@@ -11,6 +11,15 @@ Computes, in one reverse pass over the tick axis,
 i.e. the per-synapse eligibility SRAM of the chip becomes three VMEM-resident
 accumulator tiles fed by per-tick rank-B matmul updates.  grid=(T,) iterated
 in reverse via the index map; accumulators write out on the final step.
+
+Hardware-equivalence (quantized) mode needs no variant of this kernel: the
+chip's trace arithmetic is wider than its commit grid, so the quantized
+contract keeps e-prop traces float — the backend feeds this kernel the same
+float h/xbar/pbar/zbar it produces in quantized runs, with ``err`` already
+evaluated on the normalised readout (``y / threshold``) and ``b_fb`` in
+normalised weight units.  Quantization happens at the *commit*
+(:class:`repro.optim.eprop_opt.EpropSGD` accumulate-then-round), exactly as
+on chip.
 """
 
 from __future__ import annotations

@@ -8,10 +8,11 @@ Python with TPU semantics — which is how the allclose tests validate them.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 
+from repro.core.quant import QuantizedMode
 from repro.kernels import eprop_update as _eprop
 from repro.kernels import flash_attention as _flash
 from repro.kernels import rsnn_step as _rsnn
@@ -21,7 +22,10 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("alpha", "kappa", "v_th", "reset", "boxcar_width"))
+@partial(
+    jax.jit,
+    static_argnames=("alpha", "kappa", "v_th", "reset", "boxcar_width", "quant"),
+)
 def rsnn_forward(
     raster: jax.Array,
     w_in: jax.Array,
@@ -33,11 +37,12 @@ def rsnn_forward(
     v_th: float = 1.0,
     reset: str = "sub",
     boxcar_width: float = 0.5,
+    quant: Optional[QuantizedMode] = None,   # frozen dataclass: hashable static
 ) -> Dict[str, jax.Array]:
     return _rsnn.rsnn_forward(
         raster, w_in, w_rec, w_out,
         alpha=alpha, kappa=kappa, v_th=v_th, reset=reset,
-        boxcar_width=boxcar_width, interpret=_interpret(),
+        boxcar_width=boxcar_width, quant=quant, interpret=_interpret(),
     )
 
 

@@ -26,12 +26,14 @@ def rsnn_forward_ref(
     reset: str = "sub",
     boxcar_width: float = 0.5,
 ) -> Dict[str, jax.Array]:
-    """Reference for the fused RSNN-step kernel.
+    """Reference for the fused RSNN-step kernel (float datapath).
 
     Returns per-tick tensors: spikes z (T,B,H), pseudo-derivative h,
     alpha-filtered input trace xbar (T,B,N_in), alpha-filtered presynaptic
-    recurrent trace pbar (T,B,H), kappa-filtered spikes zbar (T,B,H), and
-    readout y (T,B,O).
+    recurrent trace pbar (T,B,H), kappa-filtered spikes zbar (T,B,H),
+    readout y (T,B,O), and post-reset membrane v (T,B,H).  The quantized
+    datapath's oracle is the integer golden reference in
+    :mod:`repro.core.quant_ref`, not this.
     """
     T, B, n_in = raster.shape
     H = w_rec.shape[0]
@@ -49,14 +51,16 @@ def rsnn_forward_ref(
         xbar = alpha * xbar + x_t
         pbar = alpha * pbar + z          # presynaptic trace uses z BEFORE update
         zbar = kappa * zbar + z_new
-        return (v_new, z_new, y_new, xbar, pbar, zbar), (z_new, h, xbar, pbar, zbar, y_new)
+        return (v_new, z_new, y_new, xbar, pbar, zbar), (
+            z_new, h, xbar, pbar, zbar, y_new, v_new)
 
     carry0 = (
         jnp.zeros((B, H), dt), jnp.zeros((B, H), dt), jnp.zeros((B, O), dt),
         jnp.zeros((B, n_in), dt), jnp.zeros((B, H), dt), jnp.zeros((B, H), dt),
     )
-    _, (z, h, xbar, pbar, zbar, y) = jax.lax.scan(tick, carry0, raster)
-    return {"z": z, "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar, "y": y}
+    _, (z, h, xbar, pbar, zbar, y, v) = jax.lax.scan(tick, carry0, raster)
+    return {"z": z, "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar, "y": y,
+            "v": v}
 
 
 # ---------------------------------------------------------------------------

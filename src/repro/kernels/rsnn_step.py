@@ -27,7 +27,7 @@ training (END_S/END_B commits), evaluation and serving all dispatch through.
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Dict, Optional
 
 # The kernel's VMEM contract: batch tiles up to ~128 samples keep the whole
 # network state + double-buffered tick blocks ≲ 2 MiB for chip-maximal
@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import QuantizedMode
 
 
 def _kernel(
@@ -52,6 +54,7 @@ def _kernel(
     pbar_out_ref, # (1, B, H)
     zbar_out_ref, # (1, B, H)
     y_out_ref,    # (1, B, O)
+    v_out_ref,    # (1, B, H) — post-reset membrane trajectory
     v_scr,        # VMEM (B, H)
     z_scr,        # VMEM (B, H)
     y_scr,        # VMEM (B, O)
@@ -64,6 +67,7 @@ def _kernel(
     v_th: float,
     reset_sub: bool,
     boxcar_width: float,
+    quant: Optional[QuantizedMode],
 ):
     t = pl.program_id(0)
 
@@ -79,10 +83,20 @@ def _kernel(
     x_t = raster_ref[0]
     z = z_scr[...]
 
-    current = jnp.dot(x_t, w_in_ref[...], preferred_element_type=jnp.float32)
-    current += jnp.dot(z, w_rec_ref[...], preferred_element_type=jnp.float32)
+    # Quantized mode runs the same MXU pipeline on integer values carried in
+    # f32 (all exact below 2**24); Precision.HIGHEST keeps the dots exact on
+    # TPU (the default f32 passes would round the >bf16-mantissa weights).
+    precision = None if quant is None else jax.lax.Precision.HIGHEST
+    current = jnp.dot(x_t, w_in_ref[...], preferred_element_type=jnp.float32,
+                      precision=precision)
+    current += jnp.dot(z, w_rec_ref[...], preferred_element_type=jnp.float32,
+                       precision=precision)
 
-    v_pre = alpha * v_scr[...] + current
+    if quant is None:
+        v_pre = alpha * v_scr[...] + current
+    else:
+        # sat(floor(v * alpha_reg/256) + current) on the signed membrane grid
+        v_pre = quant.sat(quant.leak(v_scr[...], quant.alpha_reg) + current)
     z_new = (v_pre >= v_th).astype(v_pre.dtype)
     if reset_sub:
         v_new = v_pre - z_new * v_th
@@ -90,9 +104,12 @@ def _kernel(
         v_new = v_pre * (1.0 - z_new)
     h = (jnp.abs(v_pre - v_th) < boxcar_width * v_th).astype(v_pre.dtype)
 
-    y_new = kappa * y_scr[...] + jnp.dot(
-        z_new, w_out_ref[...], preferred_element_type=jnp.float32
-    )
+    y_lin = jnp.dot(z_new, w_out_ref[...], preferred_element_type=jnp.float32,
+                    precision=precision)
+    if quant is None:
+        y_new = kappa * y_scr[...] + y_lin
+    else:
+        y_new = quant.sat(quant.leak(y_scr[...], quant.kappa_reg) + y_lin)
     xbar = alpha * xbar_scr[...] + x_t
     pbar = alpha * pbar_scr[...] + z          # presyn trace: z BEFORE this tick
     zbar = kappa * zbar_scr[...] + z_new
@@ -110,6 +127,7 @@ def _kernel(
     pbar_out_ref[0] = pbar
     zbar_out_ref[0] = zbar
     y_out_ref[0] = y_new
+    v_out_ref[0] = v_new
 
 
 def rsnn_forward(
@@ -123,12 +141,24 @@ def rsnn_forward(
     v_th: float = 1.0,
     reset: str = "sub",
     boxcar_width: float = 0.5,
+    quant: Optional[QuantizedMode] = None,
     interpret: bool = False,
 ) -> Dict[str, jax.Array]:
+    """Fused forward over one ``(T, B)`` tile; returns per-tick tensors
+    (z, h, xbar, pbar, zbar, y, v — post-reset membrane trajectory).
+
+    With ``quant`` set the tick pipeline is ReckOn's fixed-point datapath
+    (saturating membrane grid, register-driven floor leaks); ``alpha``,
+    ``kappa`` and ``v_th`` are then taken from the registers, and the
+    caller must pass weights already on the membrane grid
+    (``QuantizedMode.to_membrane`` — integer values in f32).
+    """
     T, B, n_in = raster.shape
     H = w_rec.shape[0]
     O = w_out.shape[1]
     dt = raster.dtype
+    if quant is not None:
+        alpha, kappa, v_th = quant.alpha, quant.kappa, float(quant.threshold)
 
     kern = functools.partial(
         _kernel,
@@ -137,6 +167,7 @@ def rsnn_forward(
         v_th=float(v_th),
         reset_sub=(reset == "sub"),
         boxcar_width=float(boxcar_width),
+        quant=quant,
     )
     tick_spec = lambda cols: pl.BlockSpec((1, B, cols), lambda t: (t, 0, 0))
     full = lambda shape: pl.BlockSpec(shape, lambda t: tuple(0 for _ in shape))
@@ -152,7 +183,7 @@ def rsnn_forward(
         ],
         out_specs=[
             tick_spec(H), tick_spec(H), tick_spec(n_in),
-            tick_spec(H), tick_spec(H), tick_spec(O),
+            tick_spec(H), tick_spec(H), tick_spec(O), tick_spec(H),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((T, B, H), dt),
@@ -161,6 +192,7 @@ def rsnn_forward(
             jax.ShapeDtypeStruct((T, B, H), dt),
             jax.ShapeDtypeStruct((T, B, H), dt),
             jax.ShapeDtypeStruct((T, B, O), dt),
+            jax.ShapeDtypeStruct((T, B, H), dt),
         ],
         scratch_shapes=[
             pltpu.VMEM((B, H), jnp.float32),
@@ -172,5 +204,6 @@ def rsnn_forward(
         ],
         interpret=interpret,
     )(raster, w_in, w_rec, w_out)
-    z, h, xbar, pbar, zbar, y = outs
-    return {"z": z, "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar, "y": y}
+    z, h, xbar, pbar, zbar, y, v = outs
+    return {"z": z, "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar, "y": y,
+            "v": v}

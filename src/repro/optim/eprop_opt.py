@@ -9,7 +9,12 @@ still make progress.  This module packages that as a pytree optimizer:
 * quantized mode — weights live on a :class:`~repro.core.quant.QuantSpec`
   grid with a float residual accumulator; every ``update`` is an
   accumulate + commit (round-nearest or stochastic), bit-faithful to the
-  chip's weight-SRAM read-modify-write.
+  chip's weight-SRAM read-modify-write.  Paired with a quantized execution
+  backend (``cfg.neuron.quant`` / ``ExecutionBackend(quant=...)``) this is
+  the full hardware-equivalence training loop; END_B batch commits pass
+  ``num_updates=K`` so clip/decay keep per-sample semantics (tested in
+  ``tests/test_quant.py``).  Stochastic rounding is the chip's mode and the
+  quantized-config default in ``configs/reckon_braille.py``.
 
 The returned ``dw`` convention follows :mod:`repro.core.eprop`: they are
 positive-gradient sums, applied as ``w <- w - lr * dw``.

@@ -19,6 +19,14 @@ learning online) never recompiles — and because an
 directly (``BatchedEngine.from_learner`` does exactly that), the engine and
 a live :class:`~repro.core.controller.OnlineLearner` share one jit cache:
 train, swap weights, serve, no recompile.
+
+Quantized serving: when the backend runs the hardware-equivalence mode
+(``cfg.neuron.quant`` / ``ExecutionBackend(quant=...)``), the engine is the
+software twin of the FPGA serving path — every tile executes ReckOn's
+fixed-point datapath, ``update_weights`` snaps incoming weights onto the
+8-bit SRAM grid (the "SRAM load", so serving a float learner's live master
+weights is still well-defined), and returned logits are the chip's
+membrane-grid readout accumulators (argmax unchanged).
 """
 
 from __future__ import annotations
@@ -116,14 +124,26 @@ class BatchedEngine:
         assert self.max_batch <= batching.KERNEL_SAMPLE_CAP
         self.tick_granularity = tick_granularity
         self._clock = clock
-        self._weights = {
-            k: jnp.asarray(v)
-            for k, v in params.items()
-            if k in ("w_in", "w_rec", "w_out", "b_fb")
-        }
+        self.update_weights(params)
         self.scheduler = BucketingScheduler(
             self.max_batch, tick_granularity, clock=clock
         )
+
+    @property
+    def quantized(self) -> bool:
+        """True when tiles execute the fixed-point hardware-equivalence
+        datapath (logits are then membrane-grid integers)."""
+        return self.engine.quant is not None
+
+    def _sram(self, k: str, v: jax.Array) -> jax.Array:
+        """What the engine actually holds per weight: the 8-bit SRAM grid
+        value in quantized mode (the datapath would re-snap anyway — this
+        makes ``_weights`` observable as the SRAM image), raw otherwise.
+        Feedback matrices (``b_fb``) are not SRAM words and pass through."""
+        q = self.engine.quant
+        if q is None or k == "b_fb":
+            return jnp.asarray(v)
+        return q.weight_spec.round_nearest(jnp.asarray(v))
 
     @classmethod
     def from_learner(cls, learner, **kw) -> "BatchedEngine":
@@ -136,9 +156,10 @@ class BatchedEngine:
 
     def update_weights(self, weights: Dict[str, jax.Array]) -> None:
         """Swap in newly-trained weights (no recompilation — weights are
-        jit arguments)."""
+        jit arguments).  In quantized mode this is the SRAM load: weights
+        are snapped onto the 8-bit grid."""
         self._weights = {
-            k: jnp.asarray(v)
+            k: self._sram(k, v)
             for k, v in weights.items()
             if k in ("w_in", "w_rec", "w_out", "b_fb")
         }

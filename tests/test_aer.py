@@ -2,6 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -47,6 +48,58 @@ def test_encode_decode_roundtrip(t, n, density, label, seed):
     assert int(s.label) == label
     assert int(s.label_tick) == label_tick
     assert int(s.end_tick) == t - 1
+
+
+@given(
+    t=st.integers(2, 40),
+    n=st.integers(1, 32),
+    density=st.floats(0.0, 0.5),
+    label=st.integers(0, 15),
+    end_frac=st.floats(0.0, 1.0),
+    pad=st.integers(0, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_encode_decode_roundtrip_full_fields(t, n, density, label, end_frac,
+                                             pad, seed):
+    """Full-field round trip: raster *and* label/label_tick/end_tick survive
+    encode → (zero-pad) → decode for arbitrary valid rasters, including the
+    zero-spike raster (density=0 is a generated edge case) and padded
+    buffers (pad > 0 appends 0x0 words, which decode must ignore)."""
+    rng = np.random.default_rng(seed)
+    raster = (rng.random((t, n)) < density).astype(np.float32)
+    label_tick = int(rng.integers(0, t))
+    end_tick = int(round(end_frac * (t - 1)))
+    words = aer.encode_sample(raster, label, label_tick, end_tick)
+    if pad:
+        words = aer.pad_events([words], len(words) + pad)[0]
+    s = aer.decode_sample(jnp.asarray(words), n, t)
+    np.testing.assert_array_equal(np.asarray(s.raster), raster)
+    assert int(s.label) == label
+    assert int(s.label_tick) == label_tick
+    assert int(s.end_tick) == end_tick
+
+
+def test_encode_sample_masks_and_validates_fields():
+    """Regression: label_word/end_word used to be OR'd without & MAX_ADDR /
+    & MAX_TICK, so out-of-range values bled into the type byte.  Max legal
+    values must keep their type bytes; out-of-range must assert."""
+    raster = np.zeros((4, 2), np.float32)
+    words = aer.encode_sample(raster, aer.MAX_ADDR, aer.MAX_TICK, end_tick=3)
+    kinds = np.asarray(words) >> 24
+    assert set(kinds.tolist()) == {aer.EVT_LABEL, aer.EVT_END}
+    s = aer.decode_sample(jnp.asarray(words), 2, 4)
+    assert int(s.label) == aer.MAX_ADDR and int(s.label_tick) == aer.MAX_TICK
+
+    for bad in (
+        dict(label=aer.MAX_ADDR + 1, label_tick=0),
+        dict(label=-1, label_tick=0),
+        dict(label=0, label_tick=aer.MAX_TICK + 1),
+        dict(label=0, label_tick=0, end_tick=aer.MAX_TICK + 1),
+        dict(label=0, label_tick=0, end_tick=-1),
+    ):
+        with pytest.raises(AssertionError):
+            aer.encode_sample(raster, **bad)
 
 
 def test_events_sorted_by_tick():

@@ -1,14 +1,23 @@
-"""Fixed-point numerics (ReckOn's 8-bit weight SRAM behaviour)."""
+"""Fixed-point numerics (ReckOn's 8-bit weight SRAM + 12-bit membrane)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # declared in requirements.txt; CI installs the real thing
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core.quant import QuantSpec, QuantState, from_reckon_regs
+from repro.core.quant import (
+    MEMBRANE_SPEC,
+    WEIGHT_SPEC,
+    QuantizedMode,
+    QuantSpec,
+    QuantState,
+    from_reckon_regs,
+)
+from repro.optim.eprop_opt import EpropSGD, EpropSGDConfig
 
 
 @given(
@@ -60,3 +69,135 @@ def test_ste_gradient_is_identity():
     spec = QuantSpec(8, 4)
     g = jax.grad(lambda x: spec.ste(x).sum())(jnp.asarray([0.3, 0.7]))
     np.testing.assert_allclose(g, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# membrane grid + QuantizedMode (the hardware-equivalence contract)
+# ---------------------------------------------------------------------------
+
+
+def test_membrane_spec_matches_chip():
+    """Regression: the seed shipped a 16-bit membrane grid; the chip's is a
+    12-bit signed integer grid — the Braille threshold 0x03F0 must be
+    representable and values beyond ±2^11 must saturate."""
+    assert MEMBRANE_SPEC.bits == 12 and MEMBRANE_SPEC.frac == 0
+    assert MEMBRANE_SPEC.min_val == -2048 and MEMBRANE_SPEC.max_val == 2047
+    assert MEMBRANE_SPEC.min_val <= 0x03F0 <= MEMBRANE_SPEC.max_val
+    # saturation, not wraparound (a 16-bit grid would pass these through)
+    assert float(MEMBRANE_SPEC.round_nearest(jnp.float32(3000.0))) == 2047.0
+    assert float(MEMBRANE_SPEC.round_nearest(jnp.float32(-5000.0))) == -2048.0
+
+
+def test_quantized_mode_register_interpretation():
+    q = QuantizedMode()     # the paper's Braille SPI values
+    assert q.threshold == 0x03F0 == 1008
+    assert q.alpha == 254.0 / 256.0 and q.kappa == 55.0 / 256.0
+    assert (q.v_min, q.v_max) == (-2048, 2047)
+    # weight-grid / membrane-grid commensurability: 1008 = 16 * 63
+    assert q.w_gain == 63
+    np.testing.assert_array_equal(
+        np.asarray(q.to_membrane(jnp.asarray([1.0 / 16, -0.5, 8.0, 100.0]))),
+        [63.0, -8.0 * 63, 127 * 63.0, 127 * 63.0],   # incl. code saturation
+    )
+    # leak = multiply + arithmetic shift: floors toward -inf like the RTL
+    np.testing.assert_array_equal(
+        np.asarray(q.leak(jnp.asarray([1008.0, -1.0, 255.0]), 0x0FE)),
+        [np.floor(1008 * 254 / 256), -1.0, np.floor(255 * 254 / 256)],
+    )
+
+
+def test_quantized_mode_rejects_incommensurate_threshold():
+    with pytest.raises(AssertionError):
+        QuantizedMode(threshold=0x03F1)      # not divisible by 2**frac
+    with pytest.raises(AssertionError):
+        QuantizedMode(threshold=0x1000)      # beyond the 12-bit grid
+
+
+# ---------------------------------------------------------------------------
+# EpropSGD quantized commits (END_S num_updates=1, END_B num_updates=K)
+# ---------------------------------------------------------------------------
+
+
+def _opt_pair(clip=None, stochastic=False):
+    quant = EpropSGD(EpropSGDConfig(lr=0.1, clip=clip, quant=WEIGHT_SPEC,
+                                    stochastic_round=stochastic))
+    flt = EpropSGD(EpropSGDConfig(lr=0.1, clip=clip))
+    return quant, flt
+
+
+def test_quant_endb_commit_preserves_total_update():
+    """END_B commit (num_updates=K): grid weights + residual accumulator
+    carry the *exact* float update — nothing is lost to rounding, and the
+    committed weights stay on the grid."""
+    quant, flt = _opt_pair()
+    w = {"w_in": jnp.asarray([0.5, -0.25, 0.0, 1.0]),
+         "w_rec": jnp.asarray([[0.125, -1.0], [2.0, 0.0625]])}
+    dw = {"w_in": jnp.asarray([0.013, -0.4, 0.21, 0.0007]),
+          "w_rec": jnp.asarray([[0.3, -0.01], [0.002, 0.09]])}
+    q_w, q_state = quant.update(w, dw, quant.init(w), num_updates=4.0)
+    f_w, _ = flt.update(w, dw, flt.init(w), num_updates=4.0)
+    for k in w:
+        # on-grid invariant
+        np.testing.assert_array_equal(
+            np.asarray(q_w[k]), np.asarray(WEIGHT_SPEC.round_nearest(q_w[k]))
+        )
+        # total = grid + residual reproduces the float path exactly
+        np.testing.assert_allclose(
+            np.asarray(q_w[k]) + np.asarray(q_state["acc"][k]),
+            np.asarray(f_w[k]), rtol=1e-6, atol=1e-7, err_msg=k,
+        )
+    assert float(q_state["count"]) == 4.0
+
+
+def test_quant_endb_residual_accumulates_sub_lsb():
+    """K successive END_B commits of sub-LSB updates: the residual carries
+    them until a grid step is earned (the chip's read-modify-write)."""
+    quant, _ = _opt_pair()
+    w = {"w_in": jnp.zeros((3,))}
+    state = quant.init(w)
+    dw = {"w_in": jnp.full((3,), WEIGHT_SPEC.lsb / (8 * quant.cfg.lr))}
+    for _ in range(10):   # 10 * lsb/8 = 1.25 lsb of total update
+        w, state = quant.update(w, dw, state, num_updates=2.0)
+    total = np.asarray(w["w_in"]) + np.asarray(state["acc"]["w_in"])
+    np.testing.assert_allclose(total, -10 * WEIGHT_SPEC.lsb / 8, rtol=1e-5)
+    assert (np.asarray(w["w_in"]) != 0).all()   # the grid value did move
+    assert float(state["count"]) == 20.0
+
+
+def test_quant_endb_sqrt_k_clip_scaling():
+    """Where clipping binds, an END_B commit's total step scales with
+    sqrt(num_updates) — identical to the float path's threshold scaling."""
+    w = {"w_in": jnp.zeros((4,))}
+    dw = {"w_in": jnp.full((4,), 100.0)}     # gn = 200 >> clip
+    quant, flt = _opt_pair(clip=1.0)
+    tot = {}
+    for k_updates in (1.0, 4.0):
+        q_w, q_state = quant.update(w, dw, quant.init(w), num_updates=k_updates)
+        f_w, _ = flt.update(w, dw, flt.init(w), num_updates=k_updates)
+        tot[k_updates] = np.asarray(q_w["w_in"]) + np.asarray(
+            q_state["acc"]["w_in"])
+        np.testing.assert_allclose(tot[k_updates], np.asarray(f_w["w_in"]),
+                                   rtol=1e-6)
+    np.testing.assert_allclose(tot[4.0], 2.0 * tot[1.0], rtol=1e-5)
+
+
+def test_quant_endb_stochastic_rounding_unbiased():
+    """Stochastic END_B commits are unbiased: the mean committed weight over
+    many keys ≈ the float update (sub-LSB updates make expected progress)."""
+    quant, flt = _opt_pair(stochastic=True)
+    w = {"w_in": jnp.zeros((256,))}
+    dw = {"w_in": jnp.full((256,), 0.3 * WEIGHT_SPEC.lsb / quant.cfg.lr)}
+    f_w, _ = flt.update(w, dw, flt.init(w), num_updates=2.0)
+    target = float(np.asarray(f_w["w_in"])[0])          # -0.3 lsb
+    commits = []
+    for seed in range(64):
+        q_w, q_state = quant.update(w, dw, quant.init(w),
+                                    key=jax.random.key(seed), num_updates=2.0)
+        vals = np.asarray(q_w["w_in"])
+        assert set(np.unique(vals)) <= {0.0, -WEIGHT_SPEC.lsb}  # adjacent grid pts
+        commits.append(vals.mean())
+        # the residual still reconciles commit with the float path exactly
+        np.testing.assert_allclose(
+            vals + np.asarray(q_state["acc"]["w_in"]), target, rtol=1e-5
+        )
+    assert abs(np.mean(commits) - target) < 0.03 * WEIGHT_SPEC.lsb
