@@ -13,9 +13,11 @@
 
 Machine-readable outputs (the cross-PR perf trajectory, uploaded as CI
 artifacts): ``BENCH_train.json`` (training samples/sec per commit mode +
-accuracy) and ``BENCH_serve.json`` (serving samples/sec, p50/p99 latency)
-are written to ``--out-dir`` (default: cwd) for every run that includes the
-corresponding benchmark.
+accuracy), ``BENCH_serve.json`` (serving samples/sec, p50/p99 latency) and
+``BENCH_kernels.json`` (per-op samples/s + analytic HBM bytes-streamed,
+written by ``bench_kernels`` itself — its traffic-ratio gates are what the
+kernels smoke lane enforces) are written to ``--out-dir`` (default: cwd)
+for every run that includes the corresponding benchmark.
 
 Benchmarks return either data rows, or a dict with an ``"rc"`` exit code
 plus payloads run.py folds into the JSON reports; a non-zero rc (or an
@@ -58,7 +60,7 @@ def main(argv=None):
     from benchmarks import bench_braille, bench_serve, roofline
 
     jobs = [
-        ("kernels", lambda: bench_kernels.main([])),
+        ("kernels", lambda: bench_kernels.main(["--out-dir", opts.out_dir])),
         ("serve", lambda: bench_serve.main(["--fast"] if opts.fast else [])),
         ("cue", lambda: bench_cue.main([])),
         ("resources", lambda: bench_resources.main([])),

@@ -25,10 +25,21 @@ program):
 
 Backends:
 
-* ``"kernel"`` — the fused Pallas kernels (:func:`repro.kernels.ops.rsnn_forward`
-  + :func:`repro.kernels.ops.eprop_update`): whole network state VMEM-resident,
-  two MXU matmuls per tick.  Compiled on TPU; interpreted elsewhere (which is
-  how the parity tests run it on CPU).
+* ``"kernel"`` — op-specialized Pallas kernels, whole network state
+  VMEM-resident, two MXU matmuls per tick; compiled on TPU, interpreted
+  elsewhere (which is how the parity tests run it on CPU).  Dispatch is
+  per *op*, not forward-everything:
+
+  - ``train_tile`` → :func:`repro.kernels.ops.rsnn_train`, the fused
+    forward + in-kernel error + reverse e-prop kernel (traces in VMEM
+    scratch, only ``dw`` + ``(B, O)`` metrics reach HBM) whenever the tile
+    fits :func:`repro.kernels.rsnn_step.fused_train_fits`; two-kernel
+    fallback (``rsnn_forward`` + ``eprop_update``) otherwise.
+  - ``inference`` → :func:`repro.kernels.ops.rsnn_infer`: VMEM-accumulated
+    logits/spike counts, zero per-tick HBM streams (the serving path).
+  - ``forward_traces`` / ``eprop_update`` / ``dynamics`` → the
+    trace-streaming ``rsnn_forward`` (+ split ``eprop_update``), for callers
+    that need the per-tick tensors themselves.
 * ``"scan"``   — the reference ``lax.scan`` implementations in
   :mod:`repro.core.eprop`.  The CPU-native fast path and the oracle the
   kernel backend is tested against.  ``train_tile`` honours
@@ -61,7 +72,11 @@ from repro.core import eprop
 from repro.core.quant import QuantizedMode
 from repro.core.rsnn import RSNNConfig
 from repro.kernels import ops
-from repro.kernels.rsnn_step import KERNEL_SAMPLE_CAP
+from repro.kernels.rsnn_step import (
+    DEFAULT_VMEM_BUDGET,
+    KERNEL_SAMPLE_CAP,
+    fused_train_fits,
+)
 
 # A traces pytree: the per-tick quantities of one forward pass, all (T, B, ·).
 Traces = Dict[str, jax.Array]
@@ -102,6 +117,7 @@ class ExecutionBackend:
         backend: str = "auto",
         alpha: Optional[float] = None,
         quant: Optional[QuantizedMode] = None,
+        vmem_budget: int = DEFAULT_VMEM_BUDGET,
     ):
         self.cfg = cfg
         self.backend = resolve_backend(backend)
@@ -127,6 +143,11 @@ class ExecutionBackend:
                 f"({self.quant.alpha}), caller passed {alpha}"
             )
             self.alpha = self.quant.alpha
+        # VMEM budget the kernel dispatch sizes against: the fused train
+        # kernel is chosen per (T, B) tile shape iff its trace scratch fits
+        # (a trace-time static decision — one jit cache entry per shape
+        # either way).
+        self.vmem_budget = int(vmem_budget)
         if cfg.eprop.mask_self_recurrence:
             self._mask = 1.0 - jnp.eye(cfg.n_hid, dtype=jnp.float32)
         else:
@@ -169,16 +190,25 @@ class ExecutionBackend:
             else weights["w_out"]
         )
 
-    def _kernel_forward(self, weights, raster):
-        ncfg, q = self._ncfg, self.quant
+    def _datapath_weights(self, weights):
+        """Weights as the kernel datapath consumes them: snapped onto the
+        membrane grid in quantized mode, self-recurrence masked."""
+        q = self.quant
         if q is not None:
-            w_in = q.to_membrane(weights["w_in"])
-            w_rec = q.to_membrane(weights["w_rec"]) * self._mask
-            w_out = q.to_membrane(weights["w_out"])
-        else:
-            w_in = weights["w_in"]
-            w_rec = weights["w_rec"] * self._mask
-            w_out = weights["w_out"]
+            return (
+                q.to_membrane(weights["w_in"]),
+                q.to_membrane(weights["w_rec"]) * self._mask,
+                q.to_membrane(weights["w_out"]),
+            )
+        return (
+            weights["w_in"],
+            weights["w_rec"] * self._mask,
+            weights["w_out"],
+        )
+
+    def _kernel_forward(self, weights, raster):
+        ncfg = self._ncfg
+        w_in, w_rec, w_out = self._datapath_weights(weights)
         return ops.rsnn_forward(
             raster,
             w_in,
@@ -189,8 +219,13 @@ class ExecutionBackend:
             v_th=ncfg.v_th,
             reset=ncfg.reset,
             boxcar_width=ncfg.boxcar_width,
-            quant=q,
+            quant=self.quant,
         )
+
+    def _spike_rate(self, n_spk, valid):
+        """Valid-masked spike rate — the one shared definition
+        (padded ticks never count), so both backends report identically."""
+        return eprop._spike_rate(n_spk, valid, self.cfg.n_hid)
 
     def _y_err(self, y: jax.Array) -> jax.Array:
         """Readout values as the error path sees them: normalised units in
@@ -209,13 +244,17 @@ class ExecutionBackend:
     def _inference_impl(self, weights, raster, valid):
         ncfg, ecfg = self._ncfg, self.cfg.eprop
         if self.backend == "kernel":
-            out = self._kernel_forward(weights, raster)
-            acc_y = (out["y"] * self._infer_weight(valid)).sum(axis=0)
-            T, B = valid.shape
+            w_in, w_rec, w_out = self._datapath_weights(weights)
+            acc_y, n_spk = ops.rsnn_infer(
+                raster, valid, w_in, w_rec, w_out,
+                alpha=self.alpha, kappa=ncfg.kappa, v_th=ncfg.v_th,
+                reset=ncfg.reset, quant=self.quant,
+                infer_window=ecfg.infer_window,
+            )
             return {
                 "acc_y": acc_y,
                 "pred": jnp.argmax(acc_y, axis=-1),
-                "spike_rate": out["z"].sum() / (T * B * self.cfg.n_hid),
+                "spike_rate": self._spike_rate(n_spk, valid),
             }
         params = self._merge(weights, raster.dtype)
         return eprop.run_sample_inference(params, raster, valid, ncfg, ecfg)
@@ -223,7 +262,13 @@ class ExecutionBackend:
     def inference(
         self, weights: Dict[str, jax.Array], raster: jax.Array, valid: jax.Array
     ) -> Dict[str, jax.Array]:
-        """Classify one ``(T, B)`` tile → ``{"acc_y", "pred", "spike_rate"}``."""
+        """Classify one ``(T, B)`` tile → ``{"acc_y", "pred", "spike_rate"}``.
+
+        The kernel backend runs the inference-specialized kernel: readout
+        and spike accumulators live in VMEM and only the ``(B, O)`` logits
+        tile (plus per-sample spike counts) is written to HBM — no per-tick
+        streams on the serving path.
+        """
         self._note("inference", raster.shape)
         return self._jit_inference(weights, raster, valid)
 
@@ -242,7 +287,7 @@ class ExecutionBackend:
                 "zbar": out["zbar"],
                 "err": err,
                 "y_inf": out["y"] * self._infer_weight(valid),
-                "n_spk": out["z"].sum(axis=(1, 2)),
+                "n_spk": (out["z"] * valid[..., None]).sum(axis=(1, 2)),
             }
         params = self._merge(weights, raster.dtype)
         h, xbar, pbar, zbar, err, y_inf, n_spk = eprop.forward_traces(
@@ -292,14 +337,34 @@ class ExecutionBackend:
     def _train_impl(self, weights, raster, y_star, valid):
         ncfg, ecfg = self._ncfg, self.cfg.eprop
         if self.backend == "kernel":
-            traces = self._forward_impl(weights, raster, y_star, valid)
-            dw = self._update_impl(weights, traces)
-            acc_y = traces["y_inf"].sum(axis=0)
             T, B = valid.shape
+            if fused_train_fits(T, B, self.cfg.n_in, self.cfg.n_hid,
+                                self.cfg.n_out, self.vmem_budget):
+                # fused path: one two-phase kernel, traces VMEM-resident,
+                # HBM sees only dw + (B, O) metrics
+                w_in, w_rec, w_out = self._datapath_weights(weights)
+                dw_in, dw_rec, dw_out, acc_y, n_spk = ops.rsnn_train(
+                    raster, y_star, valid, w_in, w_rec, w_out,
+                    self._feedback(weights),
+                    alpha=self.alpha, kappa=ncfg.kappa, v_th=ncfg.v_th,
+                    reset=ncfg.reset, boxcar_width=ncfg.boxcar_width,
+                    quant=self.quant, error=ecfg.error,
+                    target_amplitude=ecfg.target_amplitude,
+                    infer_window=ecfg.infer_window,
+                )
+                dw = {"w_in": dw_in, "w_rec": dw_rec * self._mask,
+                      "w_out": dw_out}
+            else:
+                # two-kernel fallback: trace streams round-trip HBM, but any
+                # T·B fits
+                traces = self._forward_impl(weights, raster, y_star, valid)
+                dw = self._update_impl(weights, traces)
+                acc_y = traces["y_inf"].sum(axis=0)
+                n_spk = traces["n_spk"]
             metrics = {
                 "acc_y": acc_y,
                 "pred": jnp.argmax(acc_y, axis=-1),
-                "spike_rate": traces["n_spk"].sum() / (T * B * self.cfg.n_hid),
+                "spike_rate": self._spike_rate(n_spk, valid),
             }
             return dw, metrics
         params = self._merge(weights, raster.dtype)
@@ -317,7 +382,11 @@ class ExecutionBackend:
         Returns ``(dw, metrics)`` where ``dw`` is summed over the batch axis —
         the quantity a controller commits at an END_S (B=1) or END_B (B=K)
         boundary.  The scan backend dispatches on ``cfg.eprop.mode`` (exact /
-        factored); the kernel backend is factored by construction.
+        factored); the kernel backend is factored by construction and picks,
+        per tile shape, the fused train kernel (error + reverse pass
+        in-kernel, traces never leave VMEM) when
+        :func:`repro.kernels.rsnn_step.fused_train_fits` admits the tile,
+        else the two-kernel forward + update pipeline.
         """
         self._note("train_tile", raster.shape)
         return self._jit_train(weights, raster, y_star, valid)

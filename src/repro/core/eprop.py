@@ -105,6 +105,27 @@ def _datapath(params: Dict[str, jax.Array], ncfg: NeuronConfig, ecfg: EpropConfi
     )
 
 
+def _input_projection(raster: jax.Array, w_in_d: jax.Array, dot) -> jax.Array:
+    """Hoist the per-tick ``x_t @ w_in`` out of the scan: one
+    ``(T·B, n_in) × (n_in, H)`` matmul instead of T rank-B ones.
+
+    The scan body then only does the recurrent/readout matmuls per tick —
+    the input projection runs as a single large (XLA-friendly) contraction
+    up front.  In quantized mode ``dot`` carries ``Precision.HIGHEST`` and
+    every operand is an exact integer in f32, so the result is bit-identical
+    to the per-tick form regardless of reduction order.
+    """
+    T, B, n_in = raster.shape
+    return dot(raster.reshape(T * B, n_in), w_in_d).reshape(T, B, -1)
+
+
+def _spike_rate(n_spk: jax.Array, valid: jax.Array, n_hid: int) -> jax.Array:
+    """Valid-masked spike rate: spikes inside the TARGET_VALID window per
+    valid tick-neuron — invariant to tick padding, identical across
+    backends (regression-tested in ``tests/test_fused_kernels.py``)."""
+    return jnp.sum(n_spk) / (jnp.maximum(valid.sum(), 1.0) * n_hid)
+
+
 # ---------------------------------------------------------------------------
 # exact mode — per-synapse trace SRAM, tick-by-tick (faithful)
 # ---------------------------------------------------------------------------
@@ -133,12 +154,14 @@ def run_sample_exact(
     w_in_d, w_rec_d, w_out_d, rec_mask, y_scale, dot = _datapath(params, ncfg, ecfg)
     b_fb = _feedback(params, ecfg)
 
+    in_cur = _input_projection(raster, w_in_d, dot)
+
     def tick(carry, inp):
         (v, z, y, eps_in, eps_rec, ebar_in, ebar_rec, zbar,
          dw_in, dw_rec, dw_out, acc_y, n_spk) = carry
-        x_t, valid_t = inp
+        x_t, in_cur_t, valid_t = inp
 
-        current = dot(x_t, w_in_d) + dot(z, w_rec_d)
+        current = in_cur_t + dot(z, w_rec_d)
         v_new, z_new, v_pre = lif_step(v, current, alpha, ncfg)
         y_new = li_step(y, dot(z_new, w_out_d), kappa, ncfg)
 
@@ -159,7 +182,7 @@ def run_sample_exact(
 
         w_inf = valid_t[:, None] if ecfg.infer_window == "valid" else 1.0
         acc_y = acc_y + y_new * w_inf
-        n_spk = n_spk + z_new.sum()
+        n_spk = n_spk + (z_new * valid_t[:, None]).sum()
 
         carry = (v_new, z_new, y_new, eps_in, eps_rec, ebar_in, ebar_rec,
                  zbar, dw_in, dw_rec, dw_out, acc_y, n_spk)
@@ -175,14 +198,14 @@ def run_sample_exact(
         jnp.zeros((H, n_out), dtype),
         jnp.zeros((B, n_out), dtype), jnp.zeros((), dtype),
     )
-    carry, _ = jax.lax.scan(tick, carry0, (raster, valid))
+    carry, _ = jax.lax.scan(tick, carry0, (raster, in_cur, valid))
     (*_, dw_in, dw_rec, dw_out, acc_y, n_spk) = carry
 
     dw = {"w_in": dw_in, "w_rec": dw_rec * rec_mask, "w_out": dw_out}
     metrics = {
         "acc_y": acc_y,
         "pred": jnp.argmax(acc_y, axis=-1),
-        "spike_rate": n_spk / (T * B * H),
+        "spike_rate": _spike_rate(n_spk, valid, H),
     }
     return dw, metrics
 
@@ -211,10 +234,12 @@ def forward_traces(
     kappa = jnp.asarray(ncfg.kappa, dtype)
     w_in_d, w_rec_d, w_out_d, _, y_scale, dot = _datapath(params, ncfg, ecfg)
 
+    in_cur = _input_projection(raster, w_in_d, dot)
+
     def tick(carry, inp):
         v, z, y, xbar, pbar, zbar = carry
-        x_t, valid_t = inp
-        current = dot(x_t, w_in_d) + dot(z, w_rec_d)
+        x_t, in_cur_t, valid_t = inp
+        current = in_cur_t + dot(z, w_rec_d)
         v_new, z_new, v_pre = lif_step(v, current, alpha, ncfg)
         y_new = li_step(y, dot(z_new, w_out_d), kappa, ncfg)
         h = pseudo_derivative(v_pre, ncfg)
@@ -223,7 +248,8 @@ def forward_traces(
         zbar = kappa * zbar + z_new      # kappa-filtered spikes        (B, H)
         err = readout_error(y_new * y_scale, y_star, ecfg) * valid_t[:, None]
         w_inf = valid_t[:, None] if ecfg.infer_window == "valid" else jnp.ones_like(valid_t)[:, None]
-        outs = (h, xbar, pbar, zbar, err, y_new * w_inf, z_new.sum())
+        outs = (h, xbar, pbar, zbar, err, y_new * w_inf,
+                (z_new * valid_t[:, None]).sum())
         return (v_new, z_new, y_new, xbar, pbar, zbar), outs
 
     carry0 = (
@@ -232,7 +258,7 @@ def forward_traces(
         jnp.zeros((B, H), dtype), jnp.zeros((B, H), dtype),
     )
     _, (h, xbar, pbar, zbar, err, y_inf, n_spk) = jax.lax.scan(
-        tick, carry0, (raster, valid)
+        tick, carry0, (raster, in_cur, valid)
     )
     return h, xbar, pbar, zbar, err, y_inf, n_spk
 
@@ -283,11 +309,10 @@ def run_sample_factored(
     )
     dw = factored_update(params, h, xbar, pbar, zbar, err, ncfg, ecfg)
     acc_y = y_inf.sum(axis=0)
-    T, B = raster.shape[:2]
     metrics = {
         "acc_y": acc_y,
         "pred": jnp.argmax(acc_y, axis=-1),
-        "spike_rate": n_spk.sum() / (T * B * params["w_rec"].shape[0]),
+        "spike_rate": _spike_rate(n_spk, valid, params["w_rec"].shape[0]),
     }
     return dw, metrics
 
@@ -318,23 +343,26 @@ def run_sample_inference(
     kappa = jnp.asarray(ncfg.kappa, dtype)
     w_in_d, w_rec_d, w_out_d, _, _, dot = _datapath(params, ncfg, ecfg)
 
+    in_cur = _input_projection(raster, w_in_d, dot)
+
     def tick(carry, inp):
         v, z, y, acc_y, n_spk = carry
-        x_t, valid_t = inp
-        current = dot(x_t, w_in_d) + dot(z, w_rec_d)
+        in_cur_t, valid_t = inp
+        current = in_cur_t + dot(z, w_rec_d)
         v_new, z_new, _ = lif_step(v, current, alpha, ncfg)
         y_new = li_step(y, dot(z_new, w_out_d), kappa, ncfg)
         w_inf = valid_t[:, None] if ecfg.infer_window == "valid" else 1.0
-        return (v_new, z_new, y_new, acc_y + y_new * w_inf, n_spk + z_new.sum()), None
+        return (v_new, z_new, y_new, acc_y + y_new * w_inf,
+                n_spk + (z_new * valid_t[:, None]).sum()), None
 
     carry0 = (jnp.zeros((B, H), dtype), jnp.zeros((B, H), dtype),
               jnp.zeros((B, n_out), dtype), jnp.zeros((B, n_out), dtype),
               jnp.zeros((), dtype))
-    (v, z, y, acc_y, n_spk), _ = jax.lax.scan(tick, carry0, (raster, valid))
+    (v, z, y, acc_y, n_spk), _ = jax.lax.scan(tick, carry0, (in_cur, valid))
     return {
         "acc_y": acc_y,
         "pred": jnp.argmax(acc_y, axis=-1),
-        "spike_rate": n_spk / (T * B * H),
+        "spike_rate": _spike_rate(n_spk, valid, H),
     }
 
 
@@ -359,14 +387,16 @@ def forward_dynamics(
     kappa = jnp.asarray(ncfg.kappa, dtype)
     w_in_d, w_rec_d, w_out_d, _, _, dot = _datapath(params, ncfg, ecfg)
 
-    def tick(carry, x_t):
+    in_cur = _input_projection(raster, w_in_d, dot)
+
+    def tick(carry, in_cur_t):
         v, z, y = carry
-        current = dot(x_t, w_in_d) + dot(z, w_rec_d)
+        current = in_cur_t + dot(z, w_rec_d)
         v_new, z_new, v_pre = lif_step(v, current, alpha, ncfg)
         y_new = li_step(y, dot(z_new, w_out_d), kappa, ncfg)
         return (v_new, z_new, y_new), (v_new, v_pre, z_new, y_new)
 
     carry0 = (jnp.zeros((B, H), dtype), jnp.zeros((B, H), dtype),
               jnp.zeros((B, n_out), dtype))
-    _, (v, v_pre, z, y) = jax.lax.scan(tick, carry0, raster)
+    _, (v, v_pre, z, y) = jax.lax.scan(tick, carry0, in_cur)
     return {"v": v, "v_pre": v_pre, "z": z, "y": y}

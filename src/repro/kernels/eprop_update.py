@@ -1,6 +1,27 @@
-"""Factored e-prop weight-update kernel.
+"""Training-side kernels: the factored e-prop update and the fused
+forward+update train kernel.
 
-Computes, in one reverse pass over the tick axis,
+Two variants serve the backend's training ops (see the data-movement table
+in :mod:`repro.kernels.traffic` / README):
+
+* :func:`eprop_update` — the split-pipeline reverse pass.  Consumes the
+  per-tick traces :func:`repro.kernels.rsnn_step.rsnn_forward` streamed to
+  HBM; serves the backend's ``eprop_update`` op and the two-kernel fallback
+  of the ``train`` op.
+* :func:`rsnn_train` — the fused ``train`` op.  One ``grid=(2T,)`` program:
+  a forward phase that runs the tick datapath, evaluates the readout error
+  *in-kernel* (``y_star``/``valid`` passed in, quantized ``y/threshold``
+  normalisation applied before the softmax), and stashes the
+  ``h/xbar/pbar/zbar/err`` traces in VMEM scratch; then a reverse phase
+  that folds them through the κ-filter into the three ``dw`` accumulators.
+  The tile's only HBM writes are the three ``dw`` matrices plus the
+  ``(B, O)`` readout accumulator and ``(B, 1)`` spike counts — the ~7·T·B·H
+  floats of intermediate trace traffic of the two-kernel pipeline never
+  leave the core.  Used whenever the trace scratch fits the VMEM budget
+  (:func:`repro.kernels.rsnn_step.fused_train_fits`); oversized tiles fall
+  back to forward + :func:`eprop_update`.
+
+The reverse pass computes, over ticks T-1..0,
 
   L[t]   = err[t] @ B_fbᵀ                    (MXU)
   F[t]   = L[t] + κ·F[t+1]                   (VMEM-carried reverse filter)
@@ -9,15 +30,14 @@ Computes, in one reverse pass over the tick axis,
   dW_out = Σ_t zbar[t]ᵀ err[t]
 
 i.e. the per-synapse eligibility SRAM of the chip becomes three VMEM-resident
-accumulator tiles fed by per-tick rank-B matmul updates.  grid=(T,) iterated
-in reverse via the index map; accumulators write out on the final step.
+accumulator tiles fed by per-tick rank-B matmul updates.
 
-Hardware-equivalence (quantized) mode needs no variant of this kernel: the
-chip's trace arithmetic is wider than its commit grid, so the quantized
-contract keeps e-prop traces float — the backend feeds this kernel the same
-float h/xbar/pbar/zbar it produces in quantized runs, with ``err`` already
-evaluated on the normalised readout (``y / threshold``) and ``b_fb`` in
-normalised weight units.  Quantization happens at the *commit*
+Hardware-equivalence (quantized) mode needs no variant of the reverse pass:
+the chip's trace arithmetic is wider than its commit grid, so the quantized
+contract keeps e-prop traces float — the forward phase produces the same
+float h/xbar/pbar/zbar it produces in quantized runs, with ``err`` evaluated
+on the normalised readout (``y / threshold``) and ``b_fb`` in normalised
+weight units.  Quantization happens at the *commit*
 (:class:`repro.optim.eprop_opt.EpropSGD` accumulate-then-round), exactly as
 on chip.
 """
@@ -25,12 +45,15 @@ on chip.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import QuantizedMode
+from repro.kernels.rsnn_step import tick_transition
 
 
 def _kernel(
@@ -121,3 +144,252 @@ def eprop_update(
         interpret=interpret,
     )(h, xbar, pbar, zbar, err, b_fb)
     return dw_in, dw_rec, dw_out
+
+
+# ---------------------------------------------------------------------------
+# fused forward + e-prop train kernel (train op)
+# ---------------------------------------------------------------------------
+
+
+def _train_kernel(
+    raster_ref,   # (1, B, N_in) — tick (i mod T)'s input spikes
+    y_star_ref,   # (B, O) one-hot targets
+    valid_ref,    # (1, B) TARGET_VALID mask for tick (i mod T)
+    w_in_ref,     # (N_in, H)
+    w_rec_ref,    # (H, H)
+    w_out_ref,    # (H, O)
+    b_fb_ref,     # (H, O) feedback (w_out or random B)
+    dw_in_ref,    # (N_in, H) out
+    dw_rec_ref,   # (H, H) out
+    dw_out_ref,   # (H, O) out
+    acc_y_ref,    # (B, O) out — infer-window-weighted readout accumulator
+    nspk_ref,     # (B, 1) out — valid-masked per-sample spike counts
+    v_scr,        # VMEM (B, H) forward carries …
+    z_scr,        # VMEM (B, H)
+    y_scr,        # VMEM (B, O)
+    xbar_scr,     # VMEM (B, N_in)
+    pbar_scr,     # VMEM (B, H)
+    zbar_scr,     # VMEM (B, H)
+    accy_scr,     # VMEM (B, O)
+    nspk_scr,     # VMEM (B, 1)
+    h_tr,         # VMEM (T, B, H)    — the on-core "trace SRAM" the
+    xbar_tr,      # VMEM (T, B, N_in)   two-kernel pipeline would stream
+    pbar_tr,      # VMEM (T, B, H)      through HBM
+    zbar_tr,      # VMEM (T, B, H)
+    err_tr,       # VMEM (T, B, O)
+    f_scr,        # VMEM (B, H) reverse filter carry
+    acc_in_scr,   # VMEM (N_in, H)
+    acc_rec_scr,  # VMEM (H, H)
+    acc_out_scr,  # VMEM (H, O)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    reset_sub: bool,
+    boxcar_width: float,
+    quant: Optional[QuantizedMode],
+    y_scale: float,
+    error_mode: str,
+    target_amplitude: float,
+    infer_all: bool,
+    T: int,
+):
+    i = pl.program_id(0)   # 0..2T-1: forward ticks 0..T-1, then T-1..0
+
+    @pl.when(i == 0)
+    def _init():
+        v_scr[...] = jnp.zeros_like(v_scr)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        y_scr[...] = jnp.zeros_like(y_scr)
+        xbar_scr[...] = jnp.zeros_like(xbar_scr)
+        pbar_scr[...] = jnp.zeros_like(pbar_scr)
+        zbar_scr[...] = jnp.zeros_like(zbar_scr)
+        accy_scr[...] = jnp.zeros_like(accy_scr)
+        nspk_scr[...] = jnp.zeros_like(nspk_scr)
+        f_scr[...] = jnp.zeros_like(f_scr)
+        acc_in_scr[...] = jnp.zeros_like(acc_in_scr)
+        acc_rec_scr[...] = jnp.zeros_like(acc_rec_scr)
+        acc_out_scr[...] = jnp.zeros_like(acc_out_scr)
+
+    @pl.when(i < T)
+    def _forward():
+        t = i
+        x_t = raster_ref[0]
+        valid_t = valid_ref[0]                 # (B,)
+        z = z_scr[...]
+
+        v_new, z_new, y_new, h = tick_transition(
+            x_t, v_scr[...], z, y_scr[...],
+            w_in_ref[...], w_rec_ref[...], w_out_ref[...],
+            alpha=alpha, kappa=kappa, v_th=v_th, reset_sub=reset_sub,
+            boxcar_width=boxcar_width, quant=quant,
+        )
+        xbar = alpha * xbar_scr[...] + x_t
+        pbar = alpha * pbar_scr[...] + z       # presyn trace: z BEFORE this tick
+        zbar = kappa * zbar_scr[...] + z_new
+
+        # readout error in-kernel: normalised units in quantized mode
+        # (y_scale = 1/threshold), identity otherwise; masked by the
+        # TARGET_VALID window (label_delay is already folded into `valid`).
+        y_err = y_new * y_scale
+        if error_mode == "softmax":
+            err = jax.nn.softmax(y_err, axis=-1) - y_star_ref[...]
+        else:
+            err = y_err - target_amplitude * y_star_ref[...]
+        err = err * valid_t[:, None]
+
+        h_tr[pl.ds(t, 1)] = h[None]
+        xbar_tr[pl.ds(t, 1)] = xbar[None]
+        pbar_tr[pl.ds(t, 1)] = pbar[None]
+        zbar_tr[pl.ds(t, 1)] = zbar[None]
+        err_tr[pl.ds(t, 1)] = err[None]
+
+        v_scr[...] = v_new
+        z_scr[...] = z_new
+        y_scr[...] = y_new
+        xbar_scr[...] = xbar
+        pbar_scr[...] = pbar
+        zbar_scr[...] = zbar
+
+        w_inf = 1.0 if infer_all else valid_t[:, None]
+        accy_scr[...] += y_new * w_inf
+        nspk_scr[...] += (z_new * valid_t[:, None]).sum(axis=1, keepdims=True)
+
+    @pl.when(i >= T)
+    def _backward():
+        t = 2 * T - 1 - i
+        err = err_tr[pl.ds(t, 1)][0]
+        L = jnp.dot(err, b_fb_ref[...].T, preferred_element_type=jnp.float32)
+        F = L + kappa * f_scr[...]
+        G = h_tr[pl.ds(t, 1)][0] * F
+
+        acc_in_scr[...] += jnp.dot(
+            xbar_tr[pl.ds(t, 1)][0].T, G, preferred_element_type=jnp.float32
+        )
+        acc_rec_scr[...] += jnp.dot(
+            pbar_tr[pl.ds(t, 1)][0].T, G, preferred_element_type=jnp.float32
+        )
+        acc_out_scr[...] += jnp.dot(
+            zbar_tr[pl.ds(t, 1)][0].T, err, preferred_element_type=jnp.float32
+        )
+        f_scr[...] = F
+
+    @pl.when(i == 2 * T - 1)
+    def _flush():
+        dw_in_ref[...] = acc_in_scr[...]
+        dw_rec_ref[...] = acc_rec_scr[...]
+        dw_out_ref[...] = acc_out_scr[...]
+        acc_y_ref[...] = accy_scr[...]
+        nspk_ref[...] = nspk_scr[...]
+
+
+def rsnn_train(
+    raster: jax.Array,   # (T, B, N_in) f32
+    y_star: jax.Array,   # (B, O) one-hot targets
+    valid: jax.Array,    # (T, B) f32 TARGET_VALID mask
+    w_in: jax.Array,     # (N_in, H)
+    w_rec: jax.Array,    # (H, H) — pre-masked
+    w_out: jax.Array,    # (H, O)
+    b_fb: jax.Array,     # (H, O) feedback matrix (w_out or random B)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float = 1.0,
+    reset: str = "sub",
+    boxcar_width: float = 0.5,
+    quant: Optional[QuantizedMode] = None,
+    error: str = "softmax",
+    target_amplitude: float = 1.0,
+    infer_window: str = "valid",
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused forward + factored e-prop update over one ``(T, B)`` tile.
+
+    One two-phase ``grid=(2T,)`` program — steps ``0..T-1`` run the forward
+    tick datapath with the readout error evaluated in-kernel, steps
+    ``T..2T-1`` run the reverse κ-filter — with the whole
+    ``h/xbar/pbar/zbar/err`` trace set held in VMEM scratch.  Returns
+    ``(dw_in, dw_rec, dw_out, acc_y (B, O), n_spk (B, 1))``; nothing of
+    O(T·B·H) ever touches HBM.
+
+    The caller is responsible for checking the trace scratch fits
+    (:func:`repro.kernels.rsnn_step.fused_train_fits`) and for masking
+    ``dw_rec``'s self-recurrence afterwards (same contract as
+    :func:`eprop_update`).  Quantized mode: pass weights through
+    ``QuantizedMode.to_membrane`` but ``b_fb`` in normalised weight units —
+    the error is evaluated on ``y / threshold`` in-kernel so the learning
+    signal matches the float model's scale.
+    """
+    T, B, n_in = raster.shape
+    H = w_rec.shape[0]
+    O = w_out.shape[1]
+    dt = raster.dtype
+    if quant is not None:
+        alpha, kappa, v_th = quant.alpha, quant.kappa, float(quant.threshold)
+    y_scale = 1.0 if quant is None else 1.0 / float(quant.threshold)
+
+    kern = functools.partial(
+        _train_kernel,
+        alpha=float(alpha),
+        kappa=float(kappa),
+        v_th=float(v_th),
+        reset_sub=(reset == "sub"),
+        boxcar_width=float(boxcar_width),
+        quant=quant,
+        y_scale=y_scale,
+        error_mode=error,
+        target_amplitude=float(target_amplitude),
+        infer_all=(infer_window == "all"),
+        T=T,
+    )
+    # Phase 2 re-visits the tick blocks via (i mod T); their contents are
+    # ignored there (the traces live in VMEM) — the index map only has to be
+    # in-bounds.
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    outs = pl.pallas_call(
+        kern,
+        grid=(2 * T,),
+        in_specs=[
+            pl.BlockSpec((1, B, n_in), lambda i: (i % T, 0, 0)),
+            full((B, O)),
+            pl.BlockSpec((1, B), lambda i: (i % T, 0)),
+            full((n_in, H)),
+            full((H, H)),
+            full((H, O)),
+            full((H, O)),
+        ],
+        out_specs=[
+            full((n_in, H)), full((H, H)), full((H, O)),
+            full((B, O)), full((B, 1)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_in, H), jnp.float32),
+            jax.ShapeDtypeStruct((H, H), jnp.float32),
+            jax.ShapeDtypeStruct((H, O), jnp.float32),
+            jax.ShapeDtypeStruct((B, O), dt),
+            jax.ShapeDtypeStruct((B, 1), dt),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, H), jnp.float32),      # v
+            pltpu.VMEM((B, H), jnp.float32),      # z
+            pltpu.VMEM((B, O), jnp.float32),      # y
+            pltpu.VMEM((B, n_in), jnp.float32),   # xbar carry
+            pltpu.VMEM((B, H), jnp.float32),      # pbar carry
+            pltpu.VMEM((B, H), jnp.float32),      # zbar carry
+            pltpu.VMEM((B, O), jnp.float32),      # acc_y
+            pltpu.VMEM((B, 1), jnp.float32),      # n_spk
+            pltpu.VMEM((T, B, H), jnp.float32),   # h trace
+            pltpu.VMEM((T, B, n_in), jnp.float32),  # xbar trace
+            pltpu.VMEM((T, B, H), jnp.float32),   # pbar trace
+            pltpu.VMEM((T, B, H), jnp.float32),   # zbar trace
+            pltpu.VMEM((T, B, O), jnp.float32),   # err trace
+            pltpu.VMEM((B, H), jnp.float32),      # F carry
+            pltpu.VMEM((n_in, H), jnp.float32),   # dw_in acc
+            pltpu.VMEM((H, H), jnp.float32),      # dw_rec acc
+            pltpu.VMEM((H, O), jnp.float32),      # dw_out acc
+        ],
+        interpret=interpret,
+    )(raster, y_star, valid, w_in, w_rec, w_out, b_fb)
+    dw_in, dw_rec, dw_out, acc_y, n_spk = outs
+    return dw_in, dw_rec, dw_out, acc_y, n_spk

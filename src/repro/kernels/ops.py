@@ -46,6 +46,71 @@ def rsnn_forward(
     )
 
 
+@partial(
+    jax.jit,
+    static_argnames=("alpha", "kappa", "v_th", "reset", "quant", "infer_window"),
+)
+def rsnn_infer(
+    raster: jax.Array,
+    valid: jax.Array,
+    w_in: jax.Array,
+    w_rec: jax.Array,
+    w_out: jax.Array,
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float = 1.0,
+    reset: str = "sub",
+    quant: Optional[QuantizedMode] = None,
+    infer_window: str = "valid",
+) -> Tuple[jax.Array, jax.Array]:
+    """Inference-specialized forward (serving path): VMEM-accumulated
+    ``(acc_y, n_spk)``, no per-tick HBM streams."""
+    return _rsnn.rsnn_infer(
+        raster, valid, w_in, w_rec, w_out,
+        alpha=alpha, kappa=kappa, v_th=v_th, reset=reset, quant=quant,
+        infer_window=infer_window, interpret=_interpret(),
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "alpha", "kappa", "v_th", "reset", "boxcar_width", "quant",
+        "error", "target_amplitude", "infer_window",
+    ),
+)
+def rsnn_train(
+    raster: jax.Array,
+    y_star: jax.Array,
+    valid: jax.Array,
+    w_in: jax.Array,
+    w_rec: jax.Array,
+    w_out: jax.Array,
+    b_fb: jax.Array,
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float = 1.0,
+    reset: str = "sub",
+    boxcar_width: float = 0.5,
+    quant: Optional[QuantizedMode] = None,
+    error: str = "softmax",
+    target_amplitude: float = 1.0,
+    infer_window: str = "valid",
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused train op: forward + in-kernel readout error + reverse e-prop in
+    one two-phase kernel, traces VMEM-resident.  Caller checks
+    :func:`repro.kernels.rsnn_step.fused_train_fits` first."""
+    return _eprop.rsnn_train(
+        raster, y_star, valid, w_in, w_rec, w_out, b_fb,
+        alpha=alpha, kappa=kappa, v_th=v_th, reset=reset,
+        boxcar_width=boxcar_width, quant=quant, error=error,
+        target_amplitude=target_amplitude, infer_window=infer_window,
+        interpret=_interpret(),
+    )
+
+
 @partial(jax.jit, static_argnames=("kappa",))
 def eprop_update(
     h: jax.Array,

@@ -1,4 +1,4 @@
-"""Fused RSNN-sample kernel — ReckOn's neuron-update pipeline on the MXU.
+"""Forward-side RSNN kernels — ReckOn's neuron-update pipeline on the MXU.
 
 The chip walks neurons sequentially per tick, streaming membrane/trace words
 from SRAM.  The TPU-native re-blocking keeps the *whole network state
@@ -7,33 +7,38 @@ on a TPU core, so VMEM scratch carries state), and turns the per-neuron
 MAC loop into two MXU matmuls per tick:
 
   grid = (T,)                       one step per AER tick
-  VMEM scratch: v, z, y, xbar, pbar, zbar   (the "neuron SRAM")
+  VMEM scratch: v, z, y, (xbar, pbar, zbar)  (the "neuron SRAM")
   per tick: current = x_t @ W_in + z @ W_rec      (MXU)
             LIF update, boxcar pseudo-derivative   (VPU)
             y = κ·y + z_new @ W_out                (MXU)
             trace filters (α, κ)                   (VPU)
 
-Outputs stream the per-tick quantities the factored e-prop update needs
-(h, xbar, pbar, zbar, y) back to HBM — O(T·H) traffic, never O(T·H²).
+Two op-specialized variants live here (one backend op each — see
+:mod:`repro.core.backend` and the data-movement table in
+``kernels/traffic.py`` / README):
+
+* :func:`rsnn_forward` — serves the ``forward_traces`` and ``dynamics`` ops.
+  Streams the per-tick quantities the *split* factored e-prop update needs
+  (z, h, xbar, pbar, zbar, y, v) back to HBM — O(T·H) traffic per tick,
+  never O(T·H²).  The fused ``train`` op (:func:`repro.kernels.eprop_update.
+  rsnn_train`) supersedes it on the training path whenever the trace
+  scratch fits VMEM.
+* :func:`rsnn_infer` — serves the ``inference`` op.  Accumulates the
+  valid-weighted readout and the valid-masked spike count *in VMEM* and
+  streams **no** per-tick outputs: HBM writes drop from seven ``(T,B,·)``
+  tensors to one ``(B,O)`` readout tile plus a ``(B,1)`` spike count — the
+  serving hot path.
 
 ReckOn caps N_in/H at 256 ⇒ weights (256×256 f32 = 256 KiB) sit in VMEM for
-the entire sample.  Batch tiles up to ~128 keep total VMEM ≲ 2 MiB — the
-budget the batched serving runtime sizes its tiles against
-(:func:`repro.serve.batching.max_batch_for`).  The sole consumer is the
-``"kernel"`` backend of :class:`repro.core.backend.ExecutionBackend`, which
-training (END_S/END_B commits), evaluation and serving all dispatch through.
+the entire sample.  Batch tiles up to ~128 keep the whole state within the
+VMEM budget — see the bytes-budget helpers below, the single source every
+tile-sizing decision in the system derives from.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional
-
-# The kernel's VMEM contract: batch tiles up to ~128 samples keep the whole
-# network state + double-buffered tick blocks ≲ 2 MiB for chip-maximal
-# (256/256/16) networks.  Enforced by the execution backend for every kernel
-# tile and by the serving runtime's tile sizing (repro.serve.batching).
-KERNEL_SAMPLE_CAP = 128
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +46,162 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import QuantizedMode
+
+# ---------------------------------------------------------------------------
+# VMEM bytes budget — the single source of truth for tile sizing.
+#
+# Everything that sizes a kernel tile derives from these helpers instead of
+# hand-synced constants: KERNEL_SAMPLE_CAP (below),
+# ExecutionBackend._note's tile guard, the serving runtime's
+# repro.serve.batching.max_batch_for, and the fused-train scratch sizing
+# (fused_train_fits).
+# ---------------------------------------------------------------------------
+
+# Conservative slice of the ~16 MiB/core VMEM left to one kernel tile once
+# double-buffered HBM streaming and compiler temporaries are accounted for.
+DEFAULT_VMEM_BUDGET = 4 * 2**20
+
+F32_BYTES = 4  # bytes per element; the kernels are f32 throughout
+_F32 = F32_BYTES
+
+
+def weight_elems(n_in: int, n_hid: int, n_out: int) -> int:
+    """Elements in the weight set (w_in + w_rec + w_out) — shared by the
+    VMEM budget below and the HBM traffic table (:mod:`repro.kernels.traffic`)."""
+    return n_in * n_hid + n_hid * n_hid + n_hid * n_out
+
+
+def weights_bytes(n_in: int, n_hid: int, n_out: int) -> int:
+    """VMEM-resident weight bytes (w_in + w_rec + w_out, f32)."""
+    return _F32 * weight_elems(n_in, n_hid, n_out)
+
+
+def state_bytes_per_sample(n_in: int, n_hid: int, n_out: int) -> int:
+    """VMEM bytes one batch row occupies inside the worst-case tick kernel
+    (the trace-streaming :func:`rsnn_forward`): carry scratch
+    (v, z, y, xbar, pbar, zbar) plus double-buffered per-tick input/output
+    blocks (tick in + the seven streamed outputs)."""
+    scratch = 4 * n_hid + n_out + n_in      # v,z,pbar,zbar (H) + y (O) + xbar (N)
+    blocks = 5 * n_hid + 2 * n_in + n_out   # in (N) + outs z,h,xbar,pbar,zbar,y,v
+    return _F32 * (scratch + 2 * blocks)
+
+
+def max_batch_for_dims(
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    cap: Optional[int] = None,
+) -> int:
+    """Largest batch tile the VMEM budget admits for one network shape."""
+    spare = vmem_budget - weights_bytes(n_in, n_hid, n_out)
+    if spare <= 0:
+        return 1
+    b = spare // state_bytes_per_sample(n_in, n_hid, n_out)
+    if cap is not None:
+        b = min(cap, b)
+    return int(max(1, b))
+
+
+# The kernel's hard VMEM contract: the largest power-of-two batch tile a
+# chip-maximal (256 in / 256 hid / 16 out) network fits in the default
+# budget.  Derived, not hand-synced — evaluates to 128.  Enforced by the
+# execution backend for every kernel tile and by the serving runtime's tile
+# sizing (repro.serve.batching.max_batch_for).
+_CHIP_MAX_DIMS = (256, 256, 16)
+KERNEL_SAMPLE_CAP = 1 << (max_batch_for_dims(*_CHIP_MAX_DIMS).bit_length() - 1)
+
+
+def fused_train_bytes(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> int:
+    """VMEM bytes the fused train kernel
+    (:func:`repro.kernels.eprop_update.rsnn_train`) needs for one ``(T, B)``
+    tile: weights + feedback, the forward carry state, the ``(T, B, ·)``
+    e-prop trace scratch (h, xbar, pbar, zbar, err — the tensors the
+    two-kernel pipeline would round-trip through HBM), the three ``dw``
+    accumulators, and the double-buffered tick input blocks."""
+    weights = weights_bytes(n_in, n_hid, n_out) + _F32 * n_hid * n_out  # + b_fb
+    carries = _F32 * B * (5 * n_hid + n_in + 2 * n_out + 1)  # v,z,pbar,zbar,f,xbar,y,acc_y,nspk
+    traces = _F32 * T * B * (3 * n_hid + n_in + n_out)       # h,pbar,zbar + xbar + err
+    accs = _F32 * (n_in * n_hid + n_hid * n_hid + n_hid * n_out)
+    blocks = _F32 * 2 * B * (n_in + 1)                       # raster + valid tick blocks
+    return weights + carries + traces + accs + blocks
+
+
+def fused_train_fits(
+    T: int,
+    B: int,
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> bool:
+    """Whether one ``(T, B)`` training tile's whole e-prop trace set fits
+    the VMEM budget — the static dispatch the backend's ``train`` op makes
+    between the fused kernel and the two-kernel fallback pipeline."""
+    return fused_train_bytes(T, B, n_in, n_hid, n_out) <= vmem_budget
+
+
+# ---------------------------------------------------------------------------
+# shared tick datapath
+# ---------------------------------------------------------------------------
+
+
+def tick_transition(
+    x_t: jax.Array,     # (B, N_in) input spikes this tick
+    v: jax.Array,       # (B, H) post-reset membrane
+    z: jax.Array,       # (B, H) spikes from the previous tick
+    y: jax.Array,       # (B, O) readout membrane
+    w_in: jax.Array,    # (N_in, H)
+    w_rec: jax.Array,   # (H, H) — pre-masked
+    w_out: jax.Array,   # (H, O)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    reset_sub: bool,
+    boxcar_width: float,
+    quant: Optional[QuantizedMode],
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One LIF + LI tick on the MXU/VPU — the datapath every RSNN kernel
+    (forward, inference-only, fused train) shares.
+
+    Returns ``(v_new, z_new, y_new, h)`` with ``h`` the boxcar
+    pseudo-derivative evaluated at the pre-reset membrane.
+
+    Quantized mode runs the same MXU pipeline on integer values carried in
+    f32 (all exact below 2**24); ``Precision.HIGHEST`` keeps the dots exact
+    on TPU (the default f32 passes would round the >bf16-mantissa weights).
+    """
+    precision = None if quant is None else jax.lax.Precision.HIGHEST
+    current = jnp.dot(x_t, w_in, preferred_element_type=jnp.float32,
+                      precision=precision)
+    current += jnp.dot(z, w_rec, preferred_element_type=jnp.float32,
+                       precision=precision)
+
+    if quant is None:
+        v_pre = alpha * v + current
+    else:
+        # sat(floor(v * alpha_reg/256) + current) on the signed membrane grid
+        v_pre = quant.sat(quant.leak(v, quant.alpha_reg) + current)
+    z_new = (v_pre >= v_th).astype(v_pre.dtype)
+    if reset_sub:
+        v_new = v_pre - z_new * v_th
+    else:
+        v_new = v_pre * (1.0 - z_new)
+    h = (jnp.abs(v_pre - v_th) < boxcar_width * v_th).astype(v_pre.dtype)
+
+    y_lin = jnp.dot(z_new, w_out, preferred_element_type=jnp.float32,
+                    precision=precision)
+    if quant is None:
+        y_new = kappa * y + y_lin
+    else:
+        y_new = quant.sat(quant.leak(y, quant.kappa_reg) + y_lin)
+    return v_new, z_new, y_new, h
+
+
+# ---------------------------------------------------------------------------
+# trace-streaming forward (forward_traces / dynamics ops)
+# ---------------------------------------------------------------------------
 
 
 def _kernel(
@@ -83,33 +244,12 @@ def _kernel(
     x_t = raster_ref[0]
     z = z_scr[...]
 
-    # Quantized mode runs the same MXU pipeline on integer values carried in
-    # f32 (all exact below 2**24); Precision.HIGHEST keeps the dots exact on
-    # TPU (the default f32 passes would round the >bf16-mantissa weights).
-    precision = None if quant is None else jax.lax.Precision.HIGHEST
-    current = jnp.dot(x_t, w_in_ref[...], preferred_element_type=jnp.float32,
-                      precision=precision)
-    current += jnp.dot(z, w_rec_ref[...], preferred_element_type=jnp.float32,
-                       precision=precision)
-
-    if quant is None:
-        v_pre = alpha * v_scr[...] + current
-    else:
-        # sat(floor(v * alpha_reg/256) + current) on the signed membrane grid
-        v_pre = quant.sat(quant.leak(v_scr[...], quant.alpha_reg) + current)
-    z_new = (v_pre >= v_th).astype(v_pre.dtype)
-    if reset_sub:
-        v_new = v_pre - z_new * v_th
-    else:
-        v_new = v_pre * (1.0 - z_new)
-    h = (jnp.abs(v_pre - v_th) < boxcar_width * v_th).astype(v_pre.dtype)
-
-    y_lin = jnp.dot(z_new, w_out_ref[...], preferred_element_type=jnp.float32,
-                    precision=precision)
-    if quant is None:
-        y_new = kappa * y_scr[...] + y_lin
-    else:
-        y_new = quant.sat(quant.leak(y_scr[...], quant.kappa_reg) + y_lin)
+    v_new, z_new, y_new, h = tick_transition(
+        x_t, v_scr[...], z, y_scr[...],
+        w_in_ref[...], w_rec_ref[...], w_out_ref[...],
+        alpha=alpha, kappa=kappa, v_th=v_th, reset_sub=reset_sub,
+        boxcar_width=boxcar_width, quant=quant,
+    )
     xbar = alpha * xbar_scr[...] + x_t
     pbar = alpha * pbar_scr[...] + z          # presyn trace: z BEFORE this tick
     zbar = kappa * zbar_scr[...] + z_new
@@ -146,6 +286,13 @@ def rsnn_forward(
 ) -> Dict[str, jax.Array]:
     """Fused forward over one ``(T, B)`` tile; returns per-tick tensors
     (z, h, xbar, pbar, zbar, y, v — post-reset membrane trajectory).
+
+    This is the *trace-streaming* variant: it serves the backend's
+    ``forward_traces`` op (split-pipeline training), the ``dynamics`` probe,
+    and the two-kernel fallback of the ``train`` op.  The ``inference`` op
+    uses :func:`rsnn_infer` (no per-tick streams); the fused ``train`` op
+    uses :func:`repro.kernels.eprop_update.rsnn_train` when its trace
+    scratch fits VMEM.
 
     With ``quant`` set the tick pipeline is ReckOn's fixed-point datapath
     (saturating membrane grid, register-driven floor leaks); ``alpha``,
@@ -207,3 +354,132 @@ def rsnn_forward(
     z, h, xbar, pbar, zbar, y, v = outs
     return {"z": z, "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar, "y": y,
             "v": v}
+
+
+# ---------------------------------------------------------------------------
+# inference-specialized forward (inference op) — no per-tick streams
+# ---------------------------------------------------------------------------
+
+
+def _infer_kernel(
+    raster_ref,   # (1, B, N_in)
+    valid_ref,    # (1, B)
+    w_in_ref,     # (N_in, H)
+    w_rec_ref,    # (H, H)
+    w_out_ref,    # (H, O)
+    acc_y_ref,    # (B, O) out
+    nspk_ref,     # (B, 1) out — valid-masked per-sample spike counts
+    v_scr,        # VMEM (B, H)
+    z_scr,        # VMEM (B, H)
+    y_scr,        # VMEM (B, O)
+    acc_scr,      # VMEM (B, O)
+    nspk_scr,     # VMEM (B, 1)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    reset_sub: bool,
+    quant: Optional[QuantizedMode],
+    infer_all: bool,
+    T: int,
+):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        v_scr[...] = jnp.zeros_like(v_scr)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        y_scr[...] = jnp.zeros_like(y_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        nspk_scr[...] = jnp.zeros_like(nspk_scr)
+
+    x_t = raster_ref[0]
+    valid_t = valid_ref[0]                     # (B,)
+
+    v_new, z_new, y_new, _ = tick_transition(
+        x_t, v_scr[...], z_scr[...], y_scr[...],
+        w_in_ref[...], w_rec_ref[...], w_out_ref[...],
+        alpha=alpha, kappa=kappa, v_th=v_th, reset_sub=reset_sub,
+        boxcar_width=0.5, quant=quant,
+    )
+    v_scr[...] = v_new
+    z_scr[...] = z_new
+    y_scr[...] = y_new
+
+    w_inf = 1.0 if infer_all else valid_t[:, None]
+    acc_scr[...] += y_new * w_inf
+    nspk_scr[...] += (z_new * valid_t[:, None]).sum(axis=1, keepdims=True)
+
+    @pl.when(t == T - 1)
+    def _flush():
+        acc_y_ref[...] = acc_scr[...]
+        nspk_ref[...] = nspk_scr[...]
+
+
+def rsnn_infer(
+    raster: jax.Array,   # (T, B, N_in) f32
+    valid: jax.Array,    # (T, B) f32 TARGET_VALID mask
+    w_in: jax.Array,     # (N_in, H)
+    w_rec: jax.Array,    # (H, H) — pre-masked
+    w_out: jax.Array,    # (H, O)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float = 1.0,
+    reset: str = "sub",
+    quant: Optional[QuantizedMode] = None,
+    infer_window: str = "valid",
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Inference-only forward over one ``(T, B)`` tile — the serving path.
+
+    Accumulates the readout (weighted by ``valid`` per ``infer_window``) and
+    the valid-masked spike count entirely in VMEM; streams **no** per-tick
+    tensors.  Returns ``(acc_y (B, O), n_spk (B, 1))`` — in quantized mode
+    both are exact integers carried in f32 (bit-identical to the golden
+    reference's accumulators, see ``tests/test_quant_equivalence.py``).
+    """
+    T, B, n_in = raster.shape
+    H = w_rec.shape[0]
+    O = w_out.shape[1]
+    dt = raster.dtype
+    if quant is not None:
+        alpha, kappa, v_th = quant.alpha, quant.kappa, float(quant.threshold)
+
+    kern = functools.partial(
+        _infer_kernel,
+        alpha=float(alpha),
+        kappa=float(kappa),
+        v_th=float(v_th),
+        reset_sub=(reset == "sub"),
+        quant=quant,
+        infer_all=(infer_window == "all"),
+        T=T,
+    )
+    full = lambda shape: pl.BlockSpec(shape, lambda t: tuple(0 for _ in shape))
+
+    acc_y, n_spk = pl.pallas_call(
+        kern,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, B, n_in), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, B), lambda t: (t, 0)),
+            full((n_in, H)),
+            full((H, H)),
+            full((H, O)),
+        ],
+        out_specs=[full((B, O)), full((B, 1))],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, O), dt),
+            jax.ShapeDtypeStruct((B, 1), dt),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, H), jnp.float32),
+            pltpu.VMEM((B, H), jnp.float32),
+            pltpu.VMEM((B, O), jnp.float32),
+            pltpu.VMEM((B, O), jnp.float32),
+            pltpu.VMEM((B, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(raster, valid, w_in, w_rec, w_out)
+    return acc_y, n_spk

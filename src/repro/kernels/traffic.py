@@ -1,0 +1,132 @@
+"""Per-op HBM data-movement accounting for the RSNN kernels.
+
+ReckOn's value proposition is keeping state on-chip so only spikes and
+end-of-sample updates cross the memory boundary; the TPU mapping's analog of
+that boundary is HBM↔VMEM traffic.  This module is the bookkeeping for it:
+analytic bytes-to/from-HBM per ``(T, B)`` tile for every backend op, in both
+the split two-kernel formulation and the op-specialized fused kernels.
+
+These counts are what ``benchmarks/bench_kernels.py`` reports and gates on
+for CPU CI (where the kernels run interpreted and wall-clock is
+meaningless), what the serving engine's ``hbm_bytes_streamed`` stat sums,
+and the source of the README performance table.
+
+All streams are f32 (4 bytes/element).  Weights are counted once per tile
+(they are VMEM-resident across the whole grid).  Per-tile stream elements:
+
+====================  =========================================  ==============
+op / kernel           reads (per tile)                           writes
+====================  =========================================  ==============
+forward (traces)      raster T·B·N                               z,h,pbar,zbar,
+                                                                 v: 5·T·B·H +
+                                                                 xbar T·B·N +
+                                                                 y T·B·O
+eprop_update          h,pbar,zbar 3·T·B·H + xbar T·B·N +         dw: N·H + H² +
+                      err T·B·O                                  H·O
+train (two-kernel)    forward + err eval (y T·B·O → err          forward writes
+                      T·B·O) + eprop_update reads                + err T·B·O +
+                                                                 dw
+train (fused)         raster 2·T·B·N (phase-2 grid re-touch) +   dw + acc_y B·O
+                      valid 2·T·B + y_star B·O                   + n_spk B
+inference (streamed)  forward + acc/spike reduce reads           forward writes
+                      (y T·B·O + z T·B·H)                        + acc_y B·O
+inference (fused)     raster T·B·N + valid T·B                   acc_y B·O +
+                                                                 n_spk B
+====================  =========================================  ==============
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+# One element-size / weight-count source with the VMEM budget helpers.
+from repro.kernels.rsnn_step import F32_BYTES as _F32
+from repro.kernels.rsnn_step import weight_elems
+
+
+def _weights(n_in: int, n_hid: int, n_out: int, feedback: bool = False) -> int:
+    w = weight_elems(n_in, n_hid, n_out)
+    if feedback:
+        w += n_hid * n_out
+    return w
+
+
+def _dw(n_in: int, n_hid: int, n_out: int) -> int:
+    return weight_elems(n_in, n_hid, n_out)
+
+
+def forward_traces_bytes(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> int:
+    """Trace-streaming forward (``rsnn_forward``): reads the raster +
+    weights, writes seven per-tick streams (z, h, xbar, pbar, zbar, y, v)."""
+    reads = T * B * n_in + _weights(n_in, n_hid, n_out)
+    writes = T * B * (5 * n_hid + n_in + n_out)
+    return _F32 * (reads + writes)
+
+
+def eprop_update_bytes(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> int:
+    """Split reverse pass (``eprop_update``): re-reads five trace streams,
+    writes the three ``dw`` matrices."""
+    reads = T * B * (3 * n_hid + n_in + n_out) + n_hid * n_out
+    writes = _dw(n_in, n_hid, n_out)
+    return _F32 * (reads + writes)
+
+
+def train_two_kernel_bytes(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> int:
+    """The pre-specialization train path: trace-streaming forward, an XLA
+    pass evaluating ``err`` from the streamed ``y`` (read T·B·O, write
+    T·B·O), then the split reverse pass re-reading the traces."""
+    err_eval = _F32 * (2 * T * B * n_out + B * n_out + T * B)  # y→err + y*/valid
+    return (
+        forward_traces_bytes(T, B, n_in, n_hid, n_out)
+        + err_eval
+        + eprop_update_bytes(T, B, n_in, n_hid, n_out)
+    )
+
+
+def train_fused_bytes(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> int:
+    """Fused train kernel (``rsnn_train``): the raster/valid tick blocks are
+    touched twice (the phase-2 grid re-visits them, contents unused), targets
+    and weights once; the only writes are the ``dw`` matrices, the readout
+    accumulator and the spike counts — no per-tick stream ever reaches HBM."""
+    reads = (
+        2 * T * B * n_in                      # raster, both phases
+        + 2 * T * B                           # valid, both phases
+        + B * n_out                           # y_star
+        + _weights(n_in, n_hid, n_out, feedback=True)
+    )
+    writes = _dw(n_in, n_hid, n_out) + B * n_out + B
+    return _F32 * (reads + writes)
+
+
+def infer_streamed_bytes(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> int:
+    """The pre-specialization serving path: trace-streaming forward, then an
+    XLA reduction re-reading ``y`` (valid-weighted accumulate) and ``z``
+    (spike count) to produce the ``(B, O)`` logits."""
+    reduce_reads = _F32 * (T * B * n_out + T * B * n_hid + 2 * T * B)
+    return (
+        forward_traces_bytes(T, B, n_in, n_hid, n_out)
+        + reduce_reads
+        + _F32 * B * n_out
+    )
+
+
+def infer_fused_bytes(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> int:
+    """Inference-specialized kernel (``rsnn_infer``): reads the raster, the
+    valid mask and the weights; writes one ``(B, O)`` tile + ``(B,)``
+    counts."""
+    reads = T * B * n_in + T * B + _weights(n_in, n_hid, n_out)
+    writes = B * n_out + B
+    return _F32 * (reads + writes)
+
+
+def op_table(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> Dict[str, int]:
+    """The full before/after data-movement table for one tile shape."""
+    args = (T, B, n_in, n_hid, n_out)
+    return {
+        "forward_traces": forward_traces_bytes(*args),
+        "eprop_update": eprop_update_bytes(*args),
+        "train_two_kernel": train_two_kernel_bytes(*args),
+        "train_fused": train_fused_bytes(*args),
+        "infer_streamed": infer_streamed_bytes(*args),
+        "infer_fused": infer_fused_bytes(*args),
+    }

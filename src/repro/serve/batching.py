@@ -13,9 +13,10 @@ rests on two invariants, both inherited from the controller
   padded ticks — so ``acc_y`` is bit-identical to running the sample at its
   native length.
 
-This module also owns the VMEM budget arithmetic: the kernel keeps the whole
-network state resident in VMEM (see the ``rsnn_step.py`` docstring), which
-caps the batch tile at ~128 samples for chip-maximal (256/256/16) networks.
+The VMEM budget arithmetic lives with the kernels
+(:mod:`repro.kernels.rsnn_step`'s bytes-budget helpers — the same source
+``KERNEL_SAMPLE_CAP``, the backend's tile guard and the fused-train scratch
+sizing derive from); this module only adapts it to :class:`RSNNConfig`.
 """
 
 from __future__ import annotations
@@ -27,13 +28,14 @@ import numpy as np
 from repro.core.aer import EVT_END, EVT_LABEL, EVT_SPIKE, MAX_ADDR, MAX_TICK
 from repro.core.rsnn import RSNNConfig
 
-# Hard cap from the kernel contract ("batch tiles up to ~128 keep total
-# VMEM <~ 2 MiB") — owned by the kernel, re-exported for tile sizing.
-from repro.kernels.rsnn_step import KERNEL_SAMPLE_CAP  # noqa: F401
-
-# Conservative slice of the ~16 MiB/core VMEM left to the serving tile once
-# double-buffered HBM streaming and compiler temporaries are accounted for.
-DEFAULT_VMEM_BUDGET = 4 * 2**20
+# Re-exported for tile sizing — both owned by the kernel contract.
+from repro.kernels.rsnn_step import (  # noqa: F401
+    DEFAULT_VMEM_BUDGET,
+    KERNEL_SAMPLE_CAP,
+    max_batch_for_dims,
+    state_bytes_per_sample,
+    weights_bytes,
+)
 
 
 def round_up(n: int, multiple: int) -> int:
@@ -41,27 +43,20 @@ def round_up(n: int, multiple: int) -> int:
 
 
 def vmem_bytes_per_sample(cfg: RSNNConfig) -> int:
-    """VMEM bytes one batch row occupies inside the tick kernel.
-
-    Scratch state (v, z, y, xbar, pbar, zbar) plus the double-buffered
-    per-tick input/output blocks; f32 throughout.
-    """
-    h, n, o = cfg.n_hid, cfg.n_in, cfg.n_out
-    scratch = 4 * h + o + n                   # v,z,pbar,zbar (H) + y (O) + xbar (N)
-    blocks = 4 * h + 2 * n + o                # tick in (N) + outs z,h,pbar,zbar,xbar,y
-    return 4 * (scratch + 2 * blocks)
+    """VMEM bytes one batch row occupies inside the worst-case tick kernel
+    (carry scratch + double-buffered per-tick blocks; f32 throughout)."""
+    return state_bytes_per_sample(cfg.n_in, cfg.n_hid, cfg.n_out)
 
 
 def weights_vmem_bytes(cfg: RSNNConfig) -> int:
-    return 4 * (cfg.n_in * cfg.n_hid + cfg.n_hid * cfg.n_hid + cfg.n_hid * cfg.n_out)
+    return weights_bytes(cfg.n_in, cfg.n_hid, cfg.n_out)
 
 
 def max_batch_for(cfg: RSNNConfig, vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
     """Largest batch tile the VMEM budget admits, capped by the kernel contract."""
-    spare = vmem_budget - weights_vmem_bytes(cfg)
-    if spare <= 0:
-        return 1
-    return int(max(1, min(KERNEL_SAMPLE_CAP, spare // vmem_bytes_per_sample(cfg))))
+    return max_batch_for_dims(
+        cfg.n_in, cfg.n_hid, cfg.n_out, vmem_budget, cap=KERNEL_SAMPLE_CAP
+    )
 
 
 def request_ticks(events: np.ndarray) -> int:

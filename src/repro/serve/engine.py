@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.backend import BackendLike, as_backend
 from repro.core.rsnn import RSNNConfig
+from repro.kernels import traffic
 from repro.serve import batching
 from repro.serve.scheduler import BatchTile, BucketingScheduler
 
@@ -68,10 +69,20 @@ class ServeStats:
     p99_latency_s: float
     mean_batch: float
     compiled_shapes: int
+    # Analytic HBM bytes the served tiles streamed when the kernel backend
+    # runs (:func:`repro.kernels.traffic.infer_fused_bytes` — one (B, O)
+    # logits tile per batch instead of seven (T, B, ·) tensors); 0 on the
+    # scan backend, which runs no Pallas tile.
+    hbm_bytes_streamed: int = 0
 
     @classmethod
     def collect(
-        cls, results: List[ServeResult], wall_s: float, batches: int, shapes: int
+        cls,
+        results: List[ServeResult],
+        wall_s: float,
+        batches: int,
+        shapes: int,
+        hbm_bytes: int = 0,
     ) -> "ServeStats":
         lat = np.array([r.latency_s for r in results]) if results else np.zeros(1)
         return cls(
@@ -83,6 +94,7 @@ class ServeStats:
             p99_latency_s=float(np.percentile(lat, 99)),
             mean_batch=(len(results) / batches) if batches else 0.0,
             compiled_shapes=shapes,
+            hbm_bytes_streamed=hbm_bytes,
         )
 
 
@@ -124,6 +136,7 @@ class BatchedEngine:
         assert self.max_batch <= batching.KERNEL_SAMPLE_CAP
         self.tick_granularity = tick_granularity
         self._clock = clock
+        self._bytes_streamed = 0
         self.update_weights(params)
         self.scheduler = BucketingScheduler(
             self.max_batch, tick_granularity, clock=clock
@@ -175,6 +188,13 @@ class BatchedEngine:
         b_live = len(events)
         b_pad = batching.padded_batch_size(b_live, self.max_batch)
         raster, valid = batching.pad_batch(raster, valid, b_pad)
+        if self.backend == "kernel":
+            # analytic accounting for the inference-specialized kernel; the
+            # scan backend runs no Pallas tile, so no bytes are attributed
+            self._bytes_streamed += traffic.infer_fused_bytes(
+                tile.num_ticks, b_pad, self.cfg.n_in, self.cfg.n_hid,
+                self.cfg.n_out,
+            )
         out = self.engine.inference(
             self._weights, jnp.asarray(raster), jnp.asarray(valid)
         )
@@ -206,6 +226,7 @@ class BatchedEngine:
         ``flush`` drains the partial buckets at end-of-stream.
         """
         t0 = self._clock()
+        self._bytes_streamed = 0
         results: List[ServeResult] = []
         batches = 0
         for events in stream:
@@ -220,7 +241,8 @@ class BatchedEngine:
         wall = self._clock() - t0
         results.sort(key=lambda r: r.rid)
         stats = ServeStats.collect(
-            results, wall, batches, self.engine.compiled_shapes("inference")
+            results, wall, batches, self.engine.compiled_shapes("inference"),
+            hbm_bytes=self._bytes_streamed,
         )
         return results, stats
 
