@@ -12,7 +12,12 @@ alongside the train/serve benches):
   trace-streaming) vs after (fused).  This is what the CI smoke lane
   *gates*: the fused train path must move ≤ 1/2 the bytes of the two-kernel
   baseline (the ≥2x throughput claim at HBM-bound operation) and the fused
-  serve path ≤ 1/3 of the streamed one.
+  serve path ≤ 1/3 of the streamed one.  Since the batch-tiled grids
+  (ISSUE 5) removed the launch-level batch cap, the same gates are enforced
+  at ``B=512`` — four times the old ``KERNEL_SAMPLE_CAP``, a launch shape
+  that previously could not run at all — using the as-executed tiled
+  formulas (pad rows of the last tile included; weights/dw stay
+  VMEM-resident across tiles).
 * **wall-clock** — measured samples/s.  On a TPU backend this times the
   compiled kernels and additionally gates fused-train ≥ the two-kernel
   baseline; on CPU it times the scan backend (the path CPU CI actually
@@ -61,6 +66,47 @@ def _tile(key):
     t = jnp.arange(T)[:, None]
     valid = ((t >= T // 4) & (t <= T - 1)).astype(jnp.float32) * jnp.ones((T, B))
     return raster, w_in, w_rec, w_out, y_star, valid
+
+
+def check_tiled_big_batch(alpha=0.99, kappa=0.78):
+    """allclose at B=512 — previously impossible (the kernels rejected
+    B > 128): the batch-tiled fused train/infer kernels against the scan
+    backend, both on a shortened T=24 tile so the interpret-mode walk stays
+    cheap (the traffic-ratio gates cover the full cue-length shape)."""
+    B_big, T_train = 512, 24
+    cfg = RSNNConfig(
+        n_in=N, n_hid=H, n_out=O, num_ticks=T_train,
+        neuron=NeuronConfig(alpha=alpha, kappa=kappa),
+        eprop=EpropConfig(mode="factored"),
+    )
+    ks = jax.random.split(jax.random.key(7), 4)
+    w = {
+        "w_in": jax.random.normal(ks[0], (N, H)) * 0.4,
+        "w_rec": jax.random.normal(ks[1], (H, H)) * 0.2 * (1 - jnp.eye(H)),
+        "w_out": jax.random.normal(ks[2], (H, O)) * 0.3,
+    }
+    raster = (jax.random.uniform(ks[3], (T_train, B_big, N)) < 0.2).astype(
+        jnp.float32)
+    y_star = jax.nn.one_hot(jnp.arange(B_big) % O, O)
+    t = jnp.arange(T_train)[:, None]
+    valid = ((t >= T_train // 4)).astype(jnp.float32) * jnp.ones((T_train, B_big))
+
+    dw_s, m_s = ExecutionBackend(cfg, "scan").train_tile(w, raster, y_star, valid)
+    dw_k, m_k = ExecutionBackend(cfg, "kernel").train_tile(w, raster, y_star, valid)
+    err_train = max(
+        float(jnp.abs(dw_k[k] - dw_s[k]).max()
+              / jnp.maximum(1.0, jnp.abs(dw_s[k]).max()))
+        for k in dw_s
+    )
+    out_s = ExecutionBackend(cfg, "scan").inference(w, raster, valid)
+    out_k = ExecutionBackend(cfg, "kernel").inference(w, raster, valid)
+    err_inf = float(
+        jnp.abs(out_k["acc_y"] - out_s["acc_y"]).max()
+        / jnp.maximum(1.0, jnp.abs(out_s["acc_y"]).max())
+    )
+    pred_mismatch = int((out_k["pred"] != out_s["pred"]).sum())
+    return {"train_fused_b512": err_train, "infer_fused_b512": err_inf,
+            "pred_mismatch_b512": float(pred_mismatch)}
 
 
 def check_kernels(alpha=0.99, kappa=0.78):
@@ -137,6 +183,16 @@ def wall_clock():
         s_inf = _time(lambda: be.inference(w, raster, valid), iters=3)
         rows.append(("train_tile[scan-cpu]", B / s_train))
         rows.append(("inference[scan-cpu]", B / s_inf))
+        # the previously-rejected launch shape, now a single backend call
+        B_big = 512
+        k = jax.random.key(2)
+        raster_b = (jax.random.uniform(k, (T, B_big, N)) < 0.2).astype(
+            jnp.float32)
+        y_star_b = jax.nn.one_hot(jnp.arange(B_big) % O, O)
+        valid_b = valid[:, :1] * jnp.ones((T, B_big))
+        s_train_b = _time(
+            lambda: be.train_tile(w, raster_b, y_star_b, valid_b), iters=3)
+        rows.append(("train_tile_b512[scan-cpu]", B_big / s_train_b))
     return rows, on_tpu
 
 
@@ -146,29 +202,45 @@ def main(argv=None):
     opts = ap.parse_args(argv)
 
     errs = check_kernels()
+    errs_big = check_tiled_big_batch()
     table = traffic.op_table(T, B, N, H, O)
     train_ratio = table["train_two_kernel"] / table["train_fused"]
     infer_ratio = table["infer_streamed"] / table["infer_fused"]
+    # the previously-impossible launch: B=512, four tiles+ per op
+    B_BIG = 512
+    table_big = traffic.op_table(T, B_BIG, N, H, O)
+    tiles_big = traffic.tile_table(T, B_BIG, N, H, O)
+    train_ratio_big = table_big["train_two_kernel"] / table_big["train_fused"]
+    infer_ratio_big = table_big["infer_streamed"] / table_big["infer_fused"]
     rows, on_tpu = wall_clock()
 
-    print("op,bytes_per_tile")
+    print("op,bytes_per_launch")
     for op, bt in table.items():
         print(f"{op},{bt}")
     print(f"traffic ratio train two-kernel/fused : {train_ratio:.2f}x (gate >= 2)")
     print(f"traffic ratio infer streamed/fused   : {infer_ratio:.2f}x (gate >= 3)")
+    print(f"B=512 batch-tiled (train {tiles_big['train_tiles']} tiles x "
+          f"{tiles_big['train_tile_rows']} rows, infer {tiles_big['infer_tiles']}"
+          f" x {tiles_big['infer_tile_rows']}):")
+    print(f"  traffic ratio train              : {train_ratio_big:.2f}x (gate >= 2)")
+    print(f"  traffic ratio infer              : {infer_ratio_big:.2f}x (gate >= 3)")
     print("op,samples_per_s")
     for name, sps in rows:
         print(f"{name},{sps:.1f}")
-    print("allclose:", ", ".join(f"{k}={v:.2e}" for k, v in errs.items()))
+    print("allclose:", ", ".join(f"{k}={v:.2e}"
+                                 for k, v in {**errs, **errs_big}.items()))
 
     rc = 0
     if max(errs.values()) > 3e-4:
         print("FAIL: fused kernels diverge from the two-kernel pipeline")
         rc = 1
-    if train_ratio < 2.0:
+    if max(errs_big.values()) > 3e-4:
+        print("FAIL: batch-tiled kernels diverge from the scan oracle at B=512")
+        rc = 1
+    if train_ratio < 2.0 or train_ratio_big < 2.0:
         print("FAIL: fused train moves more than half the baseline bytes")
         rc = 1
-    if infer_ratio < 3.0:
+    if infer_ratio < 3.0 or infer_ratio_big < 3.0:
         print("FAIL: fused inference streams more than a third of baseline")
         rc = 1
     if on_tpu:
@@ -180,11 +252,15 @@ def main(argv=None):
     payload = {
         "benchmark": "kernels",
         "tile": {"T": T, "B": B, "n_in": N, "n_hid": H, "n_out": O},
-        "bytes_per_tile": table,
+        "bytes_per_launch": table,
+        "bytes_per_launch_b512": table_big,
+        "tiling_b512": tiles_big,
         "traffic_ratio_train": train_ratio,
         "traffic_ratio_infer": infer_ratio,
+        "traffic_ratio_train_b512": train_ratio_big,
+        "traffic_ratio_infer_b512": infer_ratio_big,
         "samples_per_sec": {name: sps for name, sps in rows},
-        "max_abs_err": errs,
+        "max_abs_err": {**errs, **errs_big},
         "jax_backend": jax.default_backend(),
         "rc": rc,
     }

@@ -20,7 +20,9 @@ scheduler with mixed tick lengths.
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -76,9 +78,10 @@ def run_sequential(cfg, weights, stream):
     return preds, len(stream) / best_wall, best_wall
 
 
-def run_batched(cfg, params, stream, batch, granularity=32):
+def run_batched(cfg, params, stream, batch, granularity=32, mesh=None):
     eng = BatchedEngine(
-        cfg, params, backend="auto", max_batch=batch, tick_granularity=granularity
+        cfg, params, backend="auto", max_batch=batch,
+        tick_granularity=granularity, mesh=mesh,
     )
     eng.serve(iter(stream))      # warm pass: compiles every tile shape
     best = None
@@ -92,10 +95,18 @@ def run_batched(cfg, params, stream, batch, granularity=32):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="fewer requests")
+    ap.add_argument("--smoke", action="store_true",
+                    help="alias for --fast (the CI smoke lanes)")
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--ragged", action="store_true",
                     help="mixed tick lengths (exercises bucketing)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="serve through a data mesh over every visible "
+                         "device (admission scales with device count)")
+    ap.add_argument("--out-dir", default="",
+                    help="also write BENCH_serve.json here")
     opts = ap.parse_args(argv)
+    opts.fast = opts.fast or opts.smoke
 
     num_ticks = 128
     n_req = 128 if opts.fast else 512
@@ -118,7 +129,13 @@ def main(argv=None):
     print(f"sequential controller loop : {seq_sps:9.1f} samples/s  "
           f"({seq_wall*1e3:8.1f} ms wall)")
 
-    results, stats = run_batched(cfg, params, stream, opts.batch)
+    mesh = None
+    if opts.sharded:
+        from repro.launch.mesh import make_data_mesh
+
+        mesh = make_data_mesh()
+        print(f"sharded serving over {len(jax.devices())} device(s)")
+    results, stats = run_batched(cfg, params, stream, opts.batch, mesh=mesh)
     print(f"batched engine (B≤{opts.batch:3d})   : {stats.samples_per_sec:9.1f} samples/s  "
           f"({stats.wall_s*1e3:8.1f} ms wall, {stats.batches} tiles, "
           f"{stats.compiled_shapes} shapes)")
@@ -133,6 +150,7 @@ def main(argv=None):
     summary = {
         "requests": len(stream),
         "batch": opts.batch,
+        "num_devices": len(jax.devices()) if opts.sharded else 1,
         "samples_per_sec": stats.samples_per_sec,
         "sequential_samples_per_sec": seq_sps,
         "speedup": speedup,
@@ -140,12 +158,31 @@ def main(argv=None):
         "p99_latency_s": stats.p99_latency_s,
         "mean_batch": stats.mean_batch,
         "compiled_shapes": stats.compiled_shapes,
+        "hbm_bytes_streamed": stats.hbm_bytes_streamed,
         "mismatches": mism,
     }
-    if opts.batch < 32:
-        # the ≥4x bar is defined for batch ≥ 32; smaller tiles are
-        # latency-oriented configurations, not the acceptance target
-        print(f"acceptance: n/a at batch {opts.batch} < 32 "
+    if opts.out_dir:
+        out = Path(opts.out_dir) / "BENCH_serve.json"
+        out.write_text(json.dumps(
+            {"schema": 1, "benchmark": "batched_serving",
+             "jax_backend": jax.default_backend(), **summary},
+            indent=2, sort_keys=True) + "\n")
+        print(f"wrote {out}")
+    import os
+
+    # virtual CPU devices are never the wall-clock target (they share the
+    # host cores regardless of count) — the single-device lane gates speedup
+    virtual_devices = opts.sharded and jax.default_backend() == "cpu"
+    if opts.batch < 32 or virtual_devices:
+        # the ≥4x bar is defined for batch ≥ 32 on comparable hardware;
+        # smaller tiles are latency-oriented configurations, and virtual CPU
+        # devices oversubscribing the physical cores make wall-clock
+        # speedup meaningless (the single-device lane gates throughput) —
+        # the sharded run still gates correctness per request
+        why = (f"batch {opts.batch} < 32" if opts.batch < 32 else
+               f"{len(jax.devices())} virtual CPU devices on "
+               f"{os.cpu_count()} cores")
+        print(f"acceptance: speedup gate n/a ({why}) "
               f"(outputs match: {'yes' if mism == 0 else 'NO'})")
         return {"rc": 0 if mism == 0 else 1, "serve": summary}
     status = "PASS" if (speedup >= 4.0 and mism == 0) else "FAIL"

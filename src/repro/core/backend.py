@@ -31,12 +31,14 @@ Backends:
   per *op*, not forward-everything:
 
   - ``train_tile`` → :func:`repro.kernels.ops.rsnn_train`, the fused
-    forward + in-kernel error + reverse e-prop kernel (traces in VMEM
-    scratch, only ``dw`` + ``(B, O)`` metrics reach HBM) whenever the tile
-    fits :func:`repro.kernels.rsnn_step.fused_train_fits`; two-kernel
-    fallback (``rsnn_forward`` + ``eprop_update``) otherwise.
-  - ``inference`` → :func:`repro.kernels.ops.rsnn_infer`: VMEM-accumulated
-    logits/spike counts, zero per-tick HBM streams (the serving path).
+    forward + in-kernel error + reverse e-prop kernel.  Batch-tiled
+    (``grid=(ceil(B/Bt), 2T)``, tile rows from the VMEM bytes helpers):
+    per-tile traces live in VMEM scratch, ``dw`` accumulates across tiles
+    in the out refs, and only ``dw`` + ``(B, O)`` metrics reach HBM — any
+    batch size is admitted, there is no two-kernel fallback.
+  - ``inference`` → :func:`repro.kernels.ops.rsnn_infer`: batch-tiled the
+    same way, VMEM-accumulated logits/spike counts, zero per-tick HBM
+    streams (the serving path).
   - ``forward_traces`` / ``eprop_update`` / ``dynamics`` → the
     trace-streaming ``rsnn_forward`` (+ split ``eprop_update``), for callers
     that need the per-tick tensors themselves.
@@ -47,6 +49,13 @@ Backends:
   ``forward_traces``/``eprop_update`` are factored-only by construction.
 
 ``backend="auto"`` resolves to ``"kernel"`` on TPU and ``"scan"`` elsewhere.
+
+Data parallelism: construct with ``mesh=`` (e.g.
+:func:`repro.launch.mesh.make_data_mesh`) and the ``inference`` /
+``train_tile`` hot paths shard their sample axis over the mesh's data axes
+via ``shard_map`` — weights replicated, ``dw`` ``psum``-med, per-sample
+outputs gathered — so END_B training and batched serving scale with device
+count while committing exactly what a single device would.
 
 Hardware-equivalence mode: pass ``quant=QuantizedMode(...)`` (or set it on
 ``cfg.neuron.quant``) and every tile executes ReckOn's fixed-point datapath —
@@ -68,14 +77,20 @@ from typing import Dict, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 from repro.core import eprop
 from repro.core.quant import QuantizedMode
 from repro.core.rsnn import RSNNConfig
+from repro.distributed import sharding as shardlib
 from repro.kernels import ops
 from repro.kernels.rsnn_step import (
     DEFAULT_VMEM_BUDGET,
-    KERNEL_SAMPLE_CAP,
-    fused_train_fits,
+    _pad_batch_axis,
+    cdiv,
+    max_forward_tile,
+    max_fused_train_tile,
 )
 
 # A traces pytree: the per-tick quantities of one forward pass, all (T, B, ·).
@@ -109,6 +124,21 @@ class ExecutionBackend:
         ``cfg.neuron.quant``; passing it here overlays a float config
         without rebuilding it.  When active, ``alpha`` is pinned to the
         register value ``alpha_reg/256``.
+    vmem_budget:
+        VMEM bytes the batch-tiled kernel grids size their per-tile rows
+        against (see the bytes helpers in :mod:`repro.kernels.rsnn_step`).
+    mesh / rules:
+        Data-parallel execution: pass a :class:`jax.sharding.Mesh` and the
+        sample axis of every ``inference`` / ``train_tile`` launch is
+        sharded over the mesh axes the sharding rules resolve for the
+        logical ``"batch"`` axis (:mod:`repro.distributed.sharding` —
+        ``("pod", "data")`` under the base rules; axes absent from the mesh
+        are dropped).  Weights stay replicated; ``train_tile`` ``psum``-s
+        the three ``dw`` matrices so an END_B commit is identical to the
+        single-device commit, and per-sample outputs (``acc_y``, ``pred``)
+        come back globally assembled.  Batches that don't divide the device
+        count are zero-padded internally (inert rows).  ``rules`` defaults
+        to :data:`repro.distributed.sharding.BASE_RULES`.
     """
 
     def __init__(
@@ -118,6 +148,8 @@ class ExecutionBackend:
         alpha: Optional[float] = None,
         quant: Optional[QuantizedMode] = None,
         vmem_budget: int = DEFAULT_VMEM_BUDGET,
+        mesh=None,
+        rules: Optional[shardlib.ShardingRules] = None,
     ):
         self.cfg = cfg
         self.backend = resolve_backend(backend)
@@ -143,33 +175,62 @@ class ExecutionBackend:
                 f"({self.quant.alpha}), caller passed {alpha}"
             )
             self.alpha = self.quant.alpha
-        # VMEM budget the kernel dispatch sizes against: the fused train
-        # kernel is chosen per (T, B) tile shape iff its trace scratch fits
-        # (a trace-time static decision — one jit cache entry per shape
-        # either way).
+        # VMEM budget the batch-tiled kernel grids size their tile rows
+        # against (max_forward_tile / max_fused_train_tile) — a trace-time
+        # static decision; one jit cache entry per launch shape either way.
         self.vmem_budget = int(vmem_budget)
+        # Data-parallel mesh: resolve the logical "batch" axis to mesh axes
+        # via the sharding rules (the same table the production models use).
+        self.mesh = mesh
+        self.rules = rules or shardlib.ShardingRules(shardlib.BASE_RULES)
+        self._batch_axes: Optional[Tuple[str, ...]] = None
+        if mesh is not None:
+            axes = self.rules.resolve("batch", mesh)
+            if isinstance(axes, str):
+                axes = (axes,)
+            if axes and shardlib.axis_size(mesh, axes) > 1:
+                self._batch_axes = tuple(axes)
+        self.num_devices = (
+            shardlib.axis_size(mesh, self._batch_axes)
+            if self._batch_axes
+            else 1
+        )
         if cfg.eprop.mask_self_recurrence:
             self._mask = 1.0 - jnp.eye(cfg.n_hid, dtype=jnp.float32)
         else:
             self._mask = jnp.ones((cfg.n_hid, cfg.n_hid), jnp.float32)
         self._shapes: Dict[str, set] = {}
-        self._jit_inference = jax.jit(self._inference_impl)
+        sharded = self._batch_axes is not None
+        self._jit_inference = jax.jit(
+            self._inference_sharded if sharded else self._inference_impl
+        )
         self._jit_forward = jax.jit(self._forward_impl)
         self._jit_update = jax.jit(self._update_impl)
-        self._jit_train = jax.jit(self._train_impl)
+        self._jit_train = jax.jit(
+            self._train_sharded if sharded else self._train_impl
+        )
         self._jit_dynamics = jax.jit(self._dynamics_impl)
 
     # ------------------------------------------------------------- plumbing
 
     def _note(self, op: str, shape: Tuple[int, ...]) -> None:
-        if self.backend == "kernel" and len(shape) > 1:
-            # the kernel keeps whole-tile state VMEM-resident; oversized tiles
-            # must be split upstream (ARM-mode batching / serve tile sizing)
-            assert shape[1] <= KERNEL_SAMPLE_CAP, (
-                f"{op} tile batch {shape[1]} exceeds the kernel VMEM contract "
-                f"({KERNEL_SAMPLE_CAP} samples) — stream smaller batches"
-            )
+        # No launch-level batch guard any more: the kernels batch-tile
+        # internally (tile rows from tile_rows(), derived from the same
+        # bytes helpers) — any B runs, only a *tile* must fit VMEM.
         self._shapes.setdefault(op, set()).add(tuple(shape[:2]))
+
+    def tile_rows(self, op: str, T: Optional[int] = None) -> int:
+        """Batch rows per kernel tile for ``op`` on this backend's config —
+        the per-tile VMEM contract, derived from the bytes helpers in
+        :mod:`repro.kernels.rsnn_step` (never re-declared here).  ``train``
+        needs the launch's tick count ``T`` (trace scratch is O(T·Bt))."""
+        c = self.cfg
+        if op == "train":
+            assert T is not None, "train tile rows depend on T"
+            return max_fused_train_tile(
+                T, c.n_in, c.n_hid, c.n_out, self.vmem_budget
+            )
+        return max_forward_tile(c.n_in, c.n_hid, c.n_out, self.vmem_budget)
 
     def compiled_shapes(self, op: Optional[str] = None) -> int:
         """Distinct ``(T, B)`` tile shapes this backend has been asked to run
@@ -220,6 +281,7 @@ class ExecutionBackend:
             reset=ncfg.reset,
             boxcar_width=ncfg.boxcar_width,
             quant=self.quant,
+            vmem_budget=self.vmem_budget,
         )
 
     def _spike_rate(self, n_spk, valid):
@@ -250,6 +312,7 @@ class ExecutionBackend:
                 alpha=self.alpha, kappa=ncfg.kappa, v_th=ncfg.v_th,
                 reset=ncfg.reset, quant=self.quant,
                 infer_window=ecfg.infer_window,
+                vmem_budget=self.vmem_budget,
             )
             return {
                 "acc_y": acc_y,
@@ -317,6 +380,7 @@ class ExecutionBackend:
             dw_in, dw_rec, dw_out = ops.eprop_update(
                 traces["h"], traces["xbar"], traces["pbar"], traces["zbar"],
                 traces["err"], self._feedback(weights), kappa=ncfg.kappa,
+                vmem_budget=self.vmem_budget,
             )
             return {"w_in": dw_in, "w_rec": dw_rec * self._mask, "w_out": dw_out}
         params = self._merge(weights, traces["h"].dtype)
@@ -337,30 +401,22 @@ class ExecutionBackend:
     def _train_impl(self, weights, raster, y_star, valid):
         ncfg, ecfg = self._ncfg, self.cfg.eprop
         if self.backend == "kernel":
-            T, B = valid.shape
-            if fused_train_fits(T, B, self.cfg.n_in, self.cfg.n_hid,
-                                self.cfg.n_out, self.vmem_budget):
-                # fused path: one two-phase kernel, traces VMEM-resident,
-                # HBM sees only dw + (B, O) metrics
-                w_in, w_rec, w_out = self._datapath_weights(weights)
-                dw_in, dw_rec, dw_out, acc_y, n_spk = ops.rsnn_train(
-                    raster, y_star, valid, w_in, w_rec, w_out,
-                    self._feedback(weights),
-                    alpha=self.alpha, kappa=ncfg.kappa, v_th=ncfg.v_th,
-                    reset=ncfg.reset, boxcar_width=ncfg.boxcar_width,
-                    quant=self.quant, error=ecfg.error,
-                    target_amplitude=ecfg.target_amplitude,
-                    infer_window=ecfg.infer_window,
-                )
-                dw = {"w_in": dw_in, "w_rec": dw_rec * self._mask,
-                      "w_out": dw_out}
-            else:
-                # two-kernel fallback: trace streams round-trip HBM, but any
-                # T·B fits
-                traces = self._forward_impl(weights, raster, y_star, valid)
-                dw = self._update_impl(weights, traces)
-                acc_y = traces["y_inf"].sum(axis=0)
-                n_spk = traces["n_spk"]
+            # one batch-tiled two-phase kernel: per-tile traces VMEM-resident,
+            # dw accumulated across tiles in the out refs, HBM sees only
+            # dw + (B, O) metrics.  Any B runs — no fallback pipeline.
+            w_in, w_rec, w_out = self._datapath_weights(weights)
+            dw_in, dw_rec, dw_out, acc_y, n_spk = ops.rsnn_train(
+                raster, y_star, valid, w_in, w_rec, w_out,
+                self._feedback(weights),
+                alpha=self.alpha, kappa=ncfg.kappa, v_th=ncfg.v_th,
+                reset=ncfg.reset, boxcar_width=ncfg.boxcar_width,
+                quant=self.quant, error=ecfg.error,
+                target_amplitude=ecfg.target_amplitude,
+                infer_window=ecfg.infer_window,
+                vmem_budget=self.vmem_budget,
+            )
+            dw = {"w_in": dw_in, "w_rec": dw_rec * self._mask,
+                  "w_out": dw_out}
             metrics = {
                 "acc_y": acc_y,
                 "pred": jnp.argmax(acc_y, axis=-1),
@@ -369,6 +425,87 @@ class ExecutionBackend:
             return dw, metrics
         params = self._merge(weights, raster.dtype)
         return eprop.run_sample(params, raster, y_star, valid, ncfg, ecfg)
+
+    # ------------------------------------------------- data-parallel wrappers
+
+    def _pad_to_shards(self, arrs, batch_axis):
+        """Zero-pad each array's sample axis up to a multiple of the data
+        axis size (padding rows carry zero input / zero valid — inert).
+        Same padding contract (and helper) as the kernels' batch tiling."""
+        n = self.num_devices
+        B = arrs[0].shape[batch_axis[0]]
+        b_pad = cdiv(B, n) * n
+        return [
+            _pad_batch_axis(x, ax, b_pad) for x, ax in zip(arrs, batch_axis)
+        ], B
+
+    def _psum_spike_rate(self, rate, valid):
+        """Reassemble the global valid-weighted spike rate from per-shard
+        rates: ``rate = Σspikes / (Σvalid · H)`` per shard, so the global
+        rate is the valid-weighted mean — an unweighted ``pmean`` would skew
+        toward shards that carry padding rows."""
+        vs = valid.sum()
+        num = jax.lax.psum(rate * jnp.maximum(vs, 1.0), self._batch_axes)
+        den = jax.lax.psum(vs, self._batch_axes)
+        return num / jnp.maximum(den, 1.0)
+
+    # check_vma=False below: Pallas calls have no replication rule inside
+    # shard_map on current jax, and the outputs are made collective-
+    # consistent explicitly (psum / per-shard slices) anyway.
+
+    def _train_sharded(self, weights, raster, y_star, valid):
+        """:meth:`_train_impl` sharded over the mesh's data axes: each shard
+        trains its slice of the sample axis, the three ``dw`` matrices are
+        ``psum``-med (so the END_B commit equals the single-device commit)
+        and per-sample metrics come back globally assembled."""
+        ba = self._batch_axes
+        (raster, y_star, valid), B = self._pad_to_shards(
+            (raster, y_star, valid), (1, 0, 1)
+        )
+
+        def local(weights, raster, y_star, valid):
+            dw, m = self._train_impl(weights, raster, y_star, valid)
+            dw = jax.tree.map(lambda g: jax.lax.psum(g, ba), dw)
+            m = dict(m, spike_rate=self._psum_spike_rate(m["spike_rate"], valid))
+            return dw, m
+
+        dw, m = shard_map(
+            local,
+            mesh=self.mesh,
+            axis_names=set(ba),
+            in_specs=(P(), P(None, ba, None), P(ba), P(None, ba)),
+            out_specs=(
+                {"w_in": P(), "w_rec": P(), "w_out": P()},
+                {"acc_y": P(ba), "pred": P(ba), "spike_rate": P()},
+            ),
+            check_vma=False,
+        )(weights, raster, y_star, valid)
+        if m["acc_y"].shape[0] != B:
+            m = dict(m, acc_y=m["acc_y"][:B], pred=m["pred"][:B])
+        return dw, m
+
+    def _inference_sharded(self, weights, raster, valid):
+        ba = self._batch_axes
+        (raster, valid), B = self._pad_to_shards((raster, valid), (1, 1))
+
+        def local(weights, raster, valid):
+            out = self._inference_impl(weights, raster, valid)
+            return dict(
+                out,
+                spike_rate=self._psum_spike_rate(out["spike_rate"], valid),
+            )
+
+        out = shard_map(
+            local,
+            mesh=self.mesh,
+            axis_names=set(ba),
+            in_specs=(P(), P(None, ba, None), P(None, ba)),
+            out_specs={"acc_y": P(ba), "pred": P(ba), "spike_rate": P()},
+            check_vma=False,
+        )(weights, raster, valid)
+        if out["acc_y"].shape[0] != B:
+            out = dict(out, acc_y=out["acc_y"][:B], pred=out["pred"][:B])
+        return out
 
     def train_tile(
         self,
@@ -382,11 +519,12 @@ class ExecutionBackend:
         Returns ``(dw, metrics)`` where ``dw`` is summed over the batch axis —
         the quantity a controller commits at an END_S (B=1) or END_B (B=K)
         boundary.  The scan backend dispatches on ``cfg.eprop.mode`` (exact /
-        factored); the kernel backend is factored by construction and picks,
-        per tile shape, the fused train kernel (error + reverse pass
-        in-kernel, traces never leave VMEM) when
-        :func:`repro.kernels.rsnn_step.fused_train_fits` admits the tile,
-        else the two-kernel forward + update pipeline.
+        factored); the kernel backend always runs the batch-tiled fused
+        train kernel (error + reverse pass in-kernel, per-tile traces never
+        leave VMEM, tile rows sized by ``tile_rows("train", T)``) — any
+        batch size is admitted.  With a mesh, the sample axis is first
+        sharded over the data axes and ``dw`` is ``psum``-med, so the commit
+        is identical to the single-device one.
         """
         self._note("train_tile", raster.shape)
         return self._jit_train(weights, raster, y_star, valid)
@@ -424,6 +562,8 @@ def as_backend(
     backend: BackendLike,
     alpha: Optional[float] = None,
     quant: Optional[QuantizedMode] = None,
+    vmem_budget: Optional[int] = None,
+    mesh=None,
 ) -> ExecutionBackend:
     """Coerce a backend name or an existing :class:`ExecutionBackend`.
 
@@ -439,5 +579,14 @@ def as_backend(
         assert quant is None or backend.quant == quant, (
             "shared backend runs a different quantized mode than the caller's"
         )
+        assert mesh is None or backend.mesh == mesh, (
+            "shared backend was built over a different mesh than the caller's"
+        )
+        assert vmem_budget is None or backend.vmem_budget == vmem_budget, (
+            "shared backend tiles against a different vmem_budget "
+            f"({backend.vmem_budget}) than the caller's ({vmem_budget})"
+        )
         return backend
-    return ExecutionBackend(cfg, backend, alpha=alpha, quant=quant)
+    return ExecutionBackend(cfg, backend, alpha=alpha, quant=quant,
+                            vmem_budget=vmem_budget or DEFAULT_VMEM_BUDGET,
+                            mesh=mesh)

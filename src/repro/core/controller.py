@@ -295,6 +295,7 @@ class OnlineLearner:
         opt_cfg: EpropSGDConfig,
         key: jax.Array,
         backend: BackendLike = "auto",
+        mesh=None,
     ):
         self.cfg, self.ctrl = cfg, ctrl
         self.opt = EpropSGD(opt_cfg)
@@ -306,7 +307,11 @@ class OnlineLearner:
             self.weights["b_fb"] = params["b_fb"]
         self.opt_state = self.opt.init(self.weights)
         self.key = jax.random.fold_in(key, 1)
-        self.backend = as_backend(cfg, backend, alpha=float(params["alpha"]))
+        # mesh: data-parallel END_B — the backend shards the sample axis and
+        # psums dw, so the commit matches the single-device walk exactly.
+        self.backend = as_backend(
+            cfg, backend, alpha=float(params["alpha"]), mesh=mesh
+        )
         train_builder = (
             make_batch_commit_train_fn
             if ctrl.commit == "batch"

@@ -6,20 +6,25 @@ in :mod:`repro.kernels.traffic` / README):
 
 * :func:`eprop_update` — the split-pipeline reverse pass.  Consumes the
   per-tick traces :func:`repro.kernels.rsnn_step.rsnn_forward` streamed to
-  HBM; serves the backend's ``eprop_update`` op and the two-kernel fallback
-  of the ``train`` op.
-* :func:`rsnn_train` — the fused ``train`` op.  One ``grid=(2T,)`` program:
-  a forward phase that runs the tick datapath, evaluates the readout error
-  *in-kernel* (``y_star``/``valid`` passed in, quantized ``y/threshold``
-  normalisation applied before the softmax), and stashes the
-  ``h/xbar/pbar/zbar/err`` traces in VMEM scratch; then a reverse phase
-  that folds them through the κ-filter into the three ``dw`` accumulators.
-  The tile's only HBM writes are the three ``dw`` matrices plus the
-  ``(B, O)`` readout accumulator and ``(B, 1)`` spike counts — the ~7·T·B·H
-  floats of intermediate trace traffic of the two-kernel pipeline never
-  leave the core.  Used whenever the trace scratch fits the VMEM budget
-  (:func:`repro.kernels.rsnn_step.fused_train_fits`); oversized tiles fall
-  back to forward + :func:`eprop_update`.
+  HBM; serves the backend's ``eprop_update`` op (and the HBM-streaming
+  escape hatch for tick counts whose fused trace scratch exceeds physical
+  VMEM — the fused kernel rejects those loudly rather than falling back
+  silently).
+* :func:`rsnn_train` — the fused ``train`` op.  One batch-tiled
+  ``grid=(ceil(B/Bt), 2T)`` program: per batch tile, a forward phase runs
+  the tick datapath, evaluates the readout error *in-kernel*
+  (``y_star``/``valid`` passed in, quantized ``y/threshold`` normalisation
+  applied before the softmax) and stashes the ``h/xbar/pbar/zbar/err``
+  traces in VMEM scratch; then a reverse phase folds them through the
+  κ-filter into the three ``dw`` accumulators.  The tile rows ``Bt`` are
+  derived from the VMEM budget
+  (:func:`repro.kernels.rsnn_step.max_fused_train_tile`) so the trace
+  scratch always fits — there is no fallback pipeline and no launch-level
+  batch cap.  The launch's only HBM writes are the three ``dw`` matrices
+  (accumulated across batch tiles directly in the output refs, which stay
+  VMEM-resident for the whole grid) plus the ``(B, O)`` readout accumulator
+  and ``(B, 1)`` spike counts — the ~7·T·B·H floats of intermediate trace
+  traffic of the two-kernel pipeline never leave the core.
 
 The reverse pass computes, over ticks T-1..0,
 
@@ -53,20 +58,49 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import QuantizedMode
-from repro.kernels.rsnn_step import tick_transition
+from repro.kernels.rsnn_step import (
+    DEFAULT_VMEM_BUDGET,
+    PHYSICAL_VMEM_CEILING,
+    _pad_batch_axis,
+    _tile_batch,
+    fused_train_bytes,
+    max_forward_tile,
+    max_fused_train_tile,
+    tick_transition,
+)
+
+
+def _flush_dw(b, acc_in_scr, acc_rec_scr, acc_out_scr,
+              dw_in_ref, dw_rec_ref, dw_out_ref):
+    """Fold one batch tile's VMEM dw accumulators into the output refs.
+
+    The dw out-blocks have a constant index map, so they stay VMEM-resident
+    across the whole grid and reach HBM once, after the last tile.
+    """
+    @pl.when(b == 0)
+    def _first():
+        dw_in_ref[...] = acc_in_scr[...]
+        dw_rec_ref[...] = acc_rec_scr[...]
+        dw_out_ref[...] = acc_out_scr[...]
+
+    @pl.when(b > 0)
+    def _rest():
+        dw_in_ref[...] += acc_in_scr[...]
+        dw_rec_ref[...] += acc_rec_scr[...]
+        dw_out_ref[...] += acc_out_scr[...]
 
 
 def _kernel(
-    h_ref,        # (1, B, H)
-    xbar_ref,     # (1, B, N_in)
-    pbar_ref,     # (1, B, H)
-    zbar_ref,     # (1, B, H)
-    err_ref,      # (1, B, O)
+    h_ref,        # (1, Bt, H)
+    xbar_ref,     # (1, Bt, N_in)
+    pbar_ref,     # (1, Bt, H)
+    zbar_ref,     # (1, Bt, H)
+    err_ref,      # (1, Bt, O)
     b_fb_ref,     # (H, O)
     dw_in_ref,    # (N_in, H) out
     dw_rec_ref,   # (H, H) out
     dw_out_ref,   # (H, O) out
-    f_scr,        # VMEM (B, H)
+    f_scr,        # VMEM (Bt, H)
     acc_in_scr,   # VMEM (N_in, H)
     acc_rec_scr,  # VMEM (H, H)
     acc_out_scr,  # VMEM (H, O)
@@ -74,7 +108,8 @@ def _kernel(
     kappa: float,
     T: int,
 ):
-    i = pl.program_id(0)   # 0..T-1, visiting ticks T-1..0 via the index map
+    b = pl.program_id(0)   # batch tile
+    i = pl.program_id(1)   # 0..T-1, visiting ticks T-1..0 via the index map
 
     @pl.when(i == 0)
     def _init():
@@ -101,9 +136,8 @@ def _kernel(
 
     @pl.when(i == T - 1)
     def _flush():
-        dw_in_ref[...] = acc_in_scr[...]
-        dw_rec_ref[...] = acc_rec_scr[...]
-        dw_out_ref[...] = acc_out_scr[...]
+        _flush_dw(b, acc_in_scr, acc_rec_scr, acc_out_scr,
+                  dw_in_ref, dw_rec_ref, dw_out_ref)
 
 
 def eprop_update(
@@ -115,19 +149,30 @@ def eprop_update(
     b_fb: jax.Array,   # (H, O)
     *,
     kappa: float,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    batch_tile: Optional[int] = None,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     T, B, H = h.shape
     n_in = xbar.shape[2]
     O = err.shape[2]
+    bt, nb, b_pad = _tile_batch(
+        B, batch_tile or max_forward_tile(n_in, H, O, vmem_budget)
+    )
+    # pad rows carry zero traces and zero err -> zero dw contribution
+    h, xbar, pbar, zbar, err = (
+        _pad_batch_axis(x, 1, b_pad) for x in (h, xbar, pbar, zbar, err)
+    )
 
-    rev = lambda cols: pl.BlockSpec((1, B, cols), lambda i: (T - 1 - i, 0, 0))
-    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    rev = lambda cols: pl.BlockSpec(
+        (1, bt, cols), lambda b, i: (T - 1 - i, b, 0)
+    )
+    full = lambda shape: pl.BlockSpec(shape, lambda b, i: tuple(0 for _ in shape))
 
     kern = functools.partial(_kernel, kappa=float(kappa), T=T)
     dw_in, dw_rec, dw_out = pl.pallas_call(
         kern,
-        grid=(T,),
+        grid=(nb, T),
         in_specs=[rev(H), rev(n_in), rev(H), rev(H), rev(O), full((H, O))],
         out_specs=[full((n_in, H)), full((H, H)), full((H, O))],
         out_shape=[
@@ -136,7 +181,7 @@ def eprop_update(
             jax.ShapeDtypeStruct((H, O), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((B, H), jnp.float32),
+            pltpu.VMEM((bt, H), jnp.float32),
             pltpu.VMEM((n_in, H), jnp.float32),
             pltpu.VMEM((H, H), jnp.float32),
             pltpu.VMEM((H, O), jnp.float32),
@@ -194,8 +239,10 @@ def _train_kernel(
     infer_all: bool,
     T: int,
 ):
-    i = pl.program_id(0)   # 0..2T-1: forward ticks 0..T-1, then T-1..0
+    b = pl.program_id(0)   # batch tile
+    i = pl.program_id(1)   # 0..2T-1: forward ticks 0..T-1, then T-1..0
 
+    # each batch tile is an independent forward+reverse pass over its rows
     @pl.when(i == 0)
     def _init():
         v_scr[...] = jnp.zeros_like(v_scr)
@@ -276,9 +323,10 @@ def _train_kernel(
 
     @pl.when(i == 2 * T - 1)
     def _flush():
-        dw_in_ref[...] = acc_in_scr[...]
-        dw_rec_ref[...] = acc_rec_scr[...]
-        dw_out_ref[...] = acc_out_scr[...]
+        # dw accumulates across batch tiles in the (VMEM-resident) out refs;
+        # acc_y / n_spk flush into this tile's own (Bt, ·) output blocks
+        _flush_dw(b, acc_in_scr, acc_rec_scr, acc_out_scr,
+                  dw_in_ref, dw_rec_ref, dw_out_ref)
         acc_y_ref[...] = accy_scr[...]
         nspk_ref[...] = nspk_scr[...]
 
@@ -301,24 +349,28 @@ def rsnn_train(
     error: str = "softmax",
     target_amplitude: float = 1.0,
     infer_window: str = "valid",
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    batch_tile: Optional[int] = None,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Fused forward + factored e-prop update over one ``(T, B)`` tile.
+    """Fused forward + factored e-prop update over one ``(T, B)`` launch.
 
-    One two-phase ``grid=(2T,)`` program — steps ``0..T-1`` run the forward
-    tick datapath with the readout error evaluated in-kernel, steps
-    ``T..2T-1`` run the reverse κ-filter — with the whole
-    ``h/xbar/pbar/zbar/err`` trace set held in VMEM scratch.  Returns
+    A batch-tiled two-phase ``grid=(ceil(B/Bt), 2T)`` program — per batch
+    tile, steps ``0..T-1`` run the forward tick datapath with the readout
+    error evaluated in-kernel, steps ``T..2T-1`` run the reverse κ-filter —
+    with the tile's whole ``h/xbar/pbar/zbar/err`` trace set held in VMEM
+    scratch.  ``Bt`` is derived from the VMEM budget
+    (:func:`repro.kernels.rsnn_step.max_fused_train_tile`, or the explicit
+    ``batch_tile`` override) so the trace scratch always fits; ``dw`` is
+    accumulated across batch tiles directly in the output refs.  Returns
     ``(dw_in, dw_rec, dw_out, acc_y (B, O), n_spk (B, 1))``; nothing of
-    O(T·B·H) ever touches HBM.
+    O(T·B·H) ever touches HBM and ``B`` is unbounded.
 
-    The caller is responsible for checking the trace scratch fits
-    (:func:`repro.kernels.rsnn_step.fused_train_fits`) and for masking
-    ``dw_rec``'s self-recurrence afterwards (same contract as
-    :func:`eprop_update`).  Quantized mode: pass weights through
-    ``QuantizedMode.to_membrane`` but ``b_fb`` in normalised weight units —
-    the error is evaluated on ``y / threshold`` in-kernel so the learning
-    signal matches the float model's scale.
+    The caller is responsible for masking ``dw_rec``'s self-recurrence
+    afterwards (same contract as :func:`eprop_update`).  Quantized mode:
+    pass weights through ``QuantizedMode.to_membrane`` but ``b_fb`` in
+    normalised weight units — the error is evaluated on ``y / threshold``
+    in-kernel so the learning signal matches the float model's scale.
     """
     T, B, n_in = raster.shape
     H = w_rec.shape[0]
@@ -327,6 +379,25 @@ def rsnn_train(
     if quant is not None:
         alpha, kappa, v_th = quant.alpha, quant.kappa, float(quant.threshold)
     y_scale = 1.0 if quant is None else 1.0 / float(quant.threshold)
+    bt, nb, b_pad = _tile_batch(
+        B, batch_tile or max_fused_train_tile(T, n_in, H, O, vmem_budget)
+    )
+    # A single-row tile beyond *physical* VMEM cannot compile anywhere —
+    # fail at trace time with the actionable alternative (the split
+    # forward_traces + eprop_update ops stream the traces through HBM).
+    tile_bytes = fused_train_bytes(T, bt, n_in, H, O)
+    if tile_bytes > PHYSICAL_VMEM_CEILING:
+        raise ValueError(
+            f"fused train tile (T={T}, Bt={bt}) needs {tile_bytes} bytes of "
+            f"trace scratch — beyond physical VMEM "
+            f"({PHYSICAL_VMEM_CEILING}); shorten T or run the split "
+            "forward_traces + eprop_update pipeline, which streams traces "
+            "through HBM"
+        )
+    # pad rows: zero raster + zero valid -> zero err, zero dw, zero acc_y
+    raster = _pad_batch_axis(raster, 1, b_pad)
+    y_star = _pad_batch_axis(y_star, 0, b_pad)
+    valid = _pad_batch_axis(valid, 1, b_pad)
 
     kern = functools.partial(
         _train_kernel,
@@ -345,15 +416,15 @@ def rsnn_train(
     # Phase 2 re-visits the tick blocks via (i mod T); their contents are
     # ignored there (the traces live in VMEM) — the index map only has to be
     # in-bounds.
-    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    full = lambda shape: pl.BlockSpec(shape, lambda b, i: tuple(0 for _ in shape))
 
     outs = pl.pallas_call(
         kern,
-        grid=(2 * T,),
+        grid=(nb, 2 * T),
         in_specs=[
-            pl.BlockSpec((1, B, n_in), lambda i: (i % T, 0, 0)),
-            full((B, O)),
-            pl.BlockSpec((1, B), lambda i: (i % T, 0)),
+            pl.BlockSpec((1, bt, n_in), lambda b, i: (i % T, b, 0)),
+            pl.BlockSpec((bt, O), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, bt), lambda b, i: (i % T, b)),
             full((n_in, H)),
             full((H, H)),
             full((H, O)),
@@ -361,35 +432,36 @@ def rsnn_train(
         ],
         out_specs=[
             full((n_in, H)), full((H, H)), full((H, O)),
-            full((B, O)), full((B, 1)),
+            pl.BlockSpec((bt, O), lambda b, i: (b, 0)),
+            pl.BlockSpec((bt, 1), lambda b, i: (b, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n_in, H), jnp.float32),
             jax.ShapeDtypeStruct((H, H), jnp.float32),
             jax.ShapeDtypeStruct((H, O), jnp.float32),
-            jax.ShapeDtypeStruct((B, O), dt),
-            jax.ShapeDtypeStruct((B, 1), dt),
+            jax.ShapeDtypeStruct((b_pad, O), dt),
+            jax.ShapeDtypeStruct((b_pad, 1), dt),
         ],
         scratch_shapes=[
-            pltpu.VMEM((B, H), jnp.float32),      # v
-            pltpu.VMEM((B, H), jnp.float32),      # z
-            pltpu.VMEM((B, O), jnp.float32),      # y
-            pltpu.VMEM((B, n_in), jnp.float32),   # xbar carry
-            pltpu.VMEM((B, H), jnp.float32),      # pbar carry
-            pltpu.VMEM((B, H), jnp.float32),      # zbar carry
-            pltpu.VMEM((B, O), jnp.float32),      # acc_y
-            pltpu.VMEM((B, 1), jnp.float32),      # n_spk
-            pltpu.VMEM((T, B, H), jnp.float32),   # h trace
-            pltpu.VMEM((T, B, n_in), jnp.float32),  # xbar trace
-            pltpu.VMEM((T, B, H), jnp.float32),   # pbar trace
-            pltpu.VMEM((T, B, H), jnp.float32),   # zbar trace
-            pltpu.VMEM((T, B, O), jnp.float32),   # err trace
-            pltpu.VMEM((B, H), jnp.float32),      # F carry
-            pltpu.VMEM((n_in, H), jnp.float32),   # dw_in acc
-            pltpu.VMEM((H, H), jnp.float32),      # dw_rec acc
-            pltpu.VMEM((H, O), jnp.float32),      # dw_out acc
+            pltpu.VMEM((bt, H), jnp.float32),      # v
+            pltpu.VMEM((bt, H), jnp.float32),      # z
+            pltpu.VMEM((bt, O), jnp.float32),      # y
+            pltpu.VMEM((bt, n_in), jnp.float32),   # xbar carry
+            pltpu.VMEM((bt, H), jnp.float32),      # pbar carry
+            pltpu.VMEM((bt, H), jnp.float32),      # zbar carry
+            pltpu.VMEM((bt, O), jnp.float32),      # acc_y
+            pltpu.VMEM((bt, 1), jnp.float32),      # n_spk
+            pltpu.VMEM((T, bt, H), jnp.float32),   # h trace
+            pltpu.VMEM((T, bt, n_in), jnp.float32),  # xbar trace
+            pltpu.VMEM((T, bt, H), jnp.float32),   # pbar trace
+            pltpu.VMEM((T, bt, H), jnp.float32),   # zbar trace
+            pltpu.VMEM((T, bt, O), jnp.float32),   # err trace
+            pltpu.VMEM((bt, H), jnp.float32),      # F carry
+            pltpu.VMEM((n_in, H), jnp.float32),    # dw_in acc
+            pltpu.VMEM((H, H), jnp.float32),       # dw_rec acc
+            pltpu.VMEM((H, O), jnp.float32),       # dw_out acc
         ],
         interpret=interpret,
     )(raster, y_star, valid, w_in, w_rec, w_out, b_fb)
     dw_in, dw_rec, dw_out, acc_y, n_spk = outs
-    return dw_in, dw_rec, dw_out, acc_y, n_spk
+    return dw_in, dw_rec, dw_out, acc_y[:B], n_spk[:B]

@@ -24,7 +24,8 @@ def _interpret() -> bool:
 
 @partial(
     jax.jit,
-    static_argnames=("alpha", "kappa", "v_th", "reset", "boxcar_width", "quant"),
+    static_argnames=("alpha", "kappa", "v_th", "reset", "boxcar_width", "quant",
+                     "vmem_budget", "batch_tile"),
 )
 def rsnn_forward(
     raster: jax.Array,
@@ -38,17 +39,21 @@ def rsnn_forward(
     reset: str = "sub",
     boxcar_width: float = 0.5,
     quant: Optional[QuantizedMode] = None,   # frozen dataclass: hashable static
+    vmem_budget: int = _rsnn.DEFAULT_VMEM_BUDGET,
+    batch_tile: Optional[int] = None,
 ) -> Dict[str, jax.Array]:
     return _rsnn.rsnn_forward(
         raster, w_in, w_rec, w_out,
         alpha=alpha, kappa=kappa, v_th=v_th, reset=reset,
-        boxcar_width=boxcar_width, quant=quant, interpret=_interpret(),
+        boxcar_width=boxcar_width, quant=quant, vmem_budget=vmem_budget,
+        batch_tile=batch_tile, interpret=_interpret(),
     )
 
 
 @partial(
     jax.jit,
-    static_argnames=("alpha", "kappa", "v_th", "reset", "quant", "infer_window"),
+    static_argnames=("alpha", "kappa", "v_th", "reset", "quant", "infer_window",
+                     "vmem_budget", "batch_tile"),
 )
 def rsnn_infer(
     raster: jax.Array,
@@ -63,13 +68,16 @@ def rsnn_infer(
     reset: str = "sub",
     quant: Optional[QuantizedMode] = None,
     infer_window: str = "valid",
+    vmem_budget: int = _rsnn.DEFAULT_VMEM_BUDGET,
+    batch_tile: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Inference-specialized forward (serving path): VMEM-accumulated
-    ``(acc_y, n_spk)``, no per-tick HBM streams."""
+    """Inference-specialized forward (serving path): batch-tiled grid,
+    VMEM-accumulated ``(acc_y, n_spk)``, no per-tick HBM streams."""
     return _rsnn.rsnn_infer(
         raster, valid, w_in, w_rec, w_out,
         alpha=alpha, kappa=kappa, v_th=v_th, reset=reset, quant=quant,
-        infer_window=infer_window, interpret=_interpret(),
+        infer_window=infer_window, vmem_budget=vmem_budget,
+        batch_tile=batch_tile, interpret=_interpret(),
     )
 
 
@@ -77,7 +85,8 @@ def rsnn_infer(
     jax.jit,
     static_argnames=(
         "alpha", "kappa", "v_th", "reset", "boxcar_width", "quant",
-        "error", "target_amplitude", "infer_window",
+        "error", "target_amplitude", "infer_window", "vmem_budget",
+        "batch_tile",
     ),
 )
 def rsnn_train(
@@ -98,20 +107,23 @@ def rsnn_train(
     error: str = "softmax",
     target_amplitude: float = 1.0,
     infer_window: str = "valid",
+    vmem_budget: int = _rsnn.DEFAULT_VMEM_BUDGET,
+    batch_tile: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused train op: forward + in-kernel readout error + reverse e-prop in
-    one two-phase kernel, traces VMEM-resident.  Caller checks
-    :func:`repro.kernels.rsnn_step.fused_train_fits` first."""
+    one two-phase batch-tiled kernel, traces VMEM-resident per tile; any
+    batch size runs (tile rows derived from ``vmem_budget``)."""
     return _eprop.rsnn_train(
         raster, y_star, valid, w_in, w_rec, w_out, b_fb,
         alpha=alpha, kappa=kappa, v_th=v_th, reset=reset,
         boxcar_width=boxcar_width, quant=quant, error=error,
         target_amplitude=target_amplitude, infer_window=infer_window,
+        vmem_budget=vmem_budget, batch_tile=batch_tile,
         interpret=_interpret(),
     )
 
 
-@partial(jax.jit, static_argnames=("kappa",))
+@partial(jax.jit, static_argnames=("kappa", "vmem_budget", "batch_tile"))
 def eprop_update(
     h: jax.Array,
     xbar: jax.Array,
@@ -121,9 +133,12 @@ def eprop_update(
     b_fb: jax.Array,
     *,
     kappa: float,
+    vmem_budget: int = _rsnn.DEFAULT_VMEM_BUDGET,
+    batch_tile: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     return _eprop.eprop_update(
-        h, xbar, pbar, zbar, err, b_fb, kappa=kappa, interpret=_interpret()
+        h, xbar, pbar, zbar, err, b_fb, kappa=kappa, vmem_budget=vmem_budget,
+        batch_tile=batch_tile, interpret=_interpret()
     )
 
 

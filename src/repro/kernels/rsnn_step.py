@@ -30,9 +30,12 @@ Two op-specialized variants live here (one backend op each — see
   serving hot path.
 
 ReckOn caps N_in/H at 256 ⇒ weights (256×256 f32 = 256 KiB) sit in VMEM for
-the entire sample.  Batch tiles up to ~128 keep the whole state within the
-VMEM budget — see the bytes-budget helpers below, the single source every
-tile-sizing decision in the system derives from.
+the entire sample.  Batches of any size run as *batch-tiled* grids —
+``grid = (ceil(B / Bt), T)`` — where the tile rows ``Bt`` are derived from
+the bytes-budget helpers below so one tile's state always fits VMEM.  The
+grid walks batch-tile-major (all T ticks of tile 0, then tile 1, …); VMEM
+scratch re-initialises at each tile's first tick, so tiles are independent
+and a launch is never capped by VMEM — only its *tiles* are.
 """
 
 from __future__ import annotations
@@ -50,16 +53,30 @@ from repro.core.quant import QuantizedMode
 # ---------------------------------------------------------------------------
 # VMEM bytes budget — the single source of truth for tile sizing.
 #
-# Everything that sizes a kernel tile derives from these helpers instead of
-# hand-synced constants: KERNEL_SAMPLE_CAP (below),
-# ExecutionBackend._note's tile guard, the serving runtime's
-# repro.serve.batching.max_batch_for, and the fused-train scratch sizing
-# (fused_train_fits).
+# Every tile-sizing decision in the system derives from these helpers — the
+# per-tile row caps the batch-tiled kernel grids pick (max_forward_tile /
+# max_fused_train_tile), the derived KERNEL_SAMPLE_CAP below, the backend's
+# `tile_rows` accounting (repro.core.backend.ExecutionBackend), and the
+# serving admission size (repro.serve.batching.max_batch_for).  Nothing else
+# in src/ declares a tile-size constant — asserted by
+# tests/test_fused_kernels.py::test_tile_sizing_single_source.
 # ---------------------------------------------------------------------------
 
 # Conservative slice of the ~16 MiB/core VMEM left to one kernel tile once
 # double-buffered HBM streaming and compiler temporaries are accounted for.
 DEFAULT_VMEM_BUDGET = 4 * 2**20
+
+# The physical per-core ceiling: a tile whose scratch exceeds this cannot
+# compile on any TPU regardless of how far the conservative budget is
+# raised — the fused train wrapper fails loudly at trace time instead of
+# surfacing an opaque compiler OOM (there is no silent fallback any more).
+PHYSICAL_VMEM_CEILING = 16 * 2**20
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division — the one tile-count idiom (grids, padding,
+    traffic accounting all reuse it)."""
+    return -(-a // b)
 
 F32_BYTES = 4  # bytes per element; the kernels are f32 throughout
 _F32 = F32_BYTES
@@ -103,11 +120,12 @@ def max_batch_for_dims(
     return int(max(1, b))
 
 
-# The kernel's hard VMEM contract: the largest power-of-two batch tile a
-# chip-maximal (256 in / 256 hid / 16 out) network fits in the default
-# budget.  Derived, not hand-synced — evaluates to 128.  Enforced by the
-# execution backend for every kernel tile and by the serving runtime's tile
-# sizing (repro.serve.batching.max_batch_for).
+# The kernel's per-tile VMEM contract: the largest power-of-two batch tile
+# a chip-maximal (256 in / 256 hid / 16 out) network fits in the default
+# budget.  Derived, not hand-synced — evaluates to 128.  A per-*tile* bound,
+# not a launch bound: the batch-tiled grids cut any B into tiles of at most
+# this many rows, and the serving runtime's per-device admission
+# (repro.serve.batching.max_batch_for) targets one such tile per device.
 _CHIP_MAX_DIMS = (256, 256, 16)
 KERNEL_SAMPLE_CAP = 1 << (max_batch_for_dims(*_CHIP_MAX_DIMS).bit_length() - 1)
 
@@ -136,9 +154,65 @@ def fused_train_fits(
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
 ) -> bool:
     """Whether one ``(T, B)`` training tile's whole e-prop trace set fits
-    the VMEM budget — the static dispatch the backend's ``train`` op makes
-    between the fused kernel and the two-kernel fallback pipeline."""
+    the VMEM budget.  Byte test only: the batch-tiled train grid runs a
+    fitting batch as a single tile *up to* ``KERNEL_SAMPLE_CAP`` rows —
+    above the cap it still tiles even when the bytes would fit
+    (``max_fused_train_tile`` applies both bounds)."""
     return fused_train_bytes(T, B, n_in, n_hid, n_out) <= vmem_budget
+
+
+def max_forward_tile(
+    n_in: int, n_hid: int, n_out: int, vmem_budget: int = DEFAULT_VMEM_BUDGET
+) -> int:
+    """Batch rows per tile of the batch-tiled forward/inference/update grids
+    (``grid = (ceil(B / Bt), T)``), derived from the VMEM budget and capped
+    by the kernel contract."""
+    return max_batch_for_dims(
+        n_in, n_hid, n_out, vmem_budget, cap=KERNEL_SAMPLE_CAP
+    )
+
+
+def max_fused_train_tile(
+    T: int,
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> int:
+    """Batch rows per tile of the batch-tiled fused train grid
+    (``grid = (ceil(B / Bt), 2T)``): the largest ``Bt`` whose whole-trace
+    scratch (:func:`fused_train_bytes`, linear in B) fits the budget.
+
+    Clamped to ``>= 1``: the budget is a conservative slice of physical
+    VMEM, so a single-sample tile that nominally overflows it (chip-maximal
+    ``T``) still compiles in practice — there is no fallback pipeline to
+    fall back to any more.  Capped by the kernel contract above.
+    """
+    fixed = fused_train_bytes(T, 0, n_in, n_hid, n_out)
+    per_row = fused_train_bytes(T, 1, n_in, n_hid, n_out) - fixed
+    b = (vmem_budget - fixed) // per_row
+    return int(max(1, min(KERNEL_SAMPLE_CAP, b)))
+
+
+def _tile_batch(
+    B: int, tile: int
+) -> Tuple[int, int, int]:
+    """``(Bt, num_tiles, padded_B)`` for one launch: tile rows never exceed
+    the batch, and the batch axis is zero-padded up to a whole number of
+    tiles (padding rows carry zero input and zero valid — inert by the
+    masking invariants, sliced off by the wrappers)."""
+    bt = max(1, min(tile, B))
+    nb = cdiv(B, bt)
+    return bt, nb, nb * bt
+
+
+def _pad_batch_axis(x: jax.Array, axis: int, target: int) -> jax.Array:
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
 
 
 # ---------------------------------------------------------------------------
@@ -230,8 +304,9 @@ def _kernel(
     boxcar_width: float,
     quant: Optional[QuantizedMode],
 ):
-    t = pl.program_id(0)
+    t = pl.program_id(1)   # tick within the current batch tile
 
+    # each batch tile is an independent network run: re-init at its 1st tick
     @pl.when(t == 0)
     def _init():
         v_scr[...] = jnp.zeros_like(v_scr)
@@ -282,17 +357,21 @@ def rsnn_forward(
     reset: str = "sub",
     boxcar_width: float = 0.5,
     quant: Optional[QuantizedMode] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    batch_tile: Optional[int] = None,
     interpret: bool = False,
 ) -> Dict[str, jax.Array]:
-    """Fused forward over one ``(T, B)`` tile; returns per-tick tensors
+    """Fused forward over one ``(T, B)`` launch; returns per-tick tensors
     (z, h, xbar, pbar, zbar, y, v — post-reset membrane trajectory).
 
-    This is the *trace-streaming* variant: it serves the backend's
-    ``forward_traces`` op (split-pipeline training), the ``dynamics`` probe,
-    and the two-kernel fallback of the ``train`` op.  The ``inference`` op
-    uses :func:`rsnn_infer` (no per-tick streams); the fused ``train`` op
-    uses :func:`repro.kernels.eprop_update.rsnn_train` when its trace
-    scratch fits VMEM.
+    The launch runs as a batch-tiled ``grid = (ceil(B / Bt), T)`` with
+    ``Bt`` derived from the VMEM budget (:func:`max_forward_tile`, or the
+    explicit ``batch_tile`` override), so ``B`` is unbounded — only a tile
+    must fit VMEM.  This is the *trace-streaming* variant: it serves the
+    backend's ``forward_traces`` op (split-pipeline training) and the
+    ``dynamics`` probe.  The ``inference`` op uses :func:`rsnn_infer` (no
+    per-tick streams); the ``train`` op always uses
+    :func:`repro.kernels.eprop_update.rsnn_train`, which tiles the same way.
 
     With ``quant`` set the tick pipeline is ReckOn's fixed-point datapath
     (saturating membrane grid, register-driven floor leaks); ``alpha``,
@@ -306,6 +385,10 @@ def rsnn_forward(
     dt = raster.dtype
     if quant is not None:
         alpha, kappa, v_th = quant.alpha, quant.kappa, float(quant.threshold)
+    bt, nb, b_pad = _tile_batch(
+        B, batch_tile or max_forward_tile(n_in, H, O, vmem_budget)
+    )
+    raster = _pad_batch_axis(raster, 1, b_pad)
 
     kern = functools.partial(
         _kernel,
@@ -316,12 +399,12 @@ def rsnn_forward(
         boxcar_width=float(boxcar_width),
         quant=quant,
     )
-    tick_spec = lambda cols: pl.BlockSpec((1, B, cols), lambda t: (t, 0, 0))
-    full = lambda shape: pl.BlockSpec(shape, lambda t: tuple(0 for _ in shape))
+    tick_spec = lambda cols: pl.BlockSpec((1, bt, cols), lambda b, t: (t, b, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda b, t: tuple(0 for _ in shape))
 
     outs = pl.pallas_call(
         kern,
-        grid=(T,),
+        grid=(nb, T),
         in_specs=[
             tick_spec(n_in),
             full((n_in, H)),
@@ -333,25 +416,25 @@ def rsnn_forward(
             tick_spec(H), tick_spec(H), tick_spec(O), tick_spec(H),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((T, B, H), dt),
-            jax.ShapeDtypeStruct((T, B, H), dt),
-            jax.ShapeDtypeStruct((T, B, n_in), dt),
-            jax.ShapeDtypeStruct((T, B, H), dt),
-            jax.ShapeDtypeStruct((T, B, H), dt),
-            jax.ShapeDtypeStruct((T, B, O), dt),
-            jax.ShapeDtypeStruct((T, B, H), dt),
+            jax.ShapeDtypeStruct((T, b_pad, H), dt),
+            jax.ShapeDtypeStruct((T, b_pad, H), dt),
+            jax.ShapeDtypeStruct((T, b_pad, n_in), dt),
+            jax.ShapeDtypeStruct((T, b_pad, H), dt),
+            jax.ShapeDtypeStruct((T, b_pad, H), dt),
+            jax.ShapeDtypeStruct((T, b_pad, O), dt),
+            jax.ShapeDtypeStruct((T, b_pad, H), dt),
         ],
         scratch_shapes=[
-            pltpu.VMEM((B, H), jnp.float32),
-            pltpu.VMEM((B, H), jnp.float32),
-            pltpu.VMEM((B, O), jnp.float32),
-            pltpu.VMEM((B, n_in), jnp.float32),
-            pltpu.VMEM((B, H), jnp.float32),
-            pltpu.VMEM((B, H), jnp.float32),
+            pltpu.VMEM((bt, H), jnp.float32),
+            pltpu.VMEM((bt, H), jnp.float32),
+            pltpu.VMEM((bt, O), jnp.float32),
+            pltpu.VMEM((bt, n_in), jnp.float32),
+            pltpu.VMEM((bt, H), jnp.float32),
+            pltpu.VMEM((bt, H), jnp.float32),
         ],
         interpret=interpret,
     )(raster, w_in, w_rec, w_out)
-    z, h, xbar, pbar, zbar, y, v = outs
+    z, h, xbar, pbar, zbar, y, v = (o[:, :B] for o in outs)
     return {"z": z, "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar, "y": y,
             "v": v}
 
@@ -383,8 +466,9 @@ def _infer_kernel(
     infer_all: bool,
     T: int,
 ):
-    t = pl.program_id(0)
+    t = pl.program_id(1)   # tick within the current batch tile
 
+    # each batch tile is an independent network run: re-init at its 1st tick
     @pl.when(t == 0)
     def _init():
         v_scr[...] = jnp.zeros_like(v_scr)
@@ -410,6 +494,7 @@ def _infer_kernel(
     acc_scr[...] += y_new * w_inf
     nspk_scr[...] += (z_new * valid_t[:, None]).sum(axis=1, keepdims=True)
 
+    # flush this batch tile's accumulators into its (Bt, ·) output blocks
     @pl.when(t == T - 1)
     def _flush():
         acc_y_ref[...] = acc_scr[...]
@@ -429,15 +514,20 @@ def rsnn_infer(
     reset: str = "sub",
     quant: Optional[QuantizedMode] = None,
     infer_window: str = "valid",
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    batch_tile: Optional[int] = None,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Inference-only forward over one ``(T, B)`` tile — the serving path.
+    """Inference-only forward over one ``(T, B)`` launch — the serving path.
 
-    Accumulates the readout (weighted by ``valid`` per ``infer_window``) and
-    the valid-masked spike count entirely in VMEM; streams **no** per-tick
-    tensors.  Returns ``(acc_y (B, O), n_spk (B, 1))`` — in quantized mode
-    both are exact integers carried in f32 (bit-identical to the golden
-    reference's accumulators, see ``tests/test_quant_equivalence.py``).
+    Runs as a batch-tiled ``grid = (ceil(B / Bt), T)``
+    (:func:`max_forward_tile` sizes ``Bt`` from the VMEM budget), so serving
+    batches are not VMEM-capped.  Each tile accumulates the readout
+    (weighted by ``valid`` per ``infer_window``) and the valid-masked spike
+    count entirely in VMEM and streams **no** per-tick tensors.  Returns
+    ``(acc_y (B, O), n_spk (B, 1))`` — in quantized mode both are exact
+    integers carried in f32 (bit-identical to the golden reference's
+    accumulators, see ``tests/test_quant_equivalence.py``).
     """
     T, B, n_in = raster.shape
     H = w_rec.shape[0]
@@ -445,6 +535,11 @@ def rsnn_infer(
     dt = raster.dtype
     if quant is not None:
         alpha, kappa, v_th = quant.alpha, quant.kappa, float(quant.threshold)
+    bt, nb, b_pad = _tile_batch(
+        B, batch_tile or max_forward_tile(n_in, H, O, vmem_budget)
+    )
+    raster = _pad_batch_axis(raster, 1, b_pad)
+    valid = _pad_batch_axis(valid, 1, b_pad)
 
     kern = functools.partial(
         _infer_kernel,
@@ -456,30 +551,33 @@ def rsnn_infer(
         infer_all=(infer_window == "all"),
         T=T,
     )
-    full = lambda shape: pl.BlockSpec(shape, lambda t: tuple(0 for _ in shape))
+    full = lambda shape: pl.BlockSpec(shape, lambda b, t: tuple(0 for _ in shape))
 
     acc_y, n_spk = pl.pallas_call(
         kern,
-        grid=(T,),
+        grid=(nb, T),
         in_specs=[
-            pl.BlockSpec((1, B, n_in), lambda t: (t, 0, 0)),
-            pl.BlockSpec((1, B), lambda t: (t, 0)),
+            pl.BlockSpec((1, bt, n_in), lambda b, t: (t, b, 0)),
+            pl.BlockSpec((1, bt), lambda b, t: (t, b)),
             full((n_in, H)),
             full((H, H)),
             full((H, O)),
         ],
-        out_specs=[full((B, O)), full((B, 1))],
+        out_specs=[
+            pl.BlockSpec((bt, O), lambda b, t: (b, 0)),
+            pl.BlockSpec((bt, 1), lambda b, t: (b, 0)),
+        ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, O), dt),
-            jax.ShapeDtypeStruct((B, 1), dt),
+            jax.ShapeDtypeStruct((b_pad, O), dt),
+            jax.ShapeDtypeStruct((b_pad, 1), dt),
         ],
         scratch_shapes=[
-            pltpu.VMEM((B, H), jnp.float32),
-            pltpu.VMEM((B, H), jnp.float32),
-            pltpu.VMEM((B, O), jnp.float32),
-            pltpu.VMEM((B, O), jnp.float32),
-            pltpu.VMEM((B, 1), jnp.float32),
+            pltpu.VMEM((bt, H), jnp.float32),
+            pltpu.VMEM((bt, H), jnp.float32),
+            pltpu.VMEM((bt, O), jnp.float32),
+            pltpu.VMEM((bt, O), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
         ],
         interpret=interpret,
     )(raster, valid, w_in, w_rec, w_out)
-    return acc_y, n_spk
+    return acc_y[:B], n_spk[:B]

@@ -33,15 +33,32 @@ inference (streamed)  forward + acc/spike reduce reads           forward writes
 inference (fused)     raster T·B·N + valid T·B                   acc_y B·O +
                                                                  n_spk B
 ====================  =========================================  ==============
+
+Batch-tiled launches (``grid = (ceil(B/Bt), ·)``, any B) leave the rows
+above essentially unchanged: weight blocks and the ``dw`` out-blocks have
+constant grid index maps, so both stay VMEM-resident across every batch tile
+(one fetch / one writeback per *launch*); the only extra movement is the
+zero streams of the last tile's pad rows.  See
+:func:`train_fused_tiled_bytes` / :func:`infer_fused_tiled_bytes` (the
+as-executed padded counts) and the per-tile :func:`tile_table`.
 """
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
-# One element-size / weight-count source with the VMEM budget helpers.
+# One element-size / weight-count / tile-size source with the VMEM budget
+# helpers (the batch-tiled grids derive their tile rows from the same place).
+from repro.kernels.rsnn_step import DEFAULT_VMEM_BUDGET
 from repro.kernels.rsnn_step import F32_BYTES as _F32
-from repro.kernels.rsnn_step import weight_elems
+from repro.kernels.rsnn_step import (
+    cdiv as _cdiv,
+)
+from repro.kernels.rsnn_step import (
+    max_forward_tile,
+    max_fused_train_tile,
+    weight_elems,
+)
 
 
 def _weights(n_in: int, n_hid: int, n_out: int, feedback: bool = False) -> int:
@@ -119,14 +136,96 @@ def infer_fused_bytes(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> int:
     return _F32 * (reads + writes)
 
 
-def op_table(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> Dict[str, int]:
-    """The full before/after data-movement table for one tile shape."""
+def train_fused_tiled_bytes(
+    T: int,
+    B: int,
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    batch_tile: Optional[int] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> int:
+    """Batch-tiled fused train launch (``grid=(ceil(B/Bt), 2T)``): per-tick
+    streams are per-tile identical to the single-tile fused kernel, and the
+    weight blocks / ``dw`` out-blocks have constant index maps, so they are
+    fetched / written back exactly once per *launch* (Pallas keeps an
+    unchanged block VMEM-resident across grid steps).  The only extra HBM
+    movement tiling introduces is the zero streams of the last tile's pad
+    rows (``bp - B`` rows)."""
+    bt = batch_tile or max_fused_train_tile(T, n_in, n_hid, n_out, vmem_budget)
+    bt = max(1, min(bt, B))
+    bp = _cdiv(B, bt) * bt   # pad rows stream zeros but still stream
+    reads = (
+        2 * T * bp * n_in + 2 * T * bp + bp * n_out
+        + _weights(n_in, n_hid, n_out, feedback=True)
+    )
+    writes = _dw(n_in, n_hid, n_out) + bp * n_out + bp
+    return _F32 * (reads + writes)
+
+
+def infer_fused_tiled_bytes(
+    T: int,
+    B: int,
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    batch_tile: Optional[int] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> int:
+    """Batch-tiled inference launch (``grid=(ceil(B/Bt), T)``): identical to
+    the single-tile streams up to the pad rows of the last tile (weights
+    stay VMEM-resident across the whole grid — constant index map)."""
+    bt = batch_tile or max_forward_tile(n_in, n_hid, n_out, vmem_budget)
+    bt = max(1, min(bt, B))
+    bp = _cdiv(B, bt) * bt
+    reads = T * bp * n_in + T * bp + _weights(n_in, n_hid, n_out)
+    writes = bp * n_out + bp
+    return _F32 * (reads + writes)
+
+
+def op_table(
+    T: int,
+    B: int,
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> Dict[str, int]:
+    """The full before/after data-movement table for one launch shape.
+
+    ``train_fused`` / ``infer_fused`` are the *as-executed* batch-tiled
+    numbers (tile rows derived from ``vmem_budget``); when the whole batch
+    fits one tile they coincide with the single-tile formulas above."""
     args = (T, B, n_in, n_hid, n_out)
     return {
         "forward_traces": forward_traces_bytes(*args),
         "eprop_update": eprop_update_bytes(*args),
         "train_two_kernel": train_two_kernel_bytes(*args),
-        "train_fused": train_fused_bytes(*args),
+        "train_fused": train_fused_tiled_bytes(*args, vmem_budget=vmem_budget),
         "infer_streamed": infer_streamed_bytes(*args),
-        "infer_fused": infer_fused_bytes(*args),
+        "infer_fused": infer_fused_tiled_bytes(*args, vmem_budget=vmem_budget),
+    }
+
+
+def tile_table(
+    T: int,
+    B: int,
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> Dict[str, int]:
+    """Per-tile sizing companion to :func:`op_table`: the derived tile rows,
+    tile counts and per-tile bytes of the batch-tiled fused kernels."""
+    bt_train = max_fused_train_tile(T, n_in, n_hid, n_out, vmem_budget)
+    bt_infer = max_forward_tile(n_in, n_hid, n_out, vmem_budget)
+    bt_train = max(1, min(bt_train, B))
+    bt_infer = max(1, min(bt_infer, B))
+    return {
+        "train_tile_rows": bt_train,
+        "train_tiles": _cdiv(B, bt_train),
+        "train_bytes_per_tile": train_fused_bytes(T, bt_train, n_in, n_hid, n_out),
+        "infer_tile_rows": bt_infer,
+        "infer_tiles": _cdiv(B, bt_infer),
+        "infer_bytes_per_tile": infer_fused_bytes(T, bt_infer, n_in, n_hid, n_out),
     }

@@ -27,6 +27,15 @@ def make_debug_mesh(n_data: int = 1, n_model: int = 1, n_pod: int = 0):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_data_mesh(n_data: int | None = None):
+    """1-axis pure data-parallel mesh — what the RSNN execution backend
+    shards its sample axis over (``ExecutionBackend(mesh=...)``).  Defaults
+    to every visible device (8 virtual CPU devices under the CI lane's
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    n = n_data or len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
 # TPU v5e hardware constants for the roofline model (per chip).
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s

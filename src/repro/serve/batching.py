@@ -52,11 +52,20 @@ def weights_vmem_bytes(cfg: RSNNConfig) -> int:
     return weights_bytes(cfg.n_in, cfg.n_hid, cfg.n_out)
 
 
-def max_batch_for(cfg: RSNNConfig, vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
-    """Largest batch tile the VMEM budget admits, capped by the kernel contract."""
-    return max_batch_for_dims(
+def max_batch_for(
+    cfg: RSNNConfig,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    num_devices: int = 1,
+) -> int:
+    """Serving admission size: the per-device kernel tile the VMEM budget
+    admits (capped by the kernel contract), times the data-parallel device
+    count.  Since the kernels batch-tile internally this is a *throughput*
+    target (one full tile per device per launch), not a hard VMEM limit.
+    """
+    per_device = max_batch_for_dims(
         cfg.n_in, cfg.n_hid, cfg.n_out, vmem_budget, cap=KERNEL_SAMPLE_CAP
     )
+    return per_device * max(1, num_devices)
 
 
 def request_ticks(events: np.ndarray) -> int:

@@ -54,9 +54,28 @@ class ServeResult:
     pred: int                 # argmax class
     logits: np.ndarray        # accumulated LI readout acc_y, shape (n_out,)
     label: int                # label carried by the AER stream (0 if absent)
-    latency_s: float          # admission → tile completion
+    latency_s: float          # admission → result delivery (harvest); see
+                              # BatchedEngine.serve — delivery lag behind
+                              # device completion is bounded by the polling
+                              # cadence and max_inflight_tiles
     bucket_ticks: int         # padded tick length served at
     batch_size: int           # live samples in the tile
+
+
+@dataclasses.dataclass
+class _PendingTile:
+    """A launched-but-unsynchronised batch tile: the device is still (or may
+    still be) computing ``acc_y`` while the host moves on to later buckets."""
+
+    acc_y: jax.Array          # (b_pad, n_out) device array, possibly in flight
+    labels: np.ndarray
+    tile: BatchTile
+    b_live: int
+
+    def ready(self) -> bool:
+        """Non-blocking readiness probe (conservative where unsupported)."""
+        is_ready = getattr(self.acc_y, "is_ready", None)
+        return bool(is_ready()) if callable(is_ready) else False
 
 
 @dataclasses.dataclass
@@ -113,8 +132,14 @@ class BatchedEngine:
         :class:`~repro.core.backend.ExecutionBackend` to share its jit cache
         (the online-learning-while-serving configuration).
     max_batch:
-        Batch-tile cap; defaults to the VMEM budget
-        (:func:`repro.serve.batching.max_batch_for`).
+        Admission size per tile; defaults to one full per-device kernel tile
+        times the data-parallel device count
+        (:func:`repro.serve.batching.max_batch_for`).  The kernels batch-tile
+        internally, so this is a scheduling knob, not a VMEM cap.
+    mesh:
+        Data-parallel serving: a mesh whose data axes the backend shards
+        every inference tile's sample axis over (weights replicated) —
+        admission scales with the device count.
     """
 
     def __init__(
@@ -125,18 +150,41 @@ class BatchedEngine:
         backend: BackendLike = "auto",
         max_batch: Optional[int] = None,
         tick_granularity: int = 32,
-        vmem_budget: int = batching.DEFAULT_VMEM_BUDGET,
+        vmem_budget: Optional[int] = None,
+        mesh=None,
+        max_inflight_tiles: int = 8,
         clock: Callable[[], float] = time.monotonic,
     ):
         self.cfg = cfg
         alpha = float(np.asarray(params.get("alpha", cfg.neuron.alpha)))
-        self.engine = as_backend(cfg, backend, alpha=alpha)
+        self.engine = as_backend(
+            cfg, backend, alpha=alpha, vmem_budget=vmem_budget, mesh=mesh
+        )
         self.backend = self.engine.backend
-        self.max_batch = max_batch or batching.max_batch_for(cfg, vmem_budget)
-        assert self.max_batch <= batching.KERNEL_SAMPLE_CAP
+        # Size admission and traffic accounting from the budget the backend
+        # actually tiles with — a shared backend (from_learner) keeps its own
+        # (as_backend asserts if the caller explicitly passed a different one).
+        budget = self.engine.vmem_budget
+        self.max_batch = max_batch or batching.max_batch_for(
+            cfg, budget, num_devices=self.engine.num_devices
+        )
+        # per-kernel-tile rows, for the analytic HBM traffic accounting
+        self._tile_rows = batching.max_batch_for(cfg, budget)
         self.tick_granularity = tick_granularity
+        # Backpressure for the deferred-sync serve loop: at most this many
+        # launched-but-unharvested tiles (each pins its raster + acc_y device
+        # buffers) before the host blocks on the oldest.
+        self.max_inflight_tiles = max(1, int(max_inflight_tiles))
         self._clock = clock
         self._bytes_streamed = 0
+        # Quantized SRAM loads go through one jit'd snap program; on
+        # accelerator backends it donates the engine's previous SRAM image so
+        # update_weights reuses those buffers instead of copying every swap.
+        # (CPU has no buffer donation — donating there only emits warnings.)
+        donate = jax.default_backend() in ("tpu", "gpu")
+        self._jit_sram_load = jax.jit(
+            self._sram_load_impl, donate_argnums=(1,) if donate else ()
+        )
         self.update_weights(params)
         self.scheduler = BucketingScheduler(
             self.max_batch, tick_granularity, clock=clock
@@ -167,20 +215,39 @@ class BatchedEngine:
         kw.setdefault("backend", learner.backend)
         return cls(learner.cfg, learner.inference_params(), **kw)
 
+    def _sram_load_impl(self, weights, old_weights):
+        """One jit'd SRAM load.  ``old_weights`` — the engine's previous
+        SRAM image — is donated on accelerator backends so the snapped
+        output lands in the old buffers (no per-swap weight copies)."""
+        del old_weights  # only donated for its buffers
+        return {k: self._sram(k, v) for k, v in weights.items()}
+
     def update_weights(self, weights: Dict[str, jax.Array]) -> None:
         """Swap in newly-trained weights (no recompilation — weights are
         jit arguments).  In quantized mode this is the SRAM load: weights
-        are snapped onto the 8-bit grid."""
-        self._weights = {
-            k: self._sram(k, v)
-            for k, v in weights.items()
+        are snapped onto the 8-bit grid, through a jit'd program that
+        donates (and thus reuses) the previous SRAM image's buffers."""
+        new = {
+            k: v for k, v in weights.items()
             if k in ("w_in", "w_rec", "w_out", "b_fb")
         }
+        if self.engine.quant is None:
+            # float mode: no snap, no copy — the engine aliases the caller's
+            # (device-resident) arrays directly
+            self._weights = {k: jnp.asarray(v) for k, v in new.items()}
+            return
+        old = getattr(self, "_weights", None)
+        if old is not None and set(old) == set(new):
+            self._weights = self._jit_sram_load(new, old)
+        else:
+            self._weights = {k: self._sram(k, v) for k, v in new.items()}
 
     # ----------------------------------------------------------------- serving
 
-    def run_tile(self, tile: BatchTile) -> List[ServeResult]:
-        """Decode, pad, classify one batch tile; per-request results."""
+    def _launch_tile(self, tile: BatchTile) -> "_PendingTile":
+        """Decode, pad and *launch* one batch tile — returns without
+        synchronising on the device so consecutive buckets overlap host
+        decode with device compute."""
         events = [r.events for r in tile.requests]
         raster, valid, labels = batching.decode_events_host(
             events, self.cfg.n_in, tile.num_ticks, self.cfg.label_delay
@@ -190,28 +257,42 @@ class BatchedEngine:
         raster, valid = batching.pad_batch(raster, valid, b_pad)
         if self.backend == "kernel":
             # analytic accounting for the inference-specialized kernel; the
-            # scan backend runs no Pallas tile, so no bytes are attributed
-            self._bytes_streamed += traffic.infer_fused_bytes(
-                tile.num_ticks, b_pad, self.cfg.n_in, self.cfg.n_hid,
-                self.cfg.n_out,
+            # scan backend runs no Pallas tile, so no bytes are attributed.
+            # With a data mesh, every device fetches its own replicated
+            # weight set and runs its (shard-padded) slice of the batch.
+            ndev = self.engine.num_devices
+            shard_b = -(-b_pad // ndev)
+            self._bytes_streamed += ndev * traffic.infer_fused_tiled_bytes(
+                tile.num_ticks, shard_b, self.cfg.n_in, self.cfg.n_hid,
+                self.cfg.n_out, batch_tile=self._tile_rows,
             )
         out = self.engine.inference(
             self._weights, jnp.asarray(raster), jnp.asarray(valid)
         )
-        acc_y = np.asarray(jax.block_until_ready(out["acc_y"]))[:b_live]
+        return _PendingTile(
+            acc_y=out["acc_y"], labels=labels, tile=tile, b_live=b_live
+        )
+
+    def _finalize(self, pending: "_PendingTile") -> List[ServeResult]:
+        """Materialise one launched tile's results (synchronises on it)."""
+        acc_y = np.asarray(pending.acc_y)[: pending.b_live]
         t_done = self._clock()
         return [
             ServeResult(
                 rid=req.rid,
                 pred=int(np.argmax(acc_y[i])),
                 logits=acc_y[i],
-                label=int(labels[i]),
+                label=int(pending.labels[i]),
                 latency_s=t_done - req.t_submit,
-                bucket_ticks=tile.num_ticks,
-                batch_size=b_live,
+                bucket_ticks=pending.tile.num_ticks,
+                batch_size=pending.b_live,
             )
-            for i, req in enumerate(tile.requests)
+            for i, req in enumerate(pending.tile.requests)
         ]
+
+    def run_tile(self, tile: BatchTile) -> List[ServeResult]:
+        """Decode, pad, classify one batch tile; per-request results."""
+        return self._finalize(self._launch_tile(tile))
 
     def submit(self, events: np.ndarray, meta: Optional[dict] = None) -> int:
         return self.scheduler.submit(events, meta)
@@ -222,22 +303,38 @@ class BatchedEngine:
         """Run a whole stream of AER sample buffers; results in admission
         (rid) order plus throughput/latency stats.
 
-        Tiles are released as soon as a bucket fills (steady-state batching);
-        ``flush`` drains the partial buckets at end-of-stream.
+        Tiles are *launched* as soon as a bucket fills (steady-state
+        batching) but the host never blocks on them mid-stream: results are
+        harvested opportunistically as their device buffers become ready and
+        the one mandatory synchronisation happens at the end-of-stream drain
+        — host decode of bucket ``k+1`` overlaps device compute of bucket
+        ``k``.  ``flush`` drains the partial buckets at end-of-stream.
         """
         t0 = self._clock()
         self._bytes_streamed = 0
         results: List[ServeResult] = []
+        pending: List[_PendingTile] = []
         batches = 0
+
+        def harvest(block: bool) -> None:
+            while pending and (block or pending[0].ready()):
+                results.extend(self._finalize(pending.pop(0)))
+
         for events in stream:
             self.submit(events)
             for tile in self.scheduler.ready_tiles():
-                results.extend(self.run_tile(tile))
+                pending.append(self._launch_tile(tile))
                 batches += 1
+            harvest(block=False)
+            while len(pending) > self.max_inflight_tiles:
+                # backpressure: the device fell behind — block on the oldest
+                # tile so in-flight buffers stay bounded
+                results.extend(self._finalize(pending.pop(0)))
         if flush:
             for tile in self.scheduler.drain():
-                results.extend(self.run_tile(tile))
+                pending.append(self._launch_tile(tile))
                 batches += 1
+        harvest(block=True)   # the single per-drain sync
         wall = self._clock() - t0
         results.sort(key=lambda r: r.rid)
         stats = ServeStats.collect(

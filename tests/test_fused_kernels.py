@@ -24,6 +24,8 @@ from repro.kernels.rsnn_step import (
     fused_train_bytes,
     fused_train_fits,
     max_batch_for_dims,
+    max_forward_tile,
+    max_fused_train_tile,
 )
 
 
@@ -119,9 +121,11 @@ def test_fused_train_batch_edges(B):
     _assert_train_parity(cfg, weights, raster, y_star, valid)
 
 
-def test_fused_train_fallback_matches_fused():
-    """An undersized VMEM budget routes train_tile through the two-kernel
-    pipeline — same dw, same metrics."""
+def test_undersized_budget_tiles_instead_of_falling_back():
+    """An undersized VMEM budget no longer routes train_tile through a
+    two-kernel fallback — the fused kernel batch-tiles down (here to
+    Bt=1) and still matches both the scan oracle and the default-budget
+    single-tile launch."""
     cfg = _cfg()
     weights = _weights(jax.random.key(7), cfg)
     raster, y_star, valid = _tile(jax.random.key(8), cfg, B=3)
@@ -129,15 +133,120 @@ def test_fused_train_fallback_matches_fused():
     assert not fused_train_fits(
         cfg.num_ticks, 3, cfg.n_in, cfg.n_hid, cfg.n_out, tiny
     )
-    dw_fb, m_fb = _assert_train_parity(
+    assert max_fused_train_tile(
+        cfg.num_ticks, cfg.n_in, cfg.n_hid, cfg.n_out, tiny
+    ) == 1
+    dw_t, m_t = _assert_train_parity(
         cfg, weights, raster, y_star, valid, vmem_budget=tiny
     )
-    dw_fu, m_fu = ExecutionBackend(cfg, "kernel").train_tile(
+    dw_u, m_u = ExecutionBackend(cfg, "kernel").train_tile(
         weights, raster, y_star, valid)
-    for k in dw_fu:
-        np.testing.assert_allclose(dw_fb[k], dw_fu[k], rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(m_fb["spike_rate"], m_fu["spike_rate"],
+    for k in dw_u:
+        np.testing.assert_allclose(dw_t[k], dw_u[k], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(m_t["spike_rate"], m_u["spike_rate"],
                                rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# batch-tiled grids (ISSUE 5): B beyond the per-tile cap, ragged last tile
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("label_delay", [0, 4])
+def test_train_beyond_sample_cap_matches_scan(label_delay):
+    """B > KERNEL_SAMPLE_CAP — rejected outright before the batch-tiled
+    grids — now runs on the kernel backend and matches the scan oracle.
+    A small forced budget keeps several ragged tiles in play."""
+    cfg = _cfg(T=6, n_in=8, n_hid=12)
+    B = KERNEL_SAMPLE_CAP + 33          # 161: previously impossible
+    budget = 1 << 15                    # forces Bt < B with B % Bt != 0
+    bt = max_fused_train_tile(cfg.num_ticks, cfg.n_in, cfg.n_hid,
+                              cfg.n_out, budget)
+    assert 1 < bt < B and B % bt != 0
+    weights = _weights(jax.random.key(30), cfg)
+    raster, y_star, valid = _tile(jax.random.key(31), cfg, B=B,
+                                  label_delay=label_delay)
+    _assert_train_parity(cfg, weights, raster, y_star, valid,
+                         vmem_budget=budget)
+
+
+def test_train_tiled_quantized_matches_scan():
+    """Quantized datapath across ragged batch tiles: the fixed-point
+    forward is per-sample, so tiling cannot perturb it; the float dw sums
+    agree with the scan oracle."""
+    cfg = _quant_cfg(T=16)
+    weights = _weights(jax.random.key(32), cfg, w_scale=4.0)
+    raster, y_star, valid = _tile(jax.random.key(33), cfg, B=13, density=0.5)
+    budget = 1 << 16
+    bt = max_fused_train_tile(cfg.num_ticks, cfg.n_in, cfg.n_hid,
+                              cfg.n_out, budget)
+    assert 1 < bt < 13 and 13 % bt != 0
+    _assert_train_parity(cfg, weights, raster, y_star, valid,
+                         vmem_budget=budget)
+
+
+def test_train_tiled_equals_untiled_dw_exactly_shaped():
+    """Tiled vs untiled launches of the same batch: identical metrics and
+    dw to tolerance (summation order across tiles is the only difference)."""
+    cfg = _cfg()
+    weights = _weights(jax.random.key(34), cfg)
+    raster, y_star, valid = _tile(jax.random.key(35), cfg, B=11)
+    from repro.kernels import ops
+
+    ncfg = cfg.neuron
+    args = (raster, y_star, valid, weights["w_in"],
+            weights["w_rec"] * (1 - jnp.eye(cfg.n_hid)), weights["w_out"],
+            weights["w_out"])
+    kw = dict(alpha=ncfg.alpha, kappa=ncfg.kappa, v_th=ncfg.v_th,
+              reset=ncfg.reset, boxcar_width=ncfg.boxcar_width)
+    ref = ops.rsnn_train(*args, **kw)                      # single tile
+    tiled = ops.rsnn_train(*args, **kw, batch_tile=4)      # 3 tiles, ragged
+    for r, t, name in zip(ref, tiled, ("dw_in", "dw_rec", "dw_out",
+                                       "acc_y", "n_spk")):
+        np.testing.assert_allclose(np.asarray(t), np.asarray(r),
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_infer_beyond_sample_cap_matches_scan():
+    """Serving batches beyond the per-tile cap run tiled and match the
+    scan backend — float and quantized (the latter bitwise)."""
+    cfg = _cfg(T=8, n_in=8, n_hid=12)
+    B = KERNEL_SAMPLE_CAP + 5
+    weights = _weights(jax.random.key(36), cfg)
+    raster, _, valid = _tile(jax.random.key(37), cfg, B=B)
+    out_s = ExecutionBackend(cfg, "scan").inference(weights, raster, valid)
+    out_k = ExecutionBackend(cfg, "kernel").inference(weights, raster, valid)
+    np.testing.assert_allclose(out_k["acc_y"], out_s["acc_y"],
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_array_equal(out_k["pred"], out_s["pred"])
+
+    qcfg = _quant_cfg(T=8)
+    qw = _weights(jax.random.key(38), qcfg, w_scale=4.0)
+    qraster, _, qvalid = _tile(jax.random.key(39), qcfg, B=140, density=0.5)
+    q_s = ExecutionBackend(qcfg, "scan").inference(qw, qraster, qvalid)
+    q_k = ExecutionBackend(qcfg, "kernel").inference(qw, qraster, qvalid)
+    np.testing.assert_array_equal(np.asarray(q_k["acc_y"]),
+                                  np.asarray(q_s["acc_y"]))
+
+
+def test_forward_traces_and_update_tile_beyond_cap():
+    """The split-pipeline ops batch-tile too: forward_traces + eprop_update
+    at B > cap match the scan backend."""
+    cfg = _cfg(T=6, n_in=8, n_hid=12)
+    B = KERNEL_SAMPLE_CAP + 16
+    weights = _weights(jax.random.key(40), cfg)
+    raster, y_star, valid = _tile(jax.random.key(41), cfg, B=B)
+    scan = ExecutionBackend(cfg, "scan")
+    kern = ExecutionBackend(cfg, "kernel")
+    tr_s = scan.forward_traces(weights, raster, y_star, valid)
+    tr_k = kern.forward_traces(weights, raster, y_star, valid)
+    for k in ("h", "xbar", "pbar", "zbar", "err"):
+        np.testing.assert_allclose(tr_k[k], tr_s[k], rtol=3e-5, atol=3e-5,
+                                   err_msg=k)
+    dw_s = scan.eprop_update(weights, tr_s)
+    dw_k = kern.eprop_update(weights, tr_k)
+    for k in dw_s:
+        np.testing.assert_allclose(dw_k[k], dw_s[k], rtol=2e-4, atol=2e-4)
 
 
 def test_fused_train_dead_batch_padding_is_inert():
@@ -256,6 +365,65 @@ def test_kernel_sample_cap_derives_to_contract_value():
     )
     assert batching.DEFAULT_VMEM_BUDGET == DEFAULT_VMEM_BUDGET
     assert batching.max_batch_for(cfg, vmem_budget=1) == 1
+    # multi-device admission: one full per-device tile per device
+    assert batching.max_batch_for(cfg, num_devices=8) == (
+        8 * batching.max_batch_for(cfg)
+    )
+
+
+def test_tile_sizing_single_source():
+    """ISSUE 5 satellite: every tile-sizing decision — KERNEL_SAMPLE_CAP,
+    the serving admission size, the backend's per-op tile rows and the
+    kernels' own grid tiling — derives from the bytes helpers in
+    kernels/rsnn_step.py; nothing in src/ re-declares a cap literal."""
+    import pathlib
+    import re
+
+    from repro.serve import batching
+
+    cfg = Presets.braille(n_classes=3, num_ticks=32)
+    be = ExecutionBackend(cfg, "scan")
+    # backend tile accounting == the kernel-side helpers
+    assert be.tile_rows("inference") == max_forward_tile(
+        cfg.n_in, cfg.n_hid, cfg.n_out, be.vmem_budget)
+    assert be.tile_rows("train", T=32) == max_fused_train_tile(
+        32, cfg.n_in, cfg.n_hid, cfg.n_out, be.vmem_budget)
+    # serving admission == per-device tile × devices (same helper chain)
+    assert batching.max_batch_for(cfg, num_devices=3) == 3 * max_batch_for_dims(
+        cfg.n_in, cfg.n_hid, cfg.n_out, DEFAULT_VMEM_BUDGET,
+        cap=KERNEL_SAMPLE_CAP)
+    # tile caps are monotone in the budget and never exceed the contract
+    for budget in (1 << 14, 1 << 20, DEFAULT_VMEM_BUDGET, 1 << 26):
+        assert 1 <= max_forward_tile(256, 256, 16, budget) <= KERNEL_SAMPLE_CAP
+        assert 1 <= max_fused_train_tile(64, 256, 256, 16, budget) \
+            <= KERNEL_SAMPLE_CAP
+
+    # source scan: KERNEL_SAMPLE_CAP is assigned exactly once (rsnn_step.py,
+    # derived — not a literal), and no other src/ module hard-codes a
+    # "= 128" style sample-cap constant.
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    assign = re.compile(r"^\s*KERNEL_SAMPLE_CAP\s*=", re.M)
+    cap_literal = re.compile(
+        r"^\s*[A-Z_]*(?:SAMPLE_CAP|MAX_BATCH|BATCH_CAP)[A-Z_]*\s*=\s*\d+",
+        re.M,
+    )
+    assigners, literals = [], []
+    for path in src.rglob("*.py"):
+        text = path.read_text()
+        if assign.search(text):
+            assigners.append(path.name)
+        # rsnn_step.py is the one legitimate assigner; its derivation is
+        # checked separately below
+        if path.name != "rsnn_step.py" and cap_literal.search(text):
+            literals.append(path.name)
+    assert assigners == ["rsnn_step.py"], assigners
+    assert literals == [], literals
+    # and the one assignment derives from the bytes helpers, not a literal
+    line = [
+        ln for ln in (src / "repro/kernels/rsnn_step.py").read_text()
+        .splitlines() if assign.match(ln)
+    ][0]
+    assert "max_batch_for_dims" in line, line
 
 
 def test_fused_train_budget_scales_with_tile():

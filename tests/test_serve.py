@@ -244,3 +244,51 @@ def test_serve_eventstream_end_to_end():
     )
     assert stats.p99_latency_s >= stats.p50_latency_s >= 0.0
     assert stats.batches >= 1 and stats.samples_per_sec > 0
+
+
+# --------------------------------------------------------------------------
+# deferred per-drain sync + donated SRAM loads (ISSUE 5 satellites)
+# --------------------------------------------------------------------------
+
+
+def test_serve_defers_sync_to_drain():
+    """serve() launches tiles without blocking per batch: results are
+    complete, rid-ordered and identical to the blocking run_tile path."""
+    cfg, params, reqs = _parity_setup(seed=8, n_req=7)
+    eng = BatchedEngine(cfg, params, backend="scan", max_batch=2,
+                        tick_granularity=32)
+    res_serve, stats = eng.serve(iter(reqs))
+    assert [r.rid for r in res_serve] == sorted(r.rid for r in res_serve)
+    assert stats.requests == len(reqs)
+
+    eng2 = BatchedEngine(cfg, params, backend="scan", max_batch=2,
+                         tick_granularity=32)
+    res_tiles = []
+    for ev in reqs:
+        eng2.submit(ev)
+        for tile in eng2.scheduler.ready_tiles():
+            res_tiles.extend(eng2.run_tile(tile))   # blocking per-tile path
+    for tile in eng2.scheduler.drain():
+        res_tiles.extend(eng2.run_tile(tile))
+    res_tiles.sort(key=lambda r: r.rid)
+    for a, b in zip(res_serve, res_tiles):
+        assert a.rid == b.rid and a.pred == b.pred
+        np.testing.assert_allclose(a.logits, b.logits, rtol=1e-6)
+
+
+def test_quantized_update_weights_snaps_via_jit_path():
+    """Quantized hot-swaps go through the jit'd SRAM-load (the donation
+    path on accelerators): repeated swaps keep the engine's weights on the
+    8-bit grid, bitwise equal to the direct per-leaf snap."""
+    cfg = Presets.braille(n_classes=3, num_ticks=32, quantized=True)
+    params = init_params(jax.random.key(9), cfg)
+    eng = BatchedEngine(cfg, params, backend="scan", max_batch=4)
+    q = eng.engine.quant
+    for scale in (1.5, 0.7, 2.0):
+        new_w = {k: v * scale for k, v in trainable(params).items()}
+        eng.update_weights(new_w)   # second+ swaps hit the jit'd load
+        for k, v in eng._weights.items():
+            ref = q.weight_spec.round_nearest(jnp.asarray(new_w[k]))
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(ref))
+    # the swap mints no inference programs
+    assert eng.engine.compiled_shapes("inference") == 0
