@@ -5,6 +5,7 @@
   T1/T2   resource analog (two SoC modes)           -> bench_resources
   kernels allclose + µbench                         -> bench_kernels
   serving batched vs sequential throughput          -> bench_serve
+  stateful session streaming (events/s, tick p99)   -> bench_serve --streaming
   §Roofline table (from dry-run JSONs, if present)  -> roofline
 
 ``python -m benchmarks.run [--fast]`` — default runs the paper's full
@@ -62,6 +63,8 @@ def main(argv=None):
     jobs = [
         ("kernels", lambda: bench_kernels.main(["--out-dir", opts.out_dir])),
         ("serve", lambda: bench_serve.main(["--fast"] if opts.fast else [])),
+        ("streaming", lambda: bench_serve.main(
+            ["--streaming"] + (["--fast"] if opts.fast else []))),
         ("cue", lambda: bench_cue.main([])),
         ("resources", lambda: bench_resources.main([])),
         ("braille", lambda: bench_braille.main(
@@ -95,11 +98,15 @@ def main(argv=None):
             "rows": r.get("rows", []),
             "throughput": r.get("throughput"),
         })
-    if "serve" in reports and reports["serve"].get("serve"):
-        _write_report(out_dir / "BENCH_serve.json", {
-            "benchmark": "batched_serving",
-            **reports["serve"]["serve"],
-        })
+    if ("serve" in reports and reports["serve"].get("serve")) or (
+        "streaming" in reports and reports["streaming"].get("streaming")
+    ):
+        payload = {"benchmark": "batched_serving"}
+        if "serve" in reports:
+            payload.update(reports["serve"].get("serve") or {})
+        if "streaming" in reports:
+            payload["streaming"] = reports["streaming"]["streaming"]
+        _write_report(out_dir / "BENCH_serve.json", payload)
 
     if failures:
         print(f"\nFAILED: {failures}")

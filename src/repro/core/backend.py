@@ -21,7 +21,19 @@ program):
 * :meth:`ExecutionBackend.eprop_update`    — reverse-filter + matmuls turning
   those traces into the batch-summed ``dw`` pytree;
 * :meth:`ExecutionBackend.train_tile`      — fused forward + update for one
-  training tile (what the END_B batch-commit controller mode calls).
+  training tile (what the END_B batch-commit controller mode calls);
+* :meth:`ExecutionBackend.step_sessions`   — session-stateful streaming
+  inference: the carry pytree ``(v, z, y, acc_y, n_spk)`` is an argument and
+  a result, so one ``(T, B)`` tick-tile advances B resident sessions exactly
+  where they left off (the :class:`repro.serve.session.SessionPool` hot
+  path).
+
+Runtime knobs (backend name, alpha override, quantized mode, VMEM budget,
+mesh/rules) are collected in one :class:`RuntimeConfig`; every constructor
+that builds or shares a backend (:class:`ExecutionBackend`,
+``OnlineLearner``, ``BatchedEngine``) accepts ``runtime=`` and resolution
+happens in exactly one place, :func:`as_backend`.  The individual kwargs
+remain as a deprecated passthrough.
 
 Backends:
 
@@ -105,6 +117,59 @@ def resolve_backend(backend: str) -> str:
     return backend
 
 
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Execution-runtime knobs, resolved in exactly one place
+    (:func:`as_backend`) and carried as one value.
+
+    ``ExecutionBackend``, ``OnlineLearner`` and ``BatchedEngine`` all accept
+    ``runtime=RuntimeConfig(...)`` instead of (or alongside) the historical
+    ``backend=``/``alpha=``/``quant=``/``vmem_budget=``/``mesh=`` kwargs; the
+    loose kwargs remain as a deprecated passthrough that fills fields the
+    config leaves unset.  ``None`` (and ``"auto"`` for :attr:`backend`) means
+    "unset": defaults come from the :class:`~repro.core.rsnn.RSNNConfig`
+    (``alpha``, ``quant``) or the module constants (``vmem_budget``).
+
+    A constructed :class:`ExecutionBackend` exposes its fully-resolved knobs
+    as ``backend.runtime`` — that is what sharing paths
+    (``BatchedEngine.from_learner``) consume and what
+    :meth:`ExecutionBackend.check_compatible` validates callers against.
+    """
+
+    backend: str = "auto"
+    alpha: Optional[float] = None
+    quant: Optional[QuantizedMode] = None
+    vmem_budget: Optional[int] = None
+    mesh: object = None
+    rules: Optional[shardlib.ShardingRules] = None
+
+
+def _resolve_runtime(
+    runtime: Optional[RuntimeConfig],
+    backend: str,
+    alpha: Optional[float],
+    quant: Optional[QuantizedMode],
+    vmem_budget: Optional[int],
+    mesh,
+    rules: Optional[shardlib.ShardingRules],
+) -> RuntimeConfig:
+    """Merge an explicit :class:`RuntimeConfig` with the deprecated loose
+    kwargs: the config wins wherever it sets a field; loose kwargs only fill
+    fields it left unset."""
+    if runtime is None:
+        return RuntimeConfig(backend=backend, alpha=alpha, quant=quant,
+                             vmem_budget=vmem_budget, mesh=mesh, rules=rules)
+    rt = runtime
+    if rt.backend == "auto" and backend != "auto":
+        rt = dataclasses.replace(rt, backend=backend)
+    for name, val in (("alpha", alpha), ("quant", quant),
+                      ("vmem_budget", vmem_budget), ("mesh", mesh),
+                      ("rules", rules)):
+        if getattr(rt, name) is None and val is not None:
+            rt = dataclasses.replace(rt, **{name: val})
+    return rt
+
+
 class ExecutionBackend:
     """One jit-cache-owning execution object for a single :class:`RSNNConfig`.
 
@@ -139,6 +204,11 @@ class ExecutionBackend:
         come back globally assembled.  Batches that don't divide the device
         count are zero-padded internally (inert rows).  ``rules`` defaults
         to :data:`repro.distributed.sharding.BASE_RULES`.
+    runtime:
+        A :class:`RuntimeConfig` bundling all of the above; fields it sets
+        win over the loose kwargs (which remain as a deprecated
+        passthrough).  The resolved knobs are re-exposed as
+        ``self.runtime``.
     """
 
     def __init__(
@@ -147,10 +217,15 @@ class ExecutionBackend:
         backend: str = "auto",
         alpha: Optional[float] = None,
         quant: Optional[QuantizedMode] = None,
-        vmem_budget: int = DEFAULT_VMEM_BUDGET,
+        vmem_budget: Optional[int] = None,
         mesh=None,
         rules: Optional[shardlib.ShardingRules] = None,
+        runtime: Optional[RuntimeConfig] = None,
     ):
+        rt = _resolve_runtime(runtime, backend, alpha, quant, vmem_budget,
+                              mesh, rules)
+        backend, alpha, quant = rt.backend, rt.alpha, rt.quant
+        vmem_budget, mesh, rules = rt.vmem_budget, rt.mesh, rt.rules
         self.cfg = cfg
         self.backend = resolve_backend(backend)
         if self.backend == "kernel":
@@ -178,7 +253,7 @@ class ExecutionBackend:
         # VMEM budget the batch-tiled kernel grids size their tile rows
         # against (max_forward_tile / max_fused_train_tile) — a trace-time
         # static decision; one jit cache entry per launch shape either way.
-        self.vmem_budget = int(vmem_budget)
+        self.vmem_budget = int(vmem_budget or DEFAULT_VMEM_BUDGET)
         # Data-parallel mesh: resolve the logical "batch" axis to mesh axes
         # via the sharding rules (the same table the production models use).
         self.mesh = mesh
@@ -195,6 +270,13 @@ class ExecutionBackend:
             if self._batch_axes
             else 1
         )
+        # canonical, fully-resolved runtime description — what sharing paths
+        # (BatchedEngine.from_learner) pass around and check_compatible
+        # validates callers against
+        self.runtime = RuntimeConfig(
+            backend=self.backend, alpha=self.alpha, quant=self.quant,
+            vmem_budget=self.vmem_budget, mesh=self.mesh, rules=self.rules,
+        )
         if cfg.eprop.mask_self_recurrence:
             self._mask = 1.0 - jnp.eye(cfg.n_hid, dtype=jnp.float32)
         else:
@@ -210,6 +292,37 @@ class ExecutionBackend:
             self._train_sharded if sharded else self._train_impl
         )
         self._jit_dynamics = jax.jit(self._dynamics_impl)
+        self._jit_step_sessions = jax.jit(
+            self._step_sessions_sharded if sharded else self._step_sessions_impl
+        )
+
+    # -------------------------------------------------------- compatibility
+
+    def check_compatible(self, rt: RuntimeConfig) -> None:
+        """Assert a caller's requested runtime knobs match this (shared)
+        backend.  ``None`` / ``"auto"`` fields mean "don't care" — the
+        caller inherits whatever this backend resolved.  This is the single
+        sharing-path validator (:func:`as_backend` calls it when handed an
+        existing instance)."""
+        if rt.backend != "auto":
+            assert resolve_backend(rt.backend) == self.backend, (
+                f"shared backend runs {self.backend!r}, caller asked for "
+                f"{rt.backend!r}"
+            )
+        assert rt.alpha is None or self.alpha == float(rt.alpha) or (
+            self.quant is not None
+            and abs(self.quant.alpha - float(rt.alpha)) < 1e-9
+        ), "shared backend baked a different alpha than the caller's params"
+        assert rt.quant is None or self.quant == rt.quant, (
+            "shared backend runs a different quantized mode than the caller's"
+        )
+        assert rt.mesh is None or self.mesh == rt.mesh, (
+            "shared backend was built over a different mesh than the caller's"
+        )
+        assert rt.vmem_budget is None or self.vmem_budget == int(rt.vmem_budget), (
+            "shared backend tiles against a different vmem_budget "
+            f"({self.vmem_budget}) than the caller's ({rt.vmem_budget})"
+        )
 
     # ------------------------------------------------------------- plumbing
 
@@ -553,40 +666,130 @@ class ExecutionBackend:
         self._note("dynamics", raster.shape)
         return self._jit_dynamics(weights, raster)
 
+    # -------------------------------------------------------- step sessions
+
+    _STATE_KEYS = ("v", "z", "y", "acc_y", "n_spk")
+
+    def init_session_state(self, n: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+        """Fresh carry rows for ``n`` sessions — the all-zeros reset state
+        every ReckOn sequence starts from (zero is exactly representable on
+        the quantized membrane grid, so the quantized path starts bit-true
+        too)."""
+        c = self.cfg
+        return {
+            "v": jnp.zeros((n, c.n_hid), dtype),
+            "z": jnp.zeros((n, c.n_hid), dtype),
+            "y": jnp.zeros((n, c.n_out), dtype),
+            "acc_y": jnp.zeros((n, c.n_out), dtype),
+            "n_spk": jnp.zeros((n, 1), dtype),
+        }
+
+    def _step_sessions_impl(self, weights, raster, live, valid, state):
+        ncfg, ecfg = self._ncfg, self.cfg.eprop
+        if self.backend == "kernel":
+            w_in, w_rec, w_out = self._datapath_weights(weights)
+            v, z, y, acc_y, n_spk = ops.rsnn_step_sessions(
+                raster, live, valid,
+                state["v"], state["z"], state["y"],
+                state["acc_y"], state["n_spk"],
+                w_in, w_rec, w_out,
+                alpha=self.alpha, kappa=ncfg.kappa, v_th=ncfg.v_th,
+                reset=ncfg.reset, quant=self.quant,
+                infer_window=ecfg.infer_window,
+                vmem_budget=self.vmem_budget,
+            )
+            return {"v": v, "z": z, "y": y, "acc_y": acc_y, "n_spk": n_spk}
+        params = self._merge(weights, raster.dtype)
+        return eprop.run_stream_inference(
+            params, raster, live, valid, state, ncfg, ecfg
+        )
+
+    def _step_sessions_sharded(self, weights, raster, live, valid, state):
+        """:meth:`_step_sessions_impl` sharded over the mesh's data axes —
+        each shard advances its slice of the session rows; no collectives
+        are needed because every output is per-session."""
+        ba = self._batch_axes
+        keys = self._STATE_KEYS
+        padded, B = self._pad_to_shards(
+            (raster, live, valid, *(state[k] for k in keys)),
+            (1, 1, 1, 0, 0, 0, 0, 0),
+        )
+        raster, live, valid = padded[:3]
+        state = dict(zip(keys, padded[3:]))
+
+        out = shard_map(
+            self._step_sessions_impl,
+            mesh=self.mesh,
+            axis_names=set(ba),
+            in_specs=(P(), P(None, ba, None), P(None, ba), P(None, ba),
+                      {k: P(ba) for k in keys}),
+            out_specs={k: P(ba) for k in keys},
+            check_vma=False,
+        )(weights, raster, live, valid, state)
+        if out["v"].shape[0] != B:
+            out = {k: a[:B] for k, a in out.items()}
+        return out
+
+    def step_sessions(
+        self,
+        weights: Dict[str, jax.Array],
+        raster: jax.Array,
+        live: jax.Array,
+        valid: jax.Array,
+        state: Dict[str, jax.Array],
+    ) -> Dict[str, jax.Array]:
+        """Advance ``B`` resident sessions through one ``(T, B)`` tick-tile.
+
+        The streaming-serving hot path: ``state`` is the carry pytree
+        ``{"v", "z", "y", "acc_y", "n_spk"}`` gathered from the session pool
+        (each ``(B, ·)``), and the returned pytree (same keys/shapes) is
+        scattered back — carry in / carry out, so chunking a stream into
+        tiles is invariant (bit-true in quantized mode).
+
+        ``live`` gates the *dynamics*: a tick with ``live == 0`` leaves that
+        session's carry untouched exactly (select, not decay), which is how
+        ragged per-session chunk lengths pack into one rectangular tile.
+        ``valid`` (⊆ live) gates readout accumulation only, mirroring the
+        TARGET_VALID window of the whole-sample path.  Kernel backend runs
+        the batch-tiled session kernel; scan backend the reference
+        ``lax.scan``; with a mesh, session rows shard over the data axes
+        (pure per-session outputs — no collectives).
+        """
+        self._note("step_sessions", raster.shape)
+        return self._jit_step_sessions(weights, raster, live, valid, state)
+
 
 BackendLike = Union[str, ExecutionBackend]
 
 
 def as_backend(
     cfg: RSNNConfig,
-    backend: BackendLike,
+    backend: BackendLike = "auto",
     alpha: Optional[float] = None,
     quant: Optional[QuantizedMode] = None,
     vmem_budget: Optional[int] = None,
     mesh=None,
+    runtime: Optional[RuntimeConfig] = None,
 ) -> ExecutionBackend:
-    """Coerce a backend name or an existing :class:`ExecutionBackend`.
+    """The single runtime-resolution point: coerce a backend name, a
+    :class:`RuntimeConfig`, or an existing :class:`ExecutionBackend` into a
+    constructed backend.
 
     Passing an existing instance is how a serving engine shares one jit
     cache (and therefore live weights without recompilation) with the
-    learner that trains through it.
+    learner that trains through it — the instance is validated against the
+    caller's requested knobs via
+    :meth:`ExecutionBackend.check_compatible` and returned as-is.  The
+    loose ``alpha``/``quant``/``vmem_budget``/``mesh`` kwargs are the
+    deprecated passthrough; new callers bundle them in ``runtime=``.
     """
+    if isinstance(backend, RuntimeConfig):
+        assert runtime is None, "runtime passed twice"
+        backend, runtime = backend.backend, backend
+    name = backend if isinstance(backend, str) else "auto"
+    rt = _resolve_runtime(runtime, name, alpha, quant, vmem_budget, mesh, None)
     if isinstance(backend, ExecutionBackend):
         assert backend.cfg == cfg, "shared backend built for a different config"
-        assert alpha is None or backend.alpha == float(alpha) or (
-            backend.quant is not None and abs(backend.quant.alpha - float(alpha)) < 1e-9
-        ), "shared backend baked a different alpha than the caller's params"
-        assert quant is None or backend.quant == quant, (
-            "shared backend runs a different quantized mode than the caller's"
-        )
-        assert mesh is None or backend.mesh == mesh, (
-            "shared backend was built over a different mesh than the caller's"
-        )
-        assert vmem_budget is None or backend.vmem_budget == vmem_budget, (
-            "shared backend tiles against a different vmem_budget "
-            f"({backend.vmem_budget}) than the caller's ({vmem_budget})"
-        )
+        backend.check_compatible(rt)
         return backend
-    return ExecutionBackend(cfg, backend, alpha=alpha, quant=quant,
-                            vmem_budget=vmem_budget or DEFAULT_VMEM_BUDGET,
-                            mesh=mesh)
+    return ExecutionBackend(cfg, runtime=rt)

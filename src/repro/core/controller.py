@@ -296,6 +296,7 @@ class OnlineLearner:
         key: jax.Array,
         backend: BackendLike = "auto",
         mesh=None,
+        runtime=None,
     ):
         self.cfg, self.ctrl = cfg, ctrl
         self.opt = EpropSGD(opt_cfg)
@@ -309,8 +310,11 @@ class OnlineLearner:
         self.key = jax.random.fold_in(key, 1)
         # mesh: data-parallel END_B — the backend shards the sample axis and
         # psums dw, so the commit matches the single-device walk exactly.
+        # runtime= (a core.backend.RuntimeConfig) is the bundled form of the
+        # backend/mesh/... knobs; resolution happens in as_backend either way.
         self.backend = as_backend(
-            cfg, backend, alpha=float(params["alpha"]), mesh=mesh
+            cfg, backend, alpha=float(params["alpha"]), mesh=mesh,
+            runtime=runtime,
         )
         train_builder = (
             make_batch_commit_train_fn

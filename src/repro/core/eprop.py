@@ -366,6 +366,70 @@ def run_sample_inference(
     }
 
 
+def run_stream_inference(
+    params: Dict[str, jax.Array],
+    raster: jax.Array,      # (T, B, N_in) — one tick-tile of B sessions
+    live: jax.Array,        # (T, B) dynamics mask: 0 freezes a session's state
+    valid: jax.Array,       # (T, B) TARGET_VALID readout-accumulation mask
+    state: Dict[str, jax.Array],   # {"v","z","y","acc_y","n_spk"} carries
+    ncfg: NeuronConfig,
+    ecfg: EpropConfig,
+) -> Dict[str, jax.Array]:
+    """Carry-in / carry-out inference over one streaming tick-tile.
+
+    The session-resident twin of :func:`run_sample_inference`: instead of
+    starting every sample from zero state, the LIF membranes ``v``, previous
+    spikes ``z``, LI readout ``y`` and the running readout accumulator
+    ``acc_y`` / spike counter ``n_spk`` are *inputs*, and their end-of-tile
+    values are returned — so an unbounded per-session AER stream can be fed
+    through fixed-shape ``(T, B)`` tiles chunk by chunk.
+
+    ``live`` gates the *dynamics*: on a tick where ``live == 0`` the
+    session's state is frozen exactly (``jnp.where`` select — no leak, no
+    integration), which is what makes ragged per-session chunk lengths
+    packable into one rectangular tile without perturbing slower sessions.
+    ``valid`` gates readout *accumulation* only (``valid ⊆ live`` by
+    construction in the host packer).  Chunking is carry-exact: feeding the
+    same ticks in any chunking yields bit-identical final state on this
+    backend (asserted in ``tests/test_streaming.py``, bit-true against the
+    integer golden reference in quantized mode).
+    """
+    T, B, n_in = raster.shape
+    H = params["w_rec"].shape[0]
+    dtype = params["w_in"].dtype
+    alpha = jnp.broadcast_to(jnp.asarray(params["alpha"], dtype), (H,))
+    kappa = jnp.asarray(ncfg.kappa, dtype)
+    w_in_d, w_rec_d, w_out_d, _, _, dot = _datapath(params, ncfg, ecfg)
+
+    in_cur = _input_projection(raster, w_in_d, dot)
+    acc_all = ecfg.infer_window == "all"
+
+    def tick(carry, inp):
+        v, z, y, acc_y, n_spk = carry
+        in_cur_t, live_t, valid_t = inp
+        current = in_cur_t + dot(z, w_rec_d)
+        v_new, z_new, _ = lif_step(v, current, alpha, ncfg)
+        y_new = li_step(y, dot(z_new, w_out_d), kappa, ncfg)
+        keep = live_t[:, None] > 0
+        v = jnp.where(keep, v_new, v)
+        z = jnp.where(keep, z_new, z)
+        y = jnp.where(keep, y_new, y)
+        w_acc = (live_t if acc_all else valid_t)[:, None]
+        acc_y = acc_y + y_new * w_acc
+        n_spk = n_spk + (z_new * valid_t[:, None]).sum(axis=1, keepdims=True)
+        return (v, z, y, acc_y, n_spk), None
+
+    carry0 = (
+        jnp.asarray(state["v"], dtype), jnp.asarray(state["z"], dtype),
+        jnp.asarray(state["y"], dtype), jnp.asarray(state["acc_y"], dtype),
+        jnp.asarray(state["n_spk"], dtype),
+    )
+    (v, z, y, acc_y, n_spk), _ = jax.lax.scan(
+        tick, carry0, (in_cur, live, valid)
+    )
+    return {"v": v, "z": z, "y": y, "acc_y": acc_y, "n_spk": n_spk}
+
+
 def forward_dynamics(
     params: Dict[str, jax.Array],
     raster: jax.Array,      # (T, B, N_in)

@@ -83,6 +83,44 @@ def rsnn_infer(
 
 @partial(
     jax.jit,
+    static_argnames=("alpha", "kappa", "v_th", "reset", "quant", "infer_window",
+                     "vmem_budget", "batch_tile"),
+)
+def rsnn_step_sessions(
+    raster: jax.Array,
+    live: jax.Array,
+    valid: jax.Array,
+    v0: jax.Array,
+    z0: jax.Array,
+    y0: jax.Array,
+    acc0: jax.Array,
+    nspk0: jax.Array,
+    w_in: jax.Array,
+    w_rec: jax.Array,
+    w_out: jax.Array,
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float = 1.0,
+    reset: str = "sub",
+    quant: Optional[QuantizedMode] = None,
+    infer_window: str = "valid",
+    vmem_budget: int = _rsnn.DEFAULT_VMEM_BUDGET,
+    batch_tile: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Session-stateful inference tile (streaming serving): carries are
+    arguments and results, so the pool gather → step → scatter round-trip
+    is chunk-invariant (bit-true in quantized mode)."""
+    return _rsnn.rsnn_step_sessions(
+        raster, live, valid, v0, z0, y0, acc0, nspk0, w_in, w_rec, w_out,
+        alpha=alpha, kappa=kappa, v_th=v_th, reset=reset, quant=quant,
+        infer_window=infer_window, vmem_budget=vmem_budget,
+        batch_tile=batch_tile, interpret=_interpret(),
+    )
+
+
+@partial(
+    jax.jit,
     static_argnames=(
         "alpha", "kappa", "v_th", "reset", "boxcar_width", "quant",
         "error", "target_amplitude", "infer_window", "vmem_budget",

@@ -130,6 +130,15 @@ _CHIP_MAX_DIMS = (256, 256, 16)
 KERNEL_SAMPLE_CAP = 1 << (max_batch_for_dims(*_CHIP_MAX_DIMS).bit_length() - 1)
 
 
+def session_state_bytes(n_hid: int, n_out: int) -> int:
+    """Device-pool bytes one resident session's carry state occupies
+    (f32 rows of ``v, z (H)``, ``y, acc_y (O)`` and ``n_spk (1)``) — the
+    capacity unit of the streaming serving runtime.  ``S_cap``-sizing
+    (:func:`repro.serve.batching.max_sessions_for`) and the pool's own
+    allocation both derive from this helper."""
+    return _F32 * (2 * n_hid + 2 * n_out + 1)
+
+
 def fused_train_bytes(T: int, B: int, n_in: int, n_hid: int, n_out: int) -> int:
     """VMEM bytes the fused train kernel
     (:func:`repro.kernels.eprop_update.rsnn_train`) needs for one ``(T, B)``
@@ -581,3 +590,180 @@ def rsnn_infer(
         interpret=interpret,
     )(raster, valid, w_in, w_rec, w_out)
     return acc_y[:B], n_spk[:B]
+
+
+# ---------------------------------------------------------------------------
+# session-stateful inference (step_sessions op) — carry in / carry out
+# ---------------------------------------------------------------------------
+
+
+def _session_kernel(
+    raster_ref,   # (1, B, N_in)
+    live_ref,     # (1, B) — dynamics mask (0 freezes the session this tick)
+    valid_ref,    # (1, B) — readout-accumulation mask
+    v0_ref,       # (B, H)  initial carries gathered from the session pool
+    z0_ref,       # (B, H)
+    y0_ref,       # (B, O)
+    acc0_ref,     # (B, O)
+    nspk0_ref,    # (B, 1)
+    w_in_ref,     # (N_in, H)
+    w_rec_ref,    # (H, H)
+    w_out_ref,    # (H, O)
+    v_out_ref,    # (B, H)  final carries, scattered back to the pool
+    z_out_ref,    # (B, H)
+    y_out_ref,    # (B, O)
+    acc_out_ref,  # (B, O)
+    nspk_out_ref, # (B, 1)
+    v_scr,        # VMEM (B, H)
+    z_scr,        # VMEM (B, H)
+    y_scr,        # VMEM (B, O)
+    acc_scr,      # VMEM (B, O)
+    nspk_scr,     # VMEM (B, 1)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    reset_sub: bool,
+    quant: Optional[QuantizedMode],
+    infer_all: bool,
+    T: int,
+):
+    t = pl.program_id(1)   # tick within the current batch tile
+
+    # unlike the whole-sample kernels, a batch tile starts from the *pool*
+    # state, not zeros — load the gathered carries at its first tick
+    @pl.when(t == 0)
+    def _load():
+        v_scr[...] = v0_ref[...]
+        z_scr[...] = z0_ref[...]
+        y_scr[...] = y0_ref[...]
+        acc_scr[...] = acc0_ref[...]
+        nspk_scr[...] = nspk0_ref[...]
+
+    x_t = raster_ref[0]
+    live_t = live_ref[0][:, None]              # (B, 1)
+    valid_t = valid_ref[0][:, None]
+
+    v_new, z_new, y_new, _ = tick_transition(
+        x_t, v_scr[...], z_scr[...], y_scr[...],
+        w_in_ref[...], w_rec_ref[...], w_out_ref[...],
+        alpha=alpha, kappa=kappa, v_th=v_th, reset_sub=reset_sub,
+        boxcar_width=0.5, quant=quant,
+    )
+    # live gates the dynamics: a dead tick leaves the carry untouched exactly
+    # (select, not multiply — no leak is applied), so ragged per-session
+    # chunk lengths pack into one rectangular tile without perturbing the
+    # shorter sessions.
+    keep = live_t > 0
+    v_scr[...] = jnp.where(keep, v_new, v_scr[...])
+    z_scr[...] = jnp.where(keep, z_new, z_scr[...])
+    y_scr[...] = jnp.where(keep, y_new, y_scr[...])
+
+    w_acc = live_t if infer_all else valid_t
+    acc_scr[...] += y_new * w_acc
+    nspk_scr[...] += (z_new * valid_t).sum(axis=1, keepdims=True)
+
+    @pl.when(t == T - 1)
+    def _flush():
+        v_out_ref[...] = v_scr[...]
+        z_out_ref[...] = z_scr[...]
+        y_out_ref[...] = y_scr[...]
+        acc_out_ref[...] = acc_scr[...]
+        nspk_out_ref[...] = nspk_scr[...]
+
+
+def rsnn_step_sessions(
+    raster: jax.Array,   # (T, B, N_in) f32 — one tick-tile of B sessions
+    live: jax.Array,     # (T, B) f32 dynamics mask
+    valid: jax.Array,    # (T, B) f32 TARGET_VALID mask
+    v0: jax.Array,       # (B, H) carried post-reset membrane
+    z0: jax.Array,       # (B, H) carried previous-tick spikes
+    y0: jax.Array,       # (B, O) carried LI readout membrane
+    acc0: jax.Array,     # (B, O) carried readout accumulator
+    nspk0: jax.Array,    # (B, 1) carried valid-masked spike count
+    w_in: jax.Array,     # (N_in, H)
+    w_rec: jax.Array,    # (H, H) — pre-masked
+    w_out: jax.Array,    # (H, O)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float = 1.0,
+    reset: str = "sub",
+    quant: Optional[QuantizedMode] = None,
+    infer_window: str = "valid",
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    batch_tile: Optional[int] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Session-stateful inference over one ``(T, B)`` tick-tile — the
+    streaming-serving hot path (carry in / carry out).
+
+    A variant of :func:`rsnn_infer` whose carries are *arguments*: the tile
+    starts from the gathered per-session state rows and returns the final
+    ``(v, z, y, acc_y, n_spk)`` to be scattered back into the device-resident
+    session pool (:class:`repro.serve.session.SessionPool`).  Batch-tiled as
+    ``grid = (ceil(B / Bt), T)`` like every other kernel here; no per-tick
+    HBM streams.  In quantized mode every carry is an exact integer on the
+    12-bit membrane grid carried in f32, so gather → step → scatter is
+    bit-true and chunk-invariant against the golden reference.
+    """
+    T, B, n_in = raster.shape
+    H = w_rec.shape[0]
+    O = w_out.shape[1]
+    dt = raster.dtype
+    if quant is not None:
+        alpha, kappa, v_th = quant.alpha, quant.kappa, float(quant.threshold)
+    bt, nb, b_pad = _tile_batch(
+        B, batch_tile or max_forward_tile(n_in, H, O, vmem_budget)
+    )
+    raster = _pad_batch_axis(raster, 1, b_pad)
+    live = _pad_batch_axis(live, 1, b_pad)
+    valid = _pad_batch_axis(valid, 1, b_pad)
+    carries = [
+        _pad_batch_axis(c, 0, b_pad) for c in (v0, z0, y0, acc0, nspk0)
+    ]
+
+    kern = functools.partial(
+        _session_kernel,
+        alpha=float(alpha),
+        kappa=float(kappa),
+        v_th=float(v_th),
+        reset_sub=(reset == "sub"),
+        quant=quant,
+        infer_all=(infer_window == "all"),
+        T=T,
+    )
+    full = lambda shape: pl.BlockSpec(shape, lambda b, t: tuple(0 for _ in shape))
+    row = lambda cols: pl.BlockSpec((bt, cols), lambda b, t: (b, 0))
+
+    outs = pl.pallas_call(
+        kern,
+        grid=(nb, T),
+        in_specs=[
+            pl.BlockSpec((1, bt, n_in), lambda b, t: (t, b, 0)),
+            pl.BlockSpec((1, bt), lambda b, t: (t, b)),
+            pl.BlockSpec((1, bt), lambda b, t: (t, b)),
+            row(H), row(H), row(O), row(O), row(1),
+            full((n_in, H)),
+            full((H, H)),
+            full((H, O)),
+        ],
+        out_specs=[row(H), row(H), row(O), row(O), row(1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, H), dt),
+            jax.ShapeDtypeStruct((b_pad, H), dt),
+            jax.ShapeDtypeStruct((b_pad, O), dt),
+            jax.ShapeDtypeStruct((b_pad, O), dt),
+            jax.ShapeDtypeStruct((b_pad, 1), dt),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt, H), jnp.float32),
+            pltpu.VMEM((bt, H), jnp.float32),
+            pltpu.VMEM((bt, O), jnp.float32),
+            pltpu.VMEM((bt, O), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(raster, live, valid, *carries, w_in, w_rec, w_out)
+    v, z, y, acc_y, n_spk = (o[:B] for o in outs)
+    return v, z, y, acc_y, n_spk

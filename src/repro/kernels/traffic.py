@@ -183,6 +183,29 @@ def infer_fused_tiled_bytes(
     return _F32 * (reads + writes)
 
 
+def stream_step_tiled_bytes(
+    T: int,
+    B: int,
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    batch_tile: Optional[int] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> int:
+    """Batch-tiled session-step launch (``rsnn_step_sessions``): the
+    inference-fused streams plus one extra ``live`` mask stream and the
+    carry round-trip — ``(2H + 2O + 1)`` state elements per session read at
+    tile start and written back at tile end (the gather/scatter against the
+    device-resident session pool)."""
+    bt = batch_tile or max_forward_tile(n_in, n_hid, n_out, vmem_budget)
+    bt = max(1, min(bt, B))
+    bp = _cdiv(B, bt) * bt
+    state = bp * (2 * n_hid + 2 * n_out + 1)
+    reads = 2 * T * bp + T * bp * n_in + state + _weights(n_in, n_hid, n_out)
+    writes = state
+    return _F32 * (reads + writes)
+
+
 def op_table(
     T: int,
     B: int,

@@ -1,23 +1,74 @@
-"""Batched AER serving runtime over the fused Pallas RSNN kernel.
+"""Session-first AER serving runtime over the shared execution backend.
 
-Turns the per-sample controller loop (:mod:`repro.core.controller`) into a
-throughput-oriented inference service:
+The serving model is the **session**: an unbounded per-user AER event
+stream with persistent recurrent state — the paper's neuromorphic edge
+scenario.  ``BatchedEngine.open_session()`` hands out a
+:class:`~repro.serve.engine.SessionHandle` (``feed`` / ``poll`` /
+``result`` / ``close``); the engine continuously batches whichever sessions
+have pending ticks into fixed-shape tick-tiles, with every session's carry
+state resident in a device-side :class:`~repro.serve.session.SessionPool`
+(LRU + idle-timeout eviction, bit-exact offload/readmit).  The historical
+whole-sample entry points (``submit()`` / ``serve()``) remain supported as
+a thin open-feed-close wrapper over the same machinery.
 
-* :mod:`repro.serve.batching`  — ragged-stream padding/masking + VMEM sizing;
-* :mod:`repro.serve.scheduler` — request queue, tick-count bucketing;
-* :mod:`repro.serve.engine`    — jit-cached batched forward, stats.
+* :mod:`repro.serve.session`   — device-resident state pool, session records;
+* :mod:`repro.serve.batching`  — ragged-stream decode/padding + capacity math;
+* :mod:`repro.serve.scheduler` — whole-sample bucketing + continuous packing;
+* :mod:`repro.serve.engine`    — the engine, session handles, stats.
 
-See ``benchmarks/bench_serve.py`` for the throughput comparison against the
-sequential controller loop and ``examples/serve_braille.py`` for an
-end-to-end train-then-serve demo.
+See ``docs/serving.md`` for the session lifecycle and the migration guide
+from the whole-sample API, ``benchmarks/bench_serve.py --streaming`` for
+the sustained-throughput gate, and ``examples/streaming_sessions.py`` /
+``examples/serve_braille.py`` for end-to-end demos.
+
+This package re-exports exactly the supported public surface (``__all__``
+below); everything else — host decode internals, pending-tile records,
+pool plumbing — is implementation detail reachable through the submodules.
 """
 
 from repro.serve.batching import (
+    DEFAULT_SESSION_STATE_BUDGET,
     DEFAULT_VMEM_BUDGET,
     KERNEL_SAMPLE_CAP,
-    decode_events_host,
     max_batch_for,
+    max_sessions_for,
     request_ticks,
 )
-from repro.serve.engine import BatchedEngine, ServeResult, ServeStats
-from repro.serve.scheduler import BatchTile, BucketingScheduler, ServeRequest
+from repro.serve.engine import (
+    BatchedEngine,
+    ServeResult,
+    ServeStats,
+    SessionHandle,
+    StreamStats,
+)
+from repro.serve.scheduler import (
+    BatchTile,
+    BucketingScheduler,
+    ServeRequest,
+    StreamPacker,
+)
+from repro.serve.session import SessionPool, SessionSnapshot
+
+__all__ = [
+    # engine + handles
+    "BatchedEngine",
+    "SessionHandle",
+    "ServeResult",
+    "ServeStats",
+    "StreamStats",
+    "SessionSnapshot",
+    # schedulers
+    "BucketingScheduler",
+    "StreamPacker",
+    "BatchTile",
+    "ServeRequest",
+    # state pool
+    "SessionPool",
+    # sizing / capacity math
+    "max_batch_for",
+    "max_sessions_for",
+    "request_ticks",
+    "DEFAULT_VMEM_BUDGET",
+    "DEFAULT_SESSION_STATE_BUDGET",
+    "KERNEL_SAMPLE_CAP",
+]

@@ -21,7 +21,7 @@ sizing derive from); this module only adapts it to :class:`RSNNConfig`.
 
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,9 +33,18 @@ from repro.kernels.rsnn_step import (  # noqa: F401
     DEFAULT_VMEM_BUDGET,
     KERNEL_SAMPLE_CAP,
     max_batch_for_dims,
+    session_state_bytes,
     state_bytes_per_sample,
     weights_bytes,
 )
+
+# Default device-byte budget for the streaming session pool (HBM-resident —
+# independent of the VMEM tile budget, deliberately the same magnitude).
+# 4 MiB holds ~12k Braille-sized sessions (332 B each); see docs/serving.md
+# for the capacity math.  Scale it up explicitly for larger fleets — the
+# pool is the capacity unit, so this is the one knob that bounds concurrent
+# resident sessions.
+DEFAULT_SESSION_STATE_BUDGET = 4 * 1024 * 1024
 
 
 def round_up(n: int, multiple: int) -> int:
@@ -66,6 +75,19 @@ def max_batch_for(
         cfg.n_in, cfg.n_hid, cfg.n_out, vmem_budget, cap=KERNEL_SAMPLE_CAP
     )
     return per_device * max(1, num_devices)
+
+
+def max_sessions_for(
+    cfg: RSNNConfig,
+    state_budget: int = DEFAULT_SESSION_STATE_BUDGET,
+) -> int:
+    """Streaming capacity ``S_cap``: how many resident sessions a device
+    byte budget admits.  One session's carry ``(v, z, y, acc_y, n_spk)``
+    costs :func:`repro.kernels.rsnn_step.session_state_bytes` =
+    ``4·(2H + 2O + 1)`` bytes, independent of stream length — the pool, not
+    the batch, is the capacity unit of streaming serving."""
+    per = session_state_bytes(cfg.n_hid, cfg.n_out)
+    return max(1, int(state_budget) // per)
 
 
 def request_ticks(events: np.ndarray) -> int:
@@ -140,6 +162,61 @@ def decode_events_host(
         & (t_range <= end_tick[None, :])
     ).astype(np.float32)
     return raster, valid, labels
+
+
+def decode_session_chunks(
+    chunks: Sequence,
+    n_in: int,
+    num_ticks: int,
+    label_delay: int = 0,
+    b_pad: Optional[int] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side decode of one streaming tick-tile → ``(raster, live,
+    valid)``, each lane one session's next stream ticks.
+
+    ``chunks`` are :class:`repro.serve.session.SessionChunkRef` slices in
+    absolute stream coordinates; lane ``i``'s tile tick ``t`` is stream tick
+    ``chunks[i].base + t``.  Two masks come back:
+
+    * ``live`` — dynamics mask: 1 for ``t < n_live``.  A dead tick freezes
+      the session's carry *exactly* (the kernel selects, it does not decay),
+      which is how ragged per-session chunk lengths pack into one
+      rectangular tile; padded lanes (``b_pad > len(chunks)``) are dead for
+      the whole tile.
+    * ``valid`` — readout-accumulation mask (⊆ live), the streaming
+      continuation of :func:`decode_events_host`'s TARGET_VALID window:
+      ``label_tick + label_delay ≤ t_abs``, and ``t_abs ≤ end_tick`` once
+      END has been seen.  Because feeds are tick-ordered, the incremental
+      mask equals the whole-sample one.
+    """
+    B = len(chunks)
+    b_pad = B if b_pad is None else b_pad
+    raster = np.zeros((num_ticks, b_pad, n_in), np.float32)
+    if B:
+        bufs_t = [c.sp_tick - c.base for c in chunks]
+        t = np.concatenate(bufs_t) if bufs_t else np.zeros(0, np.int64)
+        a = np.concatenate([c.sp_addr for c in chunks]) if B else t
+        b_idx = np.repeat(
+            np.arange(B, dtype=np.int64), [len(x) for x in bufs_t]
+        )
+        ok = (t >= 0) & (t < num_ticks) & (a < n_in)
+        raster[t[ok], b_idx[ok], a[ok]] = 1.0
+
+    n_live = np.zeros((b_pad,), np.int64)
+    lab0 = np.zeros((b_pad,), np.int64)
+    end_rel = np.full((b_pad,), -1, np.int64)
+    for i, c in enumerate(chunks):
+        n_live[i] = c.n_live
+        lab0[i] = c.label_tick + label_delay - c.base
+        end_rel[i] = (
+            num_ticks - 1 if c.end_tick is None else c.end_tick - c.base
+        )
+    t_range = np.arange(num_ticks)[:, None]
+    live = (t_range < n_live[None, :]).astype(np.float32)
+    valid = (
+        (t_range >= lab0[None, :]) & (t_range <= end_rel[None, :])
+    ).astype(np.float32) * live
+    return raster, live, valid
 
 
 def pad_batch(

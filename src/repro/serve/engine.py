@@ -1,13 +1,26 @@
-"""Batched inference engine over the shared execution backend.
+"""Session-first serving engine over the shared execution backend.
 
 This is the serving half of the paper's host↔accelerator split: where
 :class:`repro.core.controller.OnlineLearner` drives ReckOn sample-by-sample
 or batch-by-batch through an
 :class:`~repro.core.backend.ExecutionBackend`, the engine drives the *same*
-backend object as rectangular inference tiles — many AER streams decoded
-host-side (:func:`repro.serve.batching.decode_events_host`), bucketed by
-tick length (:class:`repro.serve.scheduler.BucketingScheduler`), and pushed
-through one compiled forward per ``(T, B)`` tile shape.
+backend object for unbounded AER event *streams* — the paper's neuromorphic
+edge scenario, where per-user traffic never arrives as whole padded
+samples.
+
+The primary model is the **session**: ``engine.open_session()`` returns a
+:class:`SessionHandle`; ``handle.feed(events)`` appends AER words to the
+stream; the engine's pump packs whichever sessions have processable ticks
+into fixed-shape tick-tiles (:class:`repro.serve.scheduler.StreamPacker` —
+continuous batching), gathers their device-resident carry state from the
+:class:`repro.serve.session.SessionPool`, launches the backend's
+``step_sessions`` op (carry in / carry out) and scatters updated state
+back; ``handle.poll()`` returns incremental readout snapshots and
+``handle.result()`` the final classification.  The historical whole-sample
+path (``submit()`` / ``serve()`` over complete event buffers, bucketed by
+:class:`repro.serve.scheduler.BucketingScheduler`) is retained as a thin
+open-feed-close wrapper over the same session machinery — existing callers
+run unmodified, with identical results.
 
 Backend dispatch (``"kernel"`` = fused Pallas kernels, ``"scan"`` = the
 reference ``lax.scan``, ``"auto"`` = kernel on TPU / scan elsewhere) lives in
@@ -39,11 +52,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backend import BackendLike, as_backend
+from repro.core.backend import BackendLike, RuntimeConfig, as_backend
 from repro.core.rsnn import RSNNConfig
 from repro.kernels import traffic
 from repro.serve import batching
-from repro.serve.scheduler import BatchTile, BucketingScheduler
+from repro.serve.scheduler import BatchTile, BucketingScheduler, StreamPacker
+from repro.serve.session import SessionPool, SessionSnapshot, _Session
 
 
 @dataclasses.dataclass
@@ -117,6 +131,87 @@ class ServeStats:
         )
 
 
+@dataclasses.dataclass
+class _PendingStreamTile:
+    """A launched-but-unharvested streaming tick-tile: the device may still
+    be computing while the host packs the next tile."""
+
+    acc_y: jax.Array                 # (b_pad, n_out) post-chunk accumulators
+    lanes: List[Tuple["_Session", int, int]]   # (session, ticks, events) at launch
+    t_launch: float
+    num_ticks: int
+
+    def ready(self) -> bool:
+        is_ready = getattr(self.acc_y, "is_ready", None)
+        return bool(is_ready()) if callable(is_ready) else False
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Streaming-serving throughput/latency accounting (one pump window)."""
+
+    sessions: int                 # sessions that advanced in the window
+    tiles: int                    # tick-tiles launched
+    events: int                   # spike events consumed
+    ticks: int                    # live session-ticks advanced (Σ chunk lengths)
+    wall_s: float
+    events_per_sec: float
+    ticks_per_sec: float
+    p50_tile_latency_s: float     # launch → harvest per tick-tile
+    p99_tile_latency_s: float
+    mean_lanes: float             # live lanes per tile (packing efficiency)
+    evictions: int
+    readmissions: int
+    compiled_shapes: int          # distinct step_sessions (T, B) programs
+    hbm_bytes_streamed: int = 0
+
+
+class SessionHandle:
+    """The public face of one open stream (from ``engine.open_session()``).
+
+    ``feed`` appends AER words (ticks non-decreasing across feeds — the
+    stream contract); the engine processes them when its pump next packs
+    this session into a tick-tile (``engine.pump()``, or implicitly via
+    :meth:`result`).  ``poll`` is non-blocking and returns the latest
+    harvested :class:`~repro.serve.session.SessionSnapshot` (or ``None``);
+    ``result`` closes the stream, drains every pending tick and returns the
+    final snapshot; ``close`` abandons the stream and frees its pool slot.
+    """
+
+    def __init__(self, engine: "BatchedEngine", sess: _Session):
+        self._engine = engine
+        self._sess = sess
+
+    @property
+    def sid(self) -> int:
+        return self._sess.sid
+
+    @property
+    def closed(self) -> bool:
+        return self._sess.closed
+
+    def feed(self, events: np.ndarray) -> int:
+        """Append one AER word buffer; returns spike events admitted.  Does
+        not launch work — call ``engine.pump()`` (or :meth:`result`) to
+        advance."""
+        return self._engine._feed(self._sess, events)
+
+    def poll(self) -> Optional[SessionSnapshot]:
+        """Latest incremental readout snapshot, non-blocking."""
+        self._engine._harvest_stream(block=False)
+        return self._sess.snapshot
+
+    def result(self) -> SessionSnapshot:
+        """Close the stream, process every fed tick, return the final
+        classification (synchronises)."""
+        return self._engine._finish_session(self._sess)
+
+    def close(self) -> None:
+        """Abandon the stream: unprocessed events are dropped and the pool
+        slot is freed.  Use :meth:`result` to finish instead."""
+        self._engine._abandon_session(self._sess)
+
+
 class BatchedEngine:
     """Batched AER classification service for one :class:`RSNNConfig` network.
 
@@ -140,6 +235,23 @@ class BatchedEngine:
         Data-parallel serving: a mesh whose data axes the backend shards
         every inference tile's sample axis over (weights replicated) —
         admission scales with the device count.
+    max_sessions:
+        Streaming capacity ``S_cap`` — resident sessions the device pool
+        holds; defaults to :func:`repro.serve.batching.max_sessions_for`'s
+        byte-budget sizing.  Sessions beyond it are LRU-evicted to host
+        memory (bit-exact) and readmitted on their next packed tile.
+    idle_timeout:
+        Seconds of inactivity after which a resident session is offloaded
+        (``None`` disables the sweep).
+    tick_tile:
+        Fixed tick length of streaming tiles (latency-bounded mode).  When
+        ``None``, each packed tile drains everything its sessions have
+        pending (throughput mode — also what the whole-sample ``serve()``
+        wrapper uses).
+    runtime:
+        A :class:`~repro.core.backend.RuntimeConfig` bundling the
+        backend/quant/vmem_budget/mesh knobs (the loose kwargs remain as a
+        deprecated passthrough; resolution happens in ``as_backend``).
     """
 
     def __init__(
@@ -154,11 +266,16 @@ class BatchedEngine:
         mesh=None,
         max_inflight_tiles: int = 8,
         clock: Callable[[], float] = time.monotonic,
+        max_sessions: Optional[int] = None,
+        idle_timeout: Optional[float] = None,
+        tick_tile: Optional[int] = None,
+        runtime: Optional[RuntimeConfig] = None,
     ):
         self.cfg = cfg
         alpha = float(np.asarray(params.get("alpha", cfg.neuron.alpha)))
         self.engine = as_backend(
-            cfg, backend, alpha=alpha, vmem_budget=vmem_budget, mesh=mesh
+            cfg, backend, alpha=alpha, vmem_budget=vmem_budget, mesh=mesh,
+            runtime=runtime,
         )
         self.backend = self.engine.backend
         # Size admission and traffic accounting from the budget the backend
@@ -189,6 +306,28 @@ class BatchedEngine:
         self.scheduler = BucketingScheduler(
             self.max_batch, tick_granularity, clock=clock
         )
+        # ---- streaming session machinery -------------------------------
+        # Pool capacity must seat one full tile of sessions at once; the
+        # trash row on top keeps gather/scatter shapes fixed.
+        capacity = max(
+            max_sessions or batching.max_sessions_for(cfg), self.max_batch
+        )
+        self.pool = SessionPool(
+            self.engine, capacity, idle_timeout=idle_timeout, clock=clock
+        )
+        self.packer = StreamPacker(
+            self.max_batch, tick_tile=tick_tile,
+            tick_granularity=tick_granularity,
+        )
+        self._sessions: Dict[int, _Session] = {}
+        self._next_sid = 0
+        self._zero_states: Dict[int, Dict[str, jax.Array]] = {}
+        self._stream_pending: List[_PendingStreamTile] = []
+        self._tile_lat: List[float] = []
+        self._stream_tiles = 0
+        self._stream_events = 0
+        self._stream_ticks = 0
+        self._stream_lanes = 0
 
     @property
     def quantized(self) -> bool:
@@ -297,18 +436,251 @@ class BatchedEngine:
     def submit(self, events: np.ndarray, meta: Optional[dict] = None) -> int:
         return self.scheduler.submit(events, meta)
 
+    # ---------------------------------------------------- session streaming
+
+    def open_session(self, meta: Optional[dict] = None) -> SessionHandle:
+        """Open one AER event stream with persistent recurrent state.
+
+        The session's carry ``(v, z, y, acc_y, n_spk)`` lives in the
+        device-resident :class:`~repro.serve.session.SessionPool` while hot
+        (LRU-evicted to host bit-exactly under capacity pressure) — feed
+        events in arbitrary increments; chunking never changes the result.
+        """
+        sess = _Session(self._next_sid, self._clock(), meta)
+        sess.gate_label = self.cfg.eprop.infer_window == "valid"
+        self._next_sid += 1
+        self._sessions[sess.sid] = sess
+        return SessionHandle(self, sess)
+
+    def _feed(self, sess: _Session, events: np.ndarray) -> int:
+        n = sess.feed(events)
+        if sess.processable() > 0:
+            self.packer.enqueue(sess)
+        return n
+
+    def _launch_chunks(self, sessions, chunks, num_ticks: int):
+        """The shared streaming launch: seat sessions in the pool (one
+        batched admission scatter), decode their chunks into one rectangular
+        tick-tile, gather carries → ``step_sessions`` → scatter carries.
+        Returns the backend's output state (device values, not synced)."""
+        b_pad = batching.padded_batch_size(len(sessions), self.max_batch)
+        raster, live, valid = batching.decode_session_chunks(
+            chunks, self.cfg.n_in, num_ticks, self.cfg.label_delay,
+            b_pad=b_pad,
+        )
+        slots, admit = self.pool.place(sessions)
+        if admit is not None:
+            self.pool.admit(admit)
+        idx = self.pool.padded_slots(slots, b_pad)
+        state = self.pool.gather(idx)
+        out = self.engine.step_sessions(
+            self._weights, jnp.asarray(raster), jnp.asarray(live),
+            jnp.asarray(valid), state,
+        )
+        self.pool.scatter(idx, out)
+        if self.backend == "kernel":
+            ndev = self.engine.num_devices
+            shard_b = -(-b_pad // ndev)
+            self._bytes_streamed += ndev * traffic.stream_step_tiled_bytes(
+                num_ticks, shard_b, self.cfg.n_in, self.cfg.n_hid,
+                self.cfg.n_out, batch_tile=self._tile_rows,
+            )
+        self._stream_tiles += 1
+        self._stream_lanes += len(sessions)
+        self._stream_ticks += sum(c.n_live for c in chunks)
+        self._stream_events += sum(len(c.sp_tick) for c in chunks)
+        return out
+
+    def _pump_once(self) -> bool:
+        """Pack and launch one streaming tick-tile; False when no session
+        has processable ticks."""
+        nxt = self.packer.next_tile()
+        if nxt is None:
+            return False
+        sessions, num_ticks = nxt
+        chunks = [s.take_chunk(num_ticks) for s in sessions]
+        out = self._launch_chunks(sessions, chunks, num_ticks)
+        self._stream_pending.append(_PendingStreamTile(
+            acc_y=out["acc_y"],
+            lanes=[(s, s.cursor, s.n_events) for s in sessions],
+            t_launch=self._clock(),
+            num_ticks=num_ticks,
+        ))
+        for s in sessions:
+            if s.processable() > 0:
+                self.packer.enqueue(s)
+        self._harvest_stream(block=False)
+        while len(self._stream_pending) > self.max_inflight_tiles:
+            self._harvest_one()   # backpressure: block on the oldest tile
+        return True
+
+    def pump(self, drain: bool = False) -> int:
+        """Advance every open session through its pending ticks (continuous
+        batching: tiles launch asynchronously, harvested opportunistically).
+        ``drain`` additionally blocks until all launched tiles are
+        harvested.  Returns the number of tiles launched."""
+        n = 0
+        while self._pump_once():
+            n += 1
+        self.pool.sweep()
+        if drain:
+            self._harvest_stream(block=True)
+        return n
+
+    def _harvest_one(self) -> None:
+        p = self._stream_pending.pop(0)
+        acc = np.asarray(p.acc_y)   # synchronises on this tile
+        self._tile_lat.append(self._clock() - p.t_launch)
+        for i, (sess, ticks, events) in enumerate(p.lanes):
+            sess.snapshot = SessionSnapshot(
+                sid=sess.sid, pred=int(np.argmax(acc[i])), logits=acc[i],
+                label=sess.label, ticks=ticks, events=events,
+            )
+
+    def _harvest_stream(self, block: bool) -> None:
+        while self._stream_pending and (block or self._stream_pending[0].ready()):
+            self._harvest_one()
+
+    def _session_acc(self, sess: _Session) -> np.ndarray:
+        """A session's accumulated readout wherever it lives: pool row,
+        offloaded host copy, or zeros for a never-run session.  Pool state
+        chains on every launched tile, so this is exact without waiting for
+        the harvest loop."""
+        if sess.slot is not None:
+            return np.asarray(self.pool.state["acc_y"][sess.slot])
+        if sess.offloaded is not None:
+            return np.asarray(sess.offloaded["acc_y"], np.float32)
+        return np.zeros((self.cfg.n_out,), np.float32)
+
+    def _finish_session(self, sess: _Session) -> SessionSnapshot:
+        sess.closed = True   # extends the horizon to the last fed tick
+        if sess.processable() > 0:
+            self.packer.enqueue(sess)
+        while sess.processable() > 0 and self._pump_once():
+            pass
+        self._harvest_stream(block=True)
+        acc = self._session_acc(sess)
+        snap = SessionSnapshot(
+            sid=sess.sid, pred=int(np.argmax(acc)), logits=acc,
+            label=sess.label, ticks=sess.cursor, events=sess.n_events,
+            final=True,
+        )
+        sess.snapshot = snap
+        self.pool.release(sess)
+        self._sessions.pop(sess.sid, None)
+        return snap
+
+    def _abandon_session(self, sess: _Session) -> None:
+        sess.closed = True
+        self.pool.release(sess)
+        self._sessions.pop(sess.sid, None)
+
+    def reset_stream_stats(self) -> None:
+        """Zero the streaming counters (start of a measurement window)."""
+        self._tile_lat.clear()
+        self._stream_tiles = 0
+        self._stream_events = 0
+        self._stream_ticks = 0
+        self._stream_lanes = 0
+        self._bytes_streamed = 0
+
+    def stream_stats(self, wall_s: float) -> StreamStats:
+        """Streaming counters since the last :meth:`reset_stream_stats`,
+        normalised over the caller-measured wall window."""
+        lat = np.array(self._tile_lat) if self._tile_lat else np.zeros(1)
+        tiles = self._stream_tiles
+        return StreamStats(
+            sessions=len(self._sessions),
+            tiles=tiles,
+            events=self._stream_events,
+            ticks=self._stream_ticks,
+            wall_s=wall_s,
+            events_per_sec=(
+                self._stream_events / wall_s if wall_s > 0 else float("inf")
+            ),
+            ticks_per_sec=(
+                self._stream_ticks / wall_s if wall_s > 0 else float("inf")
+            ),
+            p50_tile_latency_s=float(np.percentile(lat, 50)),
+            p99_tile_latency_s=float(np.percentile(lat, 99)),
+            mean_lanes=(self._stream_lanes / tiles) if tiles else 0.0,
+            evictions=self.pool.evictions,
+            readmissions=self.pool.readmissions,
+            compiled_shapes=self.engine.compiled_shapes("step_sessions"),
+            hbm_bytes_streamed=self._bytes_streamed,
+        )
+
+    # ----------------------------------------- whole-sample compat wrapper
+
+    def _launch_session_tile(self, tile: BatchTile) -> "_PendingTile":
+        """One whole-sample bucket tile executed through the session-step
+        op as a single open-feed-close chunk, with
+        :func:`~repro.serve.batching.decode_events_host` semantics exactly:
+        the full bucketed tick length runs live (padding ticks advance
+        dynamics like the old path) and an END-less buffer pins
+        ``end_tick = 0``.
+
+        Each request is a complete stream, so the tile is *stateless* —
+        zero carries in (one cached pytree per tile width), carries out
+        unobserved — and skips the session pool entirely: whole-sample
+        serving pays no pool-sized scatter and no per-request host
+        bookkeeping."""
+        T = tile.num_ticks
+        bufs = [req.events for req in tile.requests]
+        b_pad = batching.padded_batch_size(len(bufs), self.max_batch)
+        raster, valid, labels = batching.decode_events_host(
+            bufs, self.cfg.n_in, T, self.cfg.label_delay
+        )
+        raster, valid = batching.pad_batch(raster, valid, b_pad)
+        live = np.zeros((T, b_pad), np.float32)
+        live[:, : len(bufs)] = 1.0
+        out = self.engine.step_sessions(
+            self._weights, jnp.asarray(raster), jnp.asarray(live),
+            jnp.asarray(valid), self._zero_state(b_pad),
+        )
+        if self.backend == "kernel":
+            ndev = self.engine.num_devices
+            shard_b = -(-b_pad // ndev)
+            self._bytes_streamed += ndev * traffic.stream_step_tiled_bytes(
+                T, shard_b, self.cfg.n_in, self.cfg.n_hid, self.cfg.n_out,
+                batch_tile=self._tile_rows,
+            )
+        self._stream_tiles += 1
+        self._stream_lanes += len(bufs)
+        self._stream_ticks += T * len(bufs)
+        return _PendingTile(
+            acc_y=out["acc_y"], labels=labels, tile=tile,
+            b_live=len(bufs),
+        )
+
+    def _zero_state(self, b_pad: int):
+        """Cached zero-carry pytree per tile width (a read-only jit input,
+        so reusing it across launches is safe)."""
+        st = self._zero_states.get(b_pad)
+        if st is None:
+            st = self._zero_states[b_pad] = self.engine.init_session_state(
+                b_pad
+            )
+        return st
+
     def serve(
         self, stream: Iterable[np.ndarray], flush: bool = True
     ) -> Tuple[List[ServeResult], ServeStats]:
         """Run a whole stream of AER sample buffers; results in admission
         (rid) order plus throughput/latency stats.
 
-        Tiles are *launched* as soon as a bucket fills (steady-state
-        batching) but the host never blocks on them mid-stream: results are
-        harvested opportunistically as their device buffers become ready and
-        the one mandatory synchronisation happens at the end-of-stream drain
-        — host decode of bucket ``k+1`` overlaps device compute of bucket
-        ``k``.  ``flush`` drains the partial buckets at end-of-stream.
+        This is the whole-sample *compatibility wrapper* over the session
+        runtime: each bucketed tile (same
+        :class:`~repro.serve.scheduler.BucketingScheduler` determinism
+        contract as ever) is executed open-feed-close through the session
+        machinery — per-request sessions seated in the pool, one
+        ``step_sessions`` launch, slots released — producing identical
+        results to the historical whole-sample path.  Tiles are *launched*
+        as soon as a bucket fills but the host never blocks on them
+        mid-stream: results are harvested opportunistically as their device
+        buffers become ready and the one mandatory synchronisation happens
+        at the end-of-stream drain.  ``flush`` drains the partial buckets
+        at end-of-stream.
         """
         t0 = self._clock()
         self._bytes_streamed = 0
@@ -323,7 +695,7 @@ class BatchedEngine:
         for events in stream:
             self.submit(events)
             for tile in self.scheduler.ready_tiles():
-                pending.append(self._launch_tile(tile))
+                pending.append(self._launch_session_tile(tile))
                 batches += 1
             harvest(block=False)
             while len(pending) > self.max_inflight_tiles:
@@ -332,24 +704,34 @@ class BatchedEngine:
                 results.extend(self._finalize(pending.pop(0)))
         if flush:
             for tile in self.scheduler.drain():
-                pending.append(self._launch_tile(tile))
+                pending.append(self._launch_session_tile(tile))
                 batches += 1
         harvest(block=True)   # the single per-drain sync
         wall = self._clock() - t0
         results.sort(key=lambda r: r.rid)
         stats = ServeStats.collect(
-            results, wall, batches, self.engine.compiled_shapes("inference"),
+            results, wall, batches,
+            self.engine.compiled_shapes("step_sessions"),
             hbm_bytes=self._bytes_streamed,
         )
         return results, stats
 
     def warmup(self, num_ticks: int, batch: Optional[int] = None) -> None:
-        """Pre-compile the forward for one tile shape (excluded-from-bench
-        compile time; also useful before latency-sensitive serving)."""
+        """Pre-compile the forward programs for one tile shape
+        (excluded-from-bench compile time; also useful before
+        latency-sensitive serving).  Warms both the session-step program
+        (the ``serve()``/streaming path) and the whole-sample inference
+        program (the direct ``run_tile`` path)."""
         b = batching.padded_batch_size(batch or self.max_batch, self.max_batch)
         t = batching.bucket_ticks(num_ticks, self.tick_granularity)
         raster = jnp.zeros((t, b, self.cfg.n_in), jnp.float32)
         valid = jnp.ones((t, b), jnp.float32)
         jax.block_until_ready(
             self.engine.inference(self._weights, raster, valid)["acc_y"]
+        )
+        state = self.engine.init_session_state(b)
+        jax.block_until_ready(
+            self.engine.step_sessions(
+                self._weights, raster, valid, valid, state
+            )["acc_y"]
         )

@@ -1,23 +1,33 @@
-"""Request queue + tick-count bucketing for the batched serving runtime.
+"""Schedulers for the batched serving runtime: whole-sample bucketing and
+continuous session batching.
 
 The FPGA controller serves one AER sample at a time (IDLE → READM → TICK →
-… → END_S).  At service scale that FSM becomes a *scheduler*: concurrent
-sample streams are admitted into a queue, grouped by padded tick length
-("buckets"), and released as rectangular batch tiles sized to the kernel's
-VMEM budget (:func:`repro.serve.batching.max_batch_for`).
+… → END_S).  At service scale that FSM becomes a *scheduler*; two live here:
+
+* :class:`BucketingScheduler` — the whole-sample path: concurrent sample
+  streams are admitted into a queue, grouped by padded tick length
+  ("buckets"), and released as rectangular batch tiles sized to the
+  kernel's VMEM budget (:func:`repro.serve.batching.max_batch_for`).
+* :class:`StreamPacker` — the streaming path's continuous-batching
+  generalization: open *sessions* with pending processable ticks queue FIFO,
+  and each call packs whichever ≤ ``max_batch`` sessions are ready into the
+  next fixed-shape tick-tile (partially drained sessions immediately
+  re-queue), so device tiles stay full while every session advances
+  incrementally.
 
 Determinism contract (tested in ``tests/test_serve.py``): admission order is
-FIFO within a bucket, buckets drain in ascending tick length, and the same
-request sequence always yields the same tiles — no wall-clock dependence in
-tile *composition* (the clock only stamps latency accounting).
+FIFO within a bucket/queue, buckets drain in ascending tick length, and the
+same request sequence always yields the same tiles — no wall-clock
+dependence in tile *composition* (the clock only stamps latency
+accounting).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import OrderedDict
-from typing import Callable, Dict, Iterator, List, Optional
+from collections import OrderedDict, deque
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -114,3 +124,61 @@ class BucketingScheduler:
         self._buckets = OrderedDict(
             (k, v) for k, v in self._buckets.items() if v
         )
+
+
+class StreamPacker:
+    """Continuous batching over open sessions.
+
+    Sessions enter the FIFO ready-queue when they gain processable ticks
+    (:meth:`enqueue`); :meth:`next_tile` pops up to ``max_batch`` of them
+    and picks the tile's tick length: the fixed ``tick_tile`` when one is
+    configured (latency-bounded true streaming), otherwise the bucketed
+    maximum of the chosen sessions' pending ticks (throughput mode — one
+    launch drains everything pending, which is what the whole-sample
+    compatibility wrapper uses so its per-launch work matches the old
+    bucketing path).  A session whose chunk didn't drain it is re-queued by
+    the engine after the tile is cut, preserving FIFO fairness.
+    """
+
+    def __init__(
+        self,
+        max_batch: int,
+        tick_tile: Optional[int] = None,
+        tick_granularity: int = 32,
+    ):
+        assert max_batch >= 1
+        assert tick_tile is None or tick_tile >= 1
+        self.max_batch = max_batch
+        self.tick_tile = tick_tile
+        self.tick_granularity = tick_granularity
+        self._queue: deque = deque()
+
+    def enqueue(self, sess) -> None:
+        """Add a session with pending work (idempotent per residence in the
+        queue — sessions track their own ``queued`` flag)."""
+        if not sess.queued:
+            sess.queued = True
+            self._queue.append(sess)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def next_tile(self) -> Optional[Tuple[List, int]]:
+        """Pop the next ``(sessions, num_ticks)`` tile, or ``None`` when no
+        queued session has processable ticks."""
+        chosen: List = []
+        while self._queue and len(chosen) < self.max_batch:
+            sess = self._queue.popleft()
+            sess.queued = False
+            if sess.processable() > 0:
+                chosen.append(sess)
+        if not chosen:
+            return None
+        if self.tick_tile is not None:
+            ticks = self.tick_tile
+        else:
+            ticks = batching.bucket_ticks(
+                max(s.processable() for s in chosen), self.tick_granularity
+            )
+        return chosen, ticks

@@ -1,0 +1,343 @@
+"""Stateful streaming serving (ISSUE 6 acceptance): chunk invariance of the
+session API against the whole-sample path — bit-exact, including quantized
+mode against the integer golden reference — plus eviction/readmission
+correctness, LRU/idle-timeout policy against a scripted clock, RuntimeConfig
+resolution, and the public-surface contract of ``repro.serve``."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import aer, quant_ref
+from repro.core.backend import ExecutionBackend, RuntimeConfig, as_backend
+from repro.core.quant import QuantizedMode
+from repro.core.rsnn import Presets, init_params, trainable
+from repro.serve import (
+    BatchedEngine,
+    SessionPool,
+    StreamPacker,
+    max_sessions_for,
+)
+from repro.serve.session import _Session
+
+
+def _request(rng, n_in, ticks, label=1):
+    raster = (rng.random((ticks, n_in)) < 0.25).astype(np.float32)
+    ev = aer.encode_sample(
+        raster, label, label_tick=max(0, ticks // 4), end_tick=ticks - 1
+    )
+    ev = np.asarray(ev, np.uint32)
+    return ev[np.argsort(ev & aer.MAX_TICK, kind="stable")]
+
+
+def _setup(seed=0, n=6, T=48, quantized=False):
+    cfg = Presets.braille(n_classes=3, num_ticks=T, quantized=quantized)
+    params = init_params(jax.random.key(seed), cfg)
+    rng = np.random.default_rng(seed)
+    reqs = [
+        _request(rng, cfg.n_in, int(rng.integers(12, T + 1)), label=i % 3)
+        for i in range(n)
+    ]
+    return cfg, params, reqs
+
+
+def _whole_sample(cfg, params, reqs, **kw):
+    res, _ = BatchedEngine(cfg, params, max_batch=4, **kw).serve(iter(reqs))
+    return res
+
+
+def _feed_pattern(ev, pattern, rng):
+    """Split one event buffer into feed increments per the named pattern."""
+    if pattern == "whole":
+        return [ev]
+    if pattern == "word":
+        return [ev[i : i + 1] for i in range(len(ev))]
+    # ragged: random cut points, including empty feeds
+    cuts = np.sort(rng.integers(0, len(ev) + 1, size=3))
+    return [ev[a:b] for a, b in zip([0, *cuts], [*cuts, len(ev)])]
+
+
+# --------------------------------------------------------------------------
+# chunk invariance: feeding granularity never changes the result
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["scan", "kernel"])
+@pytest.mark.parametrize("pattern", ["whole", "ragged", "word"])
+def test_chunk_invariance_bit_exact(backend, pattern):
+    """1-tick, ragged and whole-sample feeds all produce logits *bitwise*
+    identical to the whole-sample serve() path, on both backends."""
+    n = 3 if backend == "kernel" else 6
+    cfg, params, reqs = _setup(n=n, T=32)
+    ref = _whole_sample(cfg, params, reqs, backend=backend)
+
+    eng = BatchedEngine(cfg, params, backend=backend, max_batch=4, tick_tile=8)
+    rng = np.random.default_rng(7)
+    handles = [eng.open_session() for _ in reqs]
+    feeds = [_feed_pattern(ev, pattern, rng) for ev in reqs]
+    for step in range(max(len(f) for f in feeds)):
+        for h, f in zip(handles, feeds):
+            if step < len(f):
+                h.feed(f[step])
+        eng.pump()
+    for r, h in zip(ref, handles):
+        s = h.result()
+        assert s.final
+        np.testing.assert_array_equal(np.asarray(r.logits), s.logits)
+        assert r.pred == s.pred and r.label == s.label
+
+
+@pytest.mark.parametrize("backend", ["scan", "kernel"])
+def test_chunk_invariance_quantized_golden(backend):
+    """Quantized streaming serves the integer golden-reference accumulators
+    bit for bit regardless of feed chunking — state offload/readmit included
+    (capacity forces evictions mid-stream)."""
+    from repro.serve.batching import decode_events_host
+
+    T = 32
+    cfg, params, reqs = _setup(seed=3, n=4, T=T, quantized=True)
+    eng = BatchedEngine(
+        cfg, params, backend=backend, max_batch=2, max_sessions=2, tick_tile=8
+    )
+    assert eng.quantized
+    handles = [eng.open_session() for _ in reqs]
+    for h, ev in zip(handles, reqs):
+        for i in range(0, len(ev), 5):
+            h.feed(ev[i : i + 5])
+            eng.pump()
+    assert eng.pool.evictions > 0
+    weights = {k: eng._weights[k] for k in ("w_in", "w_rec", "w_out")}
+    mask = 1.0 - np.eye(cfg.n_hid, dtype=np.float32)
+    for h, ev in zip(handles, reqs):
+        s = h.result()
+        raster, valid, _ = decode_events_host([ev], cfg.n_in, s.ticks,
+                                              cfg.label_delay)
+        g = quant_ref.golden_forward(
+            raster,
+            np.asarray(weights["w_in"]),
+            np.asarray(weights["w_rec"]) * mask,
+            np.asarray(weights["w_out"]),
+            cfg.neuron.quant,
+            reset=cfg.neuron.reset,
+            boxcar_width=cfg.neuron.boxcar_width,
+            valid=valid,
+        )
+        np.testing.assert_array_equal(s.logits.astype(np.int64), g["acc_y"][0])
+        assert s.pred == int(g["pred"][0])
+
+
+def test_chunk_invariance_sharded():
+    """Streaming over a data mesh == single-device streaming, bitwise (the
+    CI 8-virtual-device lane gives this a real mesh; on one device it
+    degenerates but still exercises the shard_map path)."""
+    from repro.launch.mesh import make_data_mesh
+
+    cfg, params, reqs = _setup(seed=5, n=5, T=32)
+    ref = _whole_sample(cfg, params, reqs, backend="scan")
+    mesh = make_data_mesh()
+    sh = ExecutionBackend(cfg, "scan", mesh=mesh)
+    assert sh.num_devices == len(jax.devices()) or sh.num_devices == 1
+    eng = BatchedEngine(cfg, params, backend=sh, max_batch=4, tick_tile=8)
+    handles = [eng.open_session() for _ in reqs]
+    rng = np.random.default_rng(11)
+    for h, ev in zip(handles, reqs):
+        for f in _feed_pattern(ev, "ragged", rng):
+            h.feed(f)
+        eng.pump()
+    for r, h in zip(ref, handles):
+        np.testing.assert_array_equal(np.asarray(r.logits), h.result().logits)
+
+
+def test_label_gating_defers_unlabeled_ticks():
+    """With infer_window == "valid", ticks fed before the label word must not
+    process (a later label would retroactively invalidate them) — and the
+    deferred stream still ends bit-identical to the whole-sample path."""
+    cfg, params, reqs = _setup(n=1, T=32)
+    ev = reqs[0]
+    tick = ev & aer.MAX_TICK
+    label_tick = int(tick[(ev >> 24) == aer.EVT_LABEL].max())
+    pre = ev[tick < label_tick]          # spikes strictly before the label
+    assert len(pre) > 0
+
+    eng = BatchedEngine(cfg, params, backend="scan", max_batch=2, tick_tile=4)
+    h = eng.open_session()
+    h.feed(pre)
+    eng.pump(drain=True)
+    sess = eng._sessions[h.sid]
+    assert sess.gate_label and not sess.label_seen
+    assert sess.processable() == 0 and sess.cursor == 0
+
+    h.feed(ev[tick >= label_tick])       # label arrives: the gate lifts
+    assert sess.label_seen and sess.processable() > 0
+    ref = _whole_sample(cfg, params, reqs, backend="scan")
+    np.testing.assert_array_equal(np.asarray(ref[0].logits), h.result().logits)
+
+
+# --------------------------------------------------------------------------
+# eviction / readmission
+# --------------------------------------------------------------------------
+
+
+def test_eviction_readmission_mid_stream_bit_exact():
+    """Twelve sessions through a capacity-8 pool, fed in two phases: sessions
+    are LRU-evicted and readmitted mid-stream, and every final result is
+    bitwise identical to the uninterrupted whole-sample path."""
+    cfg, params, reqs = _setup(seed=9, n=12, T=32)
+    ref = _whole_sample(cfg, params, reqs, backend="scan")
+    eng = BatchedEngine(
+        cfg, params, backend="scan", max_batch=4, max_sessions=8, tick_tile=8
+    )
+    handles = [eng.open_session() for _ in reqs]
+    for h, ev in zip(handles, reqs):
+        h.feed(ev[: len(ev) // 2])
+    eng.pump(drain=True)
+    for h, ev in zip(handles, reqs):
+        h.feed(ev[len(ev) // 2 :])
+    eng.pump(drain=True)
+    assert eng.pool.evictions > 0 and eng.pool.readmissions > 0
+    for r, h in zip(ref, handles):
+        np.testing.assert_array_equal(np.asarray(r.logits), h.result().logits)
+
+
+def test_pool_lru_order_and_idle_timeout():
+    """Eviction policy against a scripted clock: LRU picks the least recently
+    *packed* resident; sweep() offloads exactly the sessions idle beyond the
+    timeout."""
+    cfg = Presets.braille(n_classes=3, num_ticks=32)
+    be = ExecutionBackend(cfg, "scan")
+    now = [0.0]
+    pool = SessionPool(be, capacity=2, idle_timeout=10.0, clock=lambda: now[0])
+
+    a, b, c = (_Session(i, now[0]) for i in range(3))
+    pool.place([a]); now[0] = 1.0
+    pool.place([b]); now[0] = 2.0
+    pool.place([c])                       # full: evicts a (oldest)
+    assert a.slot is None and a.offloaded is not None
+    assert pool.evictions == 1 and len(pool) == 2
+
+    pool.place([b]); now[0] = 3.0         # b becomes most-recently-used
+    pool.place([a])                       # readmits a, evicting c (LRU now)
+    assert pool.readmissions == 1 and c.slot is None
+
+    now[0] = 12.5                         # b last touched at t=2 -> idle 10.5
+    assert pool.sweep() == 1
+    assert b.slot is None and a.slot is not None
+
+    pool.release(a)
+    assert len(pool) == 0 and len(pool._free) == 2
+
+
+def test_pool_over_capacity_raises():
+    cfg = Presets.braille(n_classes=3, num_ticks=32)
+    pool = SessionPool(ExecutionBackend(cfg, "scan"), capacity=2)
+    s = [_Session(i, 0.0) for i in range(3)]
+    with pytest.raises(RuntimeError, match="over capacity"):
+        pool.place(s)
+
+
+def test_stream_packer_fifo_and_requeue():
+    """The packer pops FIFO, skips drained sessions, and respects the fixed
+    tick_tile."""
+    packer = StreamPacker(max_batch=2, tick_tile=8)
+    sess = [_Session(i, 0.0) for i in range(3)]
+    for s in sess:
+        s.max_fed_tick = 20
+        s.label_seen = True
+        packer.enqueue(s)
+        packer.enqueue(s)                 # idempotent while queued
+    assert packer.pending == 3
+    got, ticks = packer.next_tile()
+    assert [s.sid for s in got] == [0, 1] and ticks == 8
+    sess[2].cursor = 25                   # drained: skipped on pop
+    assert packer.next_tile() is None
+    assert packer.pending == 0
+
+
+# --------------------------------------------------------------------------
+# RuntimeConfig / public surface
+# --------------------------------------------------------------------------
+
+
+def test_runtime_config_resolution_and_sharing():
+    cfg = Presets.braille(n_classes=3, num_ticks=32)
+    rt = RuntimeConfig(backend="scan", vmem_budget=1 << 20)
+    be = as_backend(cfg, rt)
+    assert be.backend == "scan" and be.vmem_budget == 1 << 20
+    # the backend's resolved runtime is canonical (no "auto", no None budget)
+    assert be.runtime.backend == "scan"
+    assert be.runtime.vmem_budget == be.vmem_budget
+
+    # sharing: an existing instance passes through when compatible...
+    assert as_backend(cfg, be, runtime=RuntimeConfig(backend="scan")) is be
+    assert as_backend(cfg, be) is be
+    # ...and rejects contradictions
+    with pytest.raises(AssertionError):
+        as_backend(cfg, be, runtime=RuntimeConfig(vmem_budget=1 << 22))
+    with pytest.raises(AssertionError):
+        as_backend(cfg, be, quant=QuantizedMode(threshold=0x100))
+
+    # loose kwargs fill unset fields but never override the config
+    be2 = as_backend(cfg, RuntimeConfig(backend="scan"), vmem_budget=1 << 21)
+    assert be2.vmem_budget == 1 << 21
+    be3 = as_backend(cfg, rt, vmem_budget=1 << 22)
+    assert be3.vmem_budget == 1 << 20     # config wins
+
+    # engines accept the bundle too and share the jit cache
+    params = init_params(jax.random.key(0), cfg)
+    eng = BatchedEngine(cfg, params, backend=be, runtime=None, max_batch=2)
+    assert eng.engine is be
+
+
+def test_runtime_config_is_frozen():
+    rt = RuntimeConfig(backend="scan")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        rt.backend = "kernel"
+
+
+def test_serve_public_surface():
+    """`repro.serve` exports exactly its documented API; internals stay
+    internal."""
+    import repro.serve as serve
+
+    for name in serve.__all__:
+        assert getattr(serve, name) is not None
+    for internal in ("_Session", "decode_events_host", "_PendingTile"):
+        assert internal not in serve.__all__
+    assert "SessionHandle" in serve.__all__ and "StreamStats" in serve.__all__
+
+
+def test_max_sessions_for_capacity_math():
+    cfg = Presets.braille(n_classes=3, num_ticks=32)
+    from repro.kernels.rsnn_step import session_state_bytes
+
+    per = session_state_bytes(cfg.n_hid, cfg.n_out)
+    assert per == 4 * (2 * cfg.n_hid + 2 * cfg.n_out + 1)
+    assert max_sessions_for(cfg, state_budget=10 * per) == 10
+    assert max_sessions_for(cfg, state_budget=1) == 1      # floor of one
+
+
+def test_stream_stats_and_snapshots():
+    """pump() accounting: stats cover the window, poll() yields monotone
+    incremental snapshots, result() is final."""
+    cfg, params, reqs = _setup(seed=2, n=3, T=32)
+    eng = BatchedEngine(cfg, params, backend="scan", max_batch=2, tick_tile=8)
+    eng.reset_stream_stats()
+    t0 = 0.0
+    handles = [eng.open_session() for _ in reqs]
+    for h, ev in zip(handles, reqs):
+        h.feed(ev)
+    eng.pump(drain=True)
+    snap = handles[0].poll()
+    assert snap is not None and not snap.final and snap.ticks > 0
+    stats = eng.stream_stats(wall_s=1.0)
+    assert stats.tiles > 0 and stats.ticks > 0 and stats.events > 0
+    assert stats.sessions == len(reqs)
+    assert stats.p99_tile_latency_s >= stats.p50_tile_latency_s >= 0.0
+    assert 0 < stats.mean_lanes <= eng.max_batch
+    fin = handles[0].result()
+    assert fin.final and fin.ticks >= snap.ticks
+    for h in handles[1:]:
+        h.close()
+    assert not eng._sessions
