@@ -1,12 +1,33 @@
-"""§Roofline — turn dry-run JSON records into the three-term roofline table.
+"""§Roofline — achieved-vs-roofline bandwidth for the RSNN kernels, plus
+`Bt`/`vmem_budget` auto-tuning from the as-executed byte formulas.
 
-  compute term    = HLO_FLOPs / peak_FLOP/s                  (per device)
-  memory term     = HLO_bytes / HBM_bw
-  collective term = collective_wire_bytes / ICI_bw
+Primary mode (the revived one): consume the ``bandwidth_records`` that
+``benchmarks/bench_kernels.py`` folds into ``BENCH_kernels.json`` —
+``{"op", "bytes", "seconds"}`` per timed launch — and print
 
-Uses the calibrated costs (``cost_corrected``: loop-trip-count de-aliased)
-when present; hardware constants from :mod:`repro.launch.mesh` (TPU v5e).
-MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (serve).
+  achieved GB/s   = analytic as-executed bytes / measured wall-clock
+  roofline GB/s   = the running device's peak HBM bandwidth
+                    (:func:`repro.kernels.traffic.device_roofline`)
+  roofline frac   = achieved / roofline
+
+On hosts without an accelerator the device resolves to the CPU fallback and
+every ``roofline_frac`` is ``-``: interpret-mode wall-clock says nothing
+about kernel bandwidth, so the numbers are recorded for trend only (same
+policy as the CI serve gate).  Never crashes when no records exist — it
+prints how to produce them and moves on.
+
+Auto-tune: instead of the hand-picked ``Bt`` guidance that used to live in
+``docs/perf_tuning.md``, sweep the VMEM budget ladder, derive each budget's
+batch tile from the kernels' own bytes helpers
+(:func:`repro.kernels.rsnn_step.max_forward_tile` /
+:func:`max_fused_train_tile` — the single tile-sizing source), evaluate the
+as-executed event-streaming bytes per sample at the *measured* density
+(:func:`repro.kernels.traffic.infer_dma_tiled_bytes` et al.), and report the
+per-op ``(Bt, vmem_budget)`` minimizing bytes/sample on this device.
+
+Legacy mode: the transformer dry-run analysis (HLO-cost three-term roofline
+from ``experiments/dryrun/*.json``) is kept behind the same entry point and
+silently skipped when the directory does not exist.
 """
 
 from __future__ import annotations
@@ -15,14 +36,106 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.kernels import events, traffic
+from repro.kernels.rsnn_step import max_forward_tile, max_fused_train_tile
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, VMEM_BYTES
 
 DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
+# The budget ladder the auto-tuner sweeps (bytes) — powers of two up to the
+# device VMEM; the derived tile is what actually changes between rungs.
+_BUDGET_LADDER_MIB = (2, 4, 8, 16, 32, 64, 128)
+
+
+# ---------------------------------------------------------------------------
+# kernel-records mode (primary): BENCH_kernels.json -> bandwidth table
+# ---------------------------------------------------------------------------
+
+
+def load_kernel_records(bench_dir: Path):
+    """``(records, meta)`` from ``BENCH_kernels.json`` — empty when the
+    bench has not run (never an exception: dormancy was the old bug)."""
+    f = Path(bench_dir) / "BENCH_kernels.json"
+    if not f.exists():
+        return [], {}
+    try:
+        payload = json.loads(f.read_text())
+    except (OSError, json.JSONDecodeError):
+        return [], {}
+    return payload.get("bandwidth_records", []), payload
+
+
+def kernel_bandwidth_rows(records, roofline=None):
+    return traffic.bandwidth_table(records, roofline)
+
+
+def fmt_bandwidth(rows, roofline) -> str:
+    hdr = (f"{'op':28s} {'samples/s':>10s} {'achieved_GB/s':>13s} "
+           f"{'roofline_GB/s':>13s} {'frac':>6s}")
+    lines = [f"device: {roofline['kind']}  (measured={roofline['measured']})",
+             hdr, "-" * len(hdr)]
+    for r in rows:
+        frac = "-" if r["roofline_frac"] is None else f"{r['roofline_frac']:.3f}"
+        sps = r.get("samples_per_s")
+        sps_s = f"{sps:.1f}" if isinstance(sps, (int, float)) else "-"
+        lines.append(
+            f"{r['op']:28s} {sps_s:>10s} {r['achieved_gbps']:>13.2f} "
+            f"{r['roofline_gbps']:>13.1f} {frac:>6s}"
+        )
+    return "\n".join(lines)
+
+
+def autotune(T, B, n_in, n_hid, n_out, density, vmem_total=VMEM_BYTES):
+    """Per-op ``(Bt, vmem_budget)`` minimizing as-executed event-streaming
+    bytes per sample at the measured density — the replacement for the
+    hand-picked values the docs used to carry.  Pure analytics (the same
+    formulas the CI traffic gates enforce), so it runs identically on the
+    CPU fallback; ties break toward the smaller budget (leave VMEM spare)."""
+    budgets = [m << 20 for m in _BUDGET_LADDER_MIB if (m << 20) <= vmem_total]
+    ops = {
+        "infer": (lambda vb: max_forward_tile(n_in, n_hid, n_out, vb),
+                  traffic.infer_dma_tiled_bytes),
+        "train": (lambda vb: max_fused_train_tile(T, n_in, n_hid, n_out, vb),
+                  traffic.train_dma_tiled_bytes),
+    }
+    out = {}
+    for op, (tile_of, bytes_of) in ops.items():
+        best = None
+        for vb in budgets:
+            bt = max(1, min(tile_of(vb), B))
+            bd = events.block_density(density, bt, n_in)
+            per = bytes_of(T, B, n_in, n_hid, n_out,
+                           block_density=bd, batch_tile=bt) / B
+            row = {"vmem_budget": vb, "batch_tile": bt,
+                   "block_density": bd, "bytes_per_sample": per}
+            if best is None or per < best["bytes_per_sample"] - 1e-9:
+                best = row
+        out[op] = best
+    return out
+
+
+def fmt_autotune(tuned, T, B, density) -> str:
+    lines = [f"auto-tuned tiles (T={T}, B={B}, measured density={density:.4f}):"]
+    for op, r in tuned.items():
+        lines.append(
+            f"  {op:6s} Bt={r['batch_tile']:<4d} "
+            f"vmem_budget={r['vmem_budget'] >> 20}MiB  "
+            f"block_density={r['block_density']:.3f}  "
+            f"bytes/sample={r['bytes_per_sample']:.0f}"
+        )
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# legacy dry-run mode: HLO-cost three-term roofline (transformer records)
+# ---------------------------------------------------------------------------
+
 
 def load_records(tag: str = "baseline", mesh: str = "16x16", d: Path = DRYRUN_DIR):
+    if not Path(d).is_dir():
+        return []
     recs = []
-    for f in sorted(d.glob(f"*__{mesh}__{tag}.json")):
+    for f in sorted(Path(d).glob(f"*__{mesh}__{tag}.json")):
         recs.append(json.loads(f.read_text()))
     return recs
 
@@ -100,15 +213,44 @@ def fmt_table(rows) -> str:
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-dir", default=".",
+                    help="directory holding BENCH_kernels.json")
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--json-out")
     opts = ap.parse_args(argv)
-    rows = [analyze(r) for r in load_records(opts.tag, opts.mesh)]
-    print(fmt_table(rows))
+
+    roofline = traffic.device_roofline()
+    records, payload = load_kernel_records(Path(opts.bench_dir))
+    result = {"device": roofline, "rc": 0}
+
+    if records:
+        rows = kernel_bandwidth_rows(records, roofline)
+        print(fmt_bandwidth(rows, roofline))
+        result["bandwidth"] = rows
+        tile = payload.get("tile", {})
+        density = payload.get("event_density_braille")
+        if tile and density is not None:
+            tuned = autotune(
+                tile["T"], max(tile["B"], 512), tile["n_in"],
+                tile["n_hid"], tile["n_out"], float(density),
+            )
+            print(fmt_autotune(tuned, tile["T"], max(tile["B"], 512),
+                               float(density)))
+            result["autotune"] = tuned
+    else:
+        print(f"no kernel records under {opts.bench_dir!r} — run "
+              "`python -m benchmarks.bench_kernels` first "
+              "(achieved-bandwidth table skipped)")
+
+    legacy = [analyze(r) for r in load_records(opts.tag, opts.mesh)]
+    if legacy:
+        print(fmt_table(legacy))
+        result["dryrun"] = legacy
+
     if opts.json_out:
-        Path(opts.json_out).write_text(json.dumps(rows, indent=2))
-    return rows
+        Path(opts.json_out).write_text(json.dumps(result, indent=2) + "\n")
+    return result
 
 
 if __name__ == "__main__":

@@ -6,7 +6,7 @@
   kernels allclose + µbench                         -> bench_kernels
   serving batched vs sequential throughput          -> bench_serve
   stateful session streaming (events/s, tick p99)   -> bench_serve --streaming
-  §Roofline table (from dry-run JSONs, if present)  -> roofline
+  achieved-vs-roofline bandwidth + Bt auto-tune     -> roofline
 
 ``python -m benchmarks.run [--fast]`` — default runs the paper's full
 200-epoch Braille protocol; ``--fast`` trims braille to its 12-epoch smoke
@@ -61,7 +61,8 @@ def main(argv=None):
     from benchmarks import bench_braille, bench_serve, roofline
 
     jobs = [
-        ("kernels", lambda: bench_kernels.main(["--out-dir", opts.out_dir])),
+        ("kernels", lambda: bench_kernels.main(
+            ["--out-dir", opts.out_dir] + (["--smoke"] if opts.fast else []))),
         ("serve", lambda: bench_serve.main(["--fast"] if opts.fast else [])),
         ("streaming", lambda: bench_serve.main(
             ["--streaming"] + (["--fast"] if opts.fast else []))),
@@ -69,7 +70,7 @@ def main(argv=None):
         ("resources", lambda: bench_resources.main([])),
         ("braille", lambda: bench_braille.main(
             ["--smoke"] if opts.fast else ["--epochs", "200"])),
-        ("roofline", lambda: roofline.main([])),
+        ("roofline", lambda: roofline.main(["--bench-dir", opts.out_dir])),
     ]
     failures = []
     reports = {}

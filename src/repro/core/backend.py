@@ -96,7 +96,7 @@ from repro.core import eprop
 from repro.core.quant import QuantizedMode
 from repro.core.rsnn import RSNNConfig
 from repro.distributed import sharding as shardlib
-from repro.kernels import ops
+from repro.kernels import events, ops
 from repro.kernels.rsnn_step import (
     DEFAULT_VMEM_BUDGET,
     _pad_batch_axis,
@@ -142,6 +142,12 @@ class RuntimeConfig:
     vmem_budget: Optional[int] = None
     mesh: object = None
     rules: Optional[shardlib.ShardingRules] = None
+    # Event-driven dispatch: "dense" | "event" force a path, "auto" / None
+    # picks from the measured per-channel event density (event iff
+    # density <= events.SPARSE_DENSITY_THRESHOLD) — see
+    # repro.kernels.events.resolve_sparsity, the single policy point.
+    sparsity: Optional[str] = None
+    event_density: Optional[float] = None
 
 
 def _resolve_runtime(
@@ -152,19 +158,23 @@ def _resolve_runtime(
     vmem_budget: Optional[int],
     mesh,
     rules: Optional[shardlib.ShardingRules],
+    sparsity: Optional[str] = None,
+    event_density: Optional[float] = None,
 ) -> RuntimeConfig:
     """Merge an explicit :class:`RuntimeConfig` with the deprecated loose
     kwargs: the config wins wherever it sets a field; loose kwargs only fill
     fields it left unset."""
     if runtime is None:
         return RuntimeConfig(backend=backend, alpha=alpha, quant=quant,
-                             vmem_budget=vmem_budget, mesh=mesh, rules=rules)
+                             vmem_budget=vmem_budget, mesh=mesh, rules=rules,
+                             sparsity=sparsity, event_density=event_density)
     rt = runtime
     if rt.backend == "auto" and backend != "auto":
         rt = dataclasses.replace(rt, backend=backend)
     for name, val in (("alpha", alpha), ("quant", quant),
                       ("vmem_budget", vmem_budget), ("mesh", mesh),
-                      ("rules", rules)):
+                      ("rules", rules), ("sparsity", sparsity),
+                      ("event_density", event_density)):
         if getattr(rt, name) is None and val is not None:
             rt = dataclasses.replace(rt, **{name: val})
     return rt
@@ -209,6 +219,15 @@ class ExecutionBackend:
         win over the loose kwargs (which remain as a deprecated
         passthrough).  The resolved knobs are re-exposed as
         ``self.runtime``.
+    sparsity / event_density:
+        Event-driven dispatch: ``sparsity`` forces ``"dense"``/``"event"``
+        or (``"auto"``/``None``) decides from the *measured* per-channel
+        ``event_density`` (event iff at most
+        :data:`repro.kernels.events.SPARSE_DENSITY_THRESHOLD`).  The event
+        path routes the kernel backend to the DMA double-buffered streaming
+        kernels and the scan backend to the row-compacted sparse input
+        projection — both bitwise-identical to the dense path, so this only
+        changes speed, never results.
     """
 
     def __init__(
@@ -221,9 +240,11 @@ class ExecutionBackend:
         mesh=None,
         rules: Optional[shardlib.ShardingRules] = None,
         runtime: Optional[RuntimeConfig] = None,
+        sparsity: Optional[str] = None,
+        event_density: Optional[float] = None,
     ):
         rt = _resolve_runtime(runtime, backend, alpha, quant, vmem_budget,
-                              mesh, rules)
+                              mesh, rules, sparsity, event_density)
         backend, alpha, quant = rt.backend, rt.alpha, rt.quant
         vmem_budget, mesh, rules = rt.vmem_budget, rt.mesh, rt.rules
         self.cfg = cfg
@@ -254,6 +275,17 @@ class ExecutionBackend:
         # against (max_forward_tile / max_fused_train_tile) — a trace-time
         # static decision; one jit cache entry per launch shape either way.
         self.vmem_budget = int(vmem_budget or DEFAULT_VMEM_BUDGET)
+        # Event-driven dispatch, resolved once from the measured density:
+        # "event" routes the kernel backend onto the DMA-streaming variants
+        # (stream="dma": double-buffered HBM fetch, quiet blocks skipped)
+        # and the scan backend onto the row-compacted sparse input
+        # projection.  Both are bitwise-identical to the dense path, so this
+        # knob only ever changes speed — never results.
+        self.event_density = (
+            None if rt.event_density is None else float(rt.event_density)
+        )
+        self.sparsity = events.resolve_sparsity(rt.sparsity, self.event_density)
+        self._stream = "dma" if self.sparsity == "event" else "blocked"
         # Data-parallel mesh: resolve the logical "batch" axis to mesh axes
         # via the sharding rules (the same table the production models use).
         self.mesh = mesh
@@ -276,6 +308,7 @@ class ExecutionBackend:
         self.runtime = RuntimeConfig(
             backend=self.backend, alpha=self.alpha, quant=self.quant,
             vmem_budget=self.vmem_budget, mesh=self.mesh, rules=self.rules,
+            sparsity=self.sparsity, event_density=self.event_density,
         )
         if cfg.eprop.mask_self_recurrence:
             self._mask = 1.0 - jnp.eye(cfg.n_hid, dtype=jnp.float32)
@@ -322,6 +355,19 @@ class ExecutionBackend:
         assert rt.vmem_budget is None or self.vmem_budget == int(rt.vmem_budget), (
             "shared backend tiles against a different vmem_budget "
             f"({self.vmem_budget}) than the caller's ({rt.vmem_budget})"
+        )
+        # "auto"/None inherit whatever this backend resolved; only a forced
+        # path can conflict.
+        assert rt.sparsity in (None, "auto") or rt.sparsity == self.sparsity, (
+            f"shared backend resolved sparsity={self.sparsity!r}, caller "
+            f"forced {rt.sparsity!r}"
+        )
+        assert (
+            rt.event_density is None
+            or self.event_density == float(rt.event_density)
+        ), (
+            "shared backend was built for a different measured event density "
+            f"({self.event_density}) than the caller's ({rt.event_density})"
         )
 
     # ------------------------------------------------------------- plumbing
@@ -380,6 +426,20 @@ class ExecutionBackend:
             weights["w_out"],
         )
 
+    def _scan_sparse_rows(self, T: int, B: int) -> Optional[int]:
+        """Static active-row capacity for the scan backend's sparse input
+        pre-projection (``None`` → dense).  Sized from the measured density
+        via :func:`repro.kernels.events.suggest_row_capacity`; a forced
+        ``"event"`` with no measured density degrades to full capacity
+        (which :func:`~repro.kernels.events.sparse_input_projection`
+        short-circuits to the dense matmul)."""
+        if self.sparsity != "event":
+            return None
+        d = self.event_density
+        if d is None:
+            d = events.SPARSE_DENSITY_THRESHOLD
+        return events.suggest_row_capacity(T, B, d, n_in=self.cfg.n_in)
+
     def _kernel_forward(self, weights, raster):
         ncfg = self._ncfg
         w_in, w_rec, w_out = self._datapath_weights(weights)
@@ -395,6 +455,7 @@ class ExecutionBackend:
             boxcar_width=ncfg.boxcar_width,
             quant=self.quant,
             vmem_budget=self.vmem_budget,
+            stream=self._stream,
         )
 
     def _spike_rate(self, n_spk, valid):
@@ -426,6 +487,7 @@ class ExecutionBackend:
                 reset=ncfg.reset, quant=self.quant,
                 infer_window=ecfg.infer_window,
                 vmem_budget=self.vmem_budget,
+                stream=self._stream,
             )
             return {
                 "acc_y": acc_y,
@@ -433,7 +495,11 @@ class ExecutionBackend:
                 "spike_rate": self._spike_rate(n_spk, valid),
             }
         params = self._merge(weights, raster.dtype)
-        return eprop.run_sample_inference(params, raster, valid, ncfg, ecfg)
+        T, B = raster.shape[:2]
+        return eprop.run_sample_inference(
+            params, raster, valid, ncfg, ecfg,
+            sparse_rows=self._scan_sparse_rows(T, B),
+        )
 
     def inference(
         self, weights: Dict[str, jax.Array], raster: jax.Array, valid: jax.Array
@@ -466,8 +532,10 @@ class ExecutionBackend:
                 "n_spk": (out["z"] * valid[..., None]).sum(axis=(1, 2)),
             }
         params = self._merge(weights, raster.dtype)
+        T, B = raster.shape[:2]
         h, xbar, pbar, zbar, err, y_inf, n_spk = eprop.forward_traces(
-            params, raster, y_star, valid, ncfg, ecfg
+            params, raster, y_star, valid, ncfg, ecfg,
+            sparse_rows=self._scan_sparse_rows(T, B),
         )
         return {
             "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar,
@@ -527,6 +595,7 @@ class ExecutionBackend:
                 target_amplitude=ecfg.target_amplitude,
                 infer_window=ecfg.infer_window,
                 vmem_budget=self.vmem_budget,
+                stream=self._stream,
             )
             dw = {"w_in": dw_in, "w_rec": dw_rec * self._mask,
                   "w_out": dw_out}
@@ -537,7 +606,11 @@ class ExecutionBackend:
             }
             return dw, metrics
         params = self._merge(weights, raster.dtype)
-        return eprop.run_sample(params, raster, y_star, valid, ncfg, ecfg)
+        T, B = raster.shape[:2]
+        return eprop.run_sample(
+            params, raster, y_star, valid, ncfg, ecfg,
+            sparse_rows=self._scan_sparse_rows(T, B),
+        )
 
     # ------------------------------------------------- data-parallel wrappers
 
@@ -649,7 +722,11 @@ class ExecutionBackend:
             out = self._kernel_forward(weights, raster)
             return {"v": out["v"], "z": out["z"], "y": out["y"]}
         params = self._merge(weights, raster.dtype)
-        out = eprop.forward_dynamics(params, raster, self._ncfg, self.cfg.eprop)
+        T, B = raster.shape[:2]
+        out = eprop.forward_dynamics(
+            params, raster, self._ncfg, self.cfg.eprop,
+            sparse_rows=self._scan_sparse_rows(T, B),
+        )
         return {"v": out["v"], "z": out["z"], "y": out["y"]}
 
     def dynamics(
@@ -697,11 +774,14 @@ class ExecutionBackend:
                 reset=ncfg.reset, quant=self.quant,
                 infer_window=ecfg.infer_window,
                 vmem_budget=self.vmem_budget,
+                stream=self._stream,
             )
             return {"v": v, "z": z, "y": y, "acc_y": acc_y, "n_spk": n_spk}
         params = self._merge(weights, raster.dtype)
+        T, B = raster.shape[:2]
         return eprop.run_stream_inference(
-            params, raster, live, valid, state, ncfg, ecfg
+            params, raster, live, valid, state, ncfg, ecfg,
+            sparse_rows=self._scan_sparse_rows(T, B),
         )
 
     def _step_sessions_sharded(self, weights, raster, live, valid, state):
@@ -770,6 +850,8 @@ def as_backend(
     vmem_budget: Optional[int] = None,
     mesh=None,
     runtime: Optional[RuntimeConfig] = None,
+    sparsity: Optional[str] = None,
+    event_density: Optional[float] = None,
 ) -> ExecutionBackend:
     """The single runtime-resolution point: coerce a backend name, a
     :class:`RuntimeConfig`, or an existing :class:`ExecutionBackend` into a
@@ -787,7 +869,8 @@ def as_backend(
         assert runtime is None, "runtime passed twice"
         backend, runtime = backend.backend, backend
     name = backend if isinstance(backend, str) else "auto"
-    rt = _resolve_runtime(runtime, name, alpha, quant, vmem_budget, mesh, None)
+    rt = _resolve_runtime(runtime, name, alpha, quant, vmem_budget, mesh, None,
+                          sparsity, event_density)
     if isinstance(backend, ExecutionBackend):
         assert backend.cfg == cfg, "shared backend built for a different config"
         backend.check_compatible(rt)

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.neuron import NeuronConfig, lif_step, li_step, pseudo_derivative
+from repro.kernels.events import sparse_input_projection
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,7 +106,10 @@ def _datapath(params: Dict[str, jax.Array], ncfg: NeuronConfig, ecfg: EpropConfi
     )
 
 
-def _input_projection(raster: jax.Array, w_in_d: jax.Array, dot) -> jax.Array:
+def _input_projection(
+    raster: jax.Array, w_in_d: jax.Array, dot,
+    sparse_rows: int | None = None,
+) -> jax.Array:
     """Hoist the per-tick ``x_t @ w_in`` out of the scan: one
     ``(T·B, n_in) × (n_in, H)`` matmul instead of T rank-B ones.
 
@@ -114,8 +118,20 @@ def _input_projection(raster: jax.Array, w_in_d: jax.Array, dot) -> jax.Array:
     up front.  In quantized mode ``dot`` carries ``Precision.HIGHEST`` and
     every operand is an exact integer in f32, so the result is bit-identical
     to the per-tick form regardless of reduction order.
+
+    ``sparse_rows`` is the event fast path: a static active-row capacity
+    (from :func:`repro.kernels.events.suggest_row_capacity`) switches the
+    contraction to the row-compacted gather-matmul of
+    :func:`repro.kernels.events.sparse_input_projection` — bitwise equal to
+    the dense form at any density, just cheaper when most ``(tick, sample)``
+    rows are quiet.
     """
     T, B, n_in = raster.shape
+    if sparse_rows is not None and sparse_rows < T * B:
+        proj, _ = sparse_input_projection(
+            raster, w_in_d, capacity=int(sparse_rows), dot=dot
+        )
+        return proj
     return dot(raster.reshape(T * B, n_in), w_in_d).reshape(T, B, -1)
 
 
@@ -138,6 +154,7 @@ def run_sample_exact(
     valid: jax.Array,        # (T, B) TARGET_VALID mask
     ncfg: NeuronConfig,
     ecfg: EpropConfig,
+    sparse_rows: int | None = None,
 ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
     """Run one sample, returning (raw weight-update sums, metrics).
 
@@ -154,7 +171,7 @@ def run_sample_exact(
     w_in_d, w_rec_d, w_out_d, rec_mask, y_scale, dot = _datapath(params, ncfg, ecfg)
     b_fb = _feedback(params, ecfg)
 
-    in_cur = _input_projection(raster, w_in_d, dot)
+    in_cur = _input_projection(raster, w_in_d, dot, sparse_rows)
 
     def tick(carry, inp):
         (v, z, y, eps_in, eps_rec, ebar_in, ebar_rec, zbar,
@@ -222,6 +239,7 @@ def forward_traces(
     valid: jax.Array,       # (T, B)
     ncfg: NeuronConfig,
     ecfg: EpropConfig,
+    sparse_rows: int | None = None,
 ):
     """Forward pass storing the O(T·H) quantities the factored update needs."""
     T, B, n_in = raster.shape
@@ -234,7 +252,7 @@ def forward_traces(
     kappa = jnp.asarray(ncfg.kappa, dtype)
     w_in_d, w_rec_d, w_out_d, _, y_scale, dot = _datapath(params, ncfg, ecfg)
 
-    in_cur = _input_projection(raster, w_in_d, dot)
+    in_cur = _input_projection(raster, w_in_d, dot, sparse_rows)
 
     def tick(carry, inp):
         v, z, y, xbar, pbar, zbar = carry
@@ -303,9 +321,10 @@ def run_sample_factored(
     valid: jax.Array,
     ncfg: NeuronConfig,
     ecfg: EpropConfig,
+    sparse_rows: int | None = None,
 ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
     h, xbar, pbar, zbar, err, y_inf, n_spk = forward_traces(
-        params, raster, y_star, valid, ncfg, ecfg
+        params, raster, y_star, valid, ncfg, ecfg, sparse_rows
     )
     dw = factored_update(params, h, xbar, pbar, zbar, err, ncfg, ecfg)
     acc_y = y_inf.sum(axis=0)
@@ -317,10 +336,11 @@ def run_sample_factored(
     return dw, metrics
 
 
-def run_sample(params, raster, y_star, valid, ncfg: NeuronConfig, ecfg: EpropConfig):
+def run_sample(params, raster, y_star, valid, ncfg: NeuronConfig,
+               ecfg: EpropConfig, sparse_rows: int | None = None):
     """Dispatch on ``ecfg.mode``."""
     fn = run_sample_exact if ecfg.mode == "exact" else run_sample_factored
-    return fn(params, raster, y_star, valid, ncfg, ecfg)
+    return fn(params, raster, y_star, valid, ncfg, ecfg, sparse_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -334,6 +354,7 @@ def run_sample_inference(
     valid: jax.Array,
     ncfg: NeuronConfig,
     ecfg: EpropConfig,
+    sparse_rows: int | None = None,
 ) -> Dict[str, jax.Array]:
     T, B, n_in = raster.shape
     H = params["w_rec"].shape[0]
@@ -343,7 +364,7 @@ def run_sample_inference(
     kappa = jnp.asarray(ncfg.kappa, dtype)
     w_in_d, w_rec_d, w_out_d, _, _, dot = _datapath(params, ncfg, ecfg)
 
-    in_cur = _input_projection(raster, w_in_d, dot)
+    in_cur = _input_projection(raster, w_in_d, dot, sparse_rows)
 
     def tick(carry, inp):
         v, z, y, acc_y, n_spk = carry
@@ -374,6 +395,7 @@ def run_stream_inference(
     state: Dict[str, jax.Array],   # {"v","z","y","acc_y","n_spk"} carries
     ncfg: NeuronConfig,
     ecfg: EpropConfig,
+    sparse_rows: int | None = None,
 ) -> Dict[str, jax.Array]:
     """Carry-in / carry-out inference over one streaming tick-tile.
 
@@ -401,7 +423,7 @@ def run_stream_inference(
     kappa = jnp.asarray(ncfg.kappa, dtype)
     w_in_d, w_rec_d, w_out_d, _, _, dot = _datapath(params, ncfg, ecfg)
 
-    in_cur = _input_projection(raster, w_in_d, dot)
+    in_cur = _input_projection(raster, w_in_d, dot, sparse_rows)
     acc_all = ecfg.infer_window == "all"
 
     def tick(carry, inp):
@@ -435,6 +457,7 @@ def forward_dynamics(
     raster: jax.Array,      # (T, B, N_in)
     ncfg: NeuronConfig,
     ecfg: EpropConfig,
+    sparse_rows: int | None = None,
 ) -> Dict[str, jax.Array]:
     """Forward pass emitting the full state trajectories — the probe the
     bit-true golden-reference equivalence tests drive.
@@ -451,7 +474,7 @@ def forward_dynamics(
     kappa = jnp.asarray(ncfg.kappa, dtype)
     w_in_d, w_rec_d, w_out_d, _, _, dot = _datapath(params, ncfg, ecfg)
 
-    in_cur = _input_projection(raster, w_in_d, dot)
+    in_cur = _input_projection(raster, w_in_d, dot, sparse_rows)
 
     def tick(carry, in_cur_t):
         v, z, y = carry

@@ -27,6 +27,7 @@ from typing import Dict, Tuple
 import numpy as np
 
 from repro.core import aer
+from repro.data import pipeline
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,4 +103,6 @@ def make_cue_dataset(
             "n_in": cfg.n_in,
             "num_ticks": cfg.num_ticks,
         }
+        # measured per-channel event density (see data.pipeline.event_density)
+        out[split]["event_density"] = pipeline.event_density(out[split])
     return out

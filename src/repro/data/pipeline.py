@@ -29,7 +29,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import aer
 from repro.core.controller import DeviceBatch, decode_events_to_batch
+
+
+def event_density(events, n_in: Optional[int] = None,
+                  num_ticks: Optional[int] = None) -> float:
+    """Measured per-channel event density of AER word buffers: spike words
+    per ``(tick, channel)`` slot — the fraction of nonzero raster entries
+    the buffers decode to.
+
+    This is the *ground truth* behind the "~2-5% on Braille" figure: the
+    traffic gates (``benchmarks/bench_kernels.py``) and the backend's
+    dense/event dispatch (:func:`repro.kernels.events.resolve_sparsity`)
+    both consume this measurement instead of assuming a constant.
+
+    ``events`` is either a padded ``(S, L)`` uint32 word matrix plus
+    explicit ``n_in`` / ``num_ticks``, or a dataset split dict
+    ``{"events", "n_in", "num_ticks"}`` as the dataset builders emit
+    (:func:`repro.data.braille.make_braille_dataset`,
+    :func:`repro.data.cue.make_cue_dataset` — both record the measurement
+    as ``split["event_density"]``).  Pad (0x0), label and end words are
+    excluded by construction — only ``EVT_SPIKE`` words count.
+    """
+    if isinstance(events, dict):
+        n_in = int(events["n_in"])
+        num_ticks = int(events["num_ticks"])
+        events = events["events"]
+    assert n_in and num_ticks, "need n_in and num_ticks (or a split dict)"
+    words = np.asarray(events, np.uint32)
+    n_samples = words.shape[0] if words.ndim > 1 else 1
+    n_spike = int((((words >> 24) & 0xFF) == aer.EVT_SPIKE).sum())
+    return n_spike / float(n_samples * num_ticks * n_in)
 
 
 @dataclasses.dataclass

@@ -61,11 +61,14 @@ from repro.core.quant import QuantizedMode
 from repro.kernels.rsnn_step import (
     DEFAULT_VMEM_BUDGET,
     PHYSICAL_VMEM_CEILING,
+    _block_bitmap,
     _pad_batch_axis,
+    _stream_events,
     _tile_batch,
     fused_train_bytes,
     max_forward_tile,
     max_fused_train_tile,
+    tick_from_input_current,
     tick_transition,
 )
 
@@ -331,6 +334,171 @@ def _train_kernel(
         nspk_ref[...] = nspk_scr[...]
 
 
+def _train_dma_kernel(
+    bitmap_ref,   # (nb·T,) int32 scalar-prefetch activity bitmap
+    raster_hbm,   # (T, b_pad, N_in) — stays in HBM, streamed manually
+    y_star_ref,   # (B, O) one-hot targets
+    valid_ref,    # (1, B) TARGET_VALID mask (pinned to tick T-1 in phase 2)
+    w_in_ref,     # (N_in, H)
+    w_rec_ref,    # (H, H)
+    w_out_ref,    # (H, O)
+    b_fb_ref,     # (H, O)
+    dw_in_ref,    # (N_in, H) out
+    dw_rec_ref,   # (H, H) out
+    dw_out_ref,   # (H, O) out
+    acc_y_ref,    # (B, O) out
+    nspk_ref,     # (B, 1) out
+    v_scr,        # VMEM (B, H) forward carries …
+    z_scr,        # VMEM (B, H)
+    y_scr,        # VMEM (B, O)
+    xbar_scr,     # VMEM (B, N_in)
+    pbar_scr,     # VMEM (B, H)
+    zbar_scr,     # VMEM (B, H)
+    accy_scr,     # VMEM (B, O)
+    nspk_scr,     # VMEM (B, 1)
+    h_tr,         # VMEM (T, B, H)
+    xbar_tr,      # VMEM (T, B, N_in)
+    pbar_tr,      # VMEM (T, B, H)
+    zbar_tr,      # VMEM (T, B, H)
+    err_tr,       # VMEM (T, B, O)
+    f_scr,        # VMEM (B, H)
+    acc_in_scr,   # VMEM (N_in, H)
+    acc_rec_scr,  # VMEM (H, H)
+    acc_out_scr,  # VMEM (H, O)
+    cur_scr,      # VMEM (B, H) — this tick's input current (zeros if quiet)
+    ev_scr,       # VMEM (2, B, N_in) — the double buffer
+    sem,          # DMA semaphores (2,)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    reset_sub: bool,
+    boxcar_width: float,
+    quant: Optional[QuantizedMode],
+    y_scale: float,
+    error_mode: str,
+    target_amplitude: float,
+    infer_all: bool,
+    T: int,
+    nb: int,
+    bt: int,
+):
+    """:func:`_train_kernel` with double-buffered event streaming.  The
+    raster never enters the block pipeline: each active forward tick's
+    block is DMA'd once (the blocked variant's phase-2 grid re-touch is
+    gone entirely), quiet ticks skip both the copy and the input
+    projection, and the last forward tick's prefetch of the *next* batch
+    tile's first block stays in flight across the whole backward phase —
+    the deepest compute/copy overlap in the system."""
+    b = pl.program_id(0)   # batch tile
+    i = pl.program_id(1)   # 0..2T-1: forward ticks 0..T-1, then T-1..0
+    forward = i < T
+    # linearized forward step; clamped during the backward phase (where the
+    # gate disables every DMA predicate anyway)
+    s = b * T + jnp.minimum(i, T - 1)
+
+    @pl.when(i == 0)
+    def _init():
+        v_scr[...] = jnp.zeros_like(v_scr)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        y_scr[...] = jnp.zeros_like(y_scr)
+        xbar_scr[...] = jnp.zeros_like(xbar_scr)
+        pbar_scr[...] = jnp.zeros_like(pbar_scr)
+        zbar_scr[...] = jnp.zeros_like(zbar_scr)
+        accy_scr[...] = jnp.zeros_like(accy_scr)
+        nspk_scr[...] = jnp.zeros_like(nspk_scr)
+        f_scr[...] = jnp.zeros_like(f_scr)
+        acc_in_scr[...] = jnp.zeros_like(acc_in_scr)
+        acc_rec_scr[...] = jnp.zeros_like(acc_rec_scr)
+        acc_out_scr[...] = jnp.zeros_like(acc_out_scr)
+
+    active, slot = _stream_events(
+        bitmap_ref, raster_hbm, ev_scr, sem,
+        s=s, total=nb * T, T=T, bt=bt, gate=forward,
+    )
+    precision = None if quant is None else jax.lax.Precision.HIGHEST
+
+    # input projection + input trace, folded into the streaming step so a
+    # quiet tick runs neither (`active` already carries the phase gate)
+    @pl.when(active)
+    def _project():
+        x_t = ev_scr[slot]
+        cur_scr[...] = jnp.dot(x_t, w_in_ref[...],
+                               preferred_element_type=jnp.float32,
+                               precision=precision)
+        xbar_scr[...] = alpha * xbar_scr[...] + x_t
+
+    @pl.when(forward & jnp.logical_not(active))
+    def _quiet():
+        cur_scr[...] = jnp.zeros_like(cur_scr)
+        xbar_scr[...] = alpha * xbar_scr[...]
+
+    @pl.when(forward)
+    def _forward():
+        t = i
+        valid_t = valid_ref[0]                 # (B,)
+        z = z_scr[...]
+
+        v_new, z_new, y_new, h = tick_from_input_current(
+            cur_scr[...], v_scr[...], z, y_scr[...],
+            w_rec_ref[...], w_out_ref[...],
+            alpha=alpha, kappa=kappa, v_th=v_th, reset_sub=reset_sub,
+            boxcar_width=boxcar_width, quant=quant,
+        )
+        xbar = xbar_scr[...]                   # updated by the streaming step
+        pbar = alpha * pbar_scr[...] + z       # presyn trace: z BEFORE this tick
+        zbar = kappa * zbar_scr[...] + z_new
+
+        y_err = y_new * y_scale
+        if error_mode == "softmax":
+            err = jax.nn.softmax(y_err, axis=-1) - y_star_ref[...]
+        else:
+            err = y_err - target_amplitude * y_star_ref[...]
+        err = err * valid_t[:, None]
+
+        h_tr[pl.ds(t, 1)] = h[None]
+        xbar_tr[pl.ds(t, 1)] = xbar[None]
+        pbar_tr[pl.ds(t, 1)] = pbar[None]
+        zbar_tr[pl.ds(t, 1)] = zbar[None]
+        err_tr[pl.ds(t, 1)] = err[None]
+
+        v_scr[...] = v_new
+        z_scr[...] = z_new
+        y_scr[...] = y_new
+        pbar_scr[...] = pbar
+        zbar_scr[...] = zbar
+
+        w_inf = 1.0 if infer_all else valid_t[:, None]
+        accy_scr[...] += y_new * w_inf
+        nspk_scr[...] += (z_new * valid_t[:, None]).sum(axis=1, keepdims=True)
+
+    @pl.when(jnp.logical_not(forward))
+    def _backward():
+        t = 2 * T - 1 - i
+        err = err_tr[pl.ds(t, 1)][0]
+        L = jnp.dot(err, b_fb_ref[...].T, preferred_element_type=jnp.float32)
+        F = L + kappa * f_scr[...]
+        G = h_tr[pl.ds(t, 1)][0] * F
+
+        acc_in_scr[...] += jnp.dot(
+            xbar_tr[pl.ds(t, 1)][0].T, G, preferred_element_type=jnp.float32
+        )
+        acc_rec_scr[...] += jnp.dot(
+            pbar_tr[pl.ds(t, 1)][0].T, G, preferred_element_type=jnp.float32
+        )
+        acc_out_scr[...] += jnp.dot(
+            zbar_tr[pl.ds(t, 1)][0].T, err, preferred_element_type=jnp.float32
+        )
+        f_scr[...] = F
+
+    @pl.when(i == 2 * T - 1)
+    def _flush():
+        _flush_dw(b, acc_in_scr, acc_rec_scr, acc_out_scr,
+                  dw_in_ref, dw_rec_ref, dw_out_ref)
+        acc_y_ref[...] = accy_scr[...]
+        nspk_ref[...] = nspk_scr[...]
+
+
 def rsnn_train(
     raster: jax.Array,   # (T, B, N_in) f32
     y_star: jax.Array,   # (B, O) one-hot targets
@@ -351,6 +519,7 @@ def rsnn_train(
     infer_window: str = "valid",
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     batch_tile: Optional[int] = None,
+    stream: str = "blocked",
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused forward + factored e-prop update over one ``(T, B)`` launch.
@@ -394,13 +563,14 @@ def rsnn_train(
             "forward_traces + eprop_update pipeline, which streams traces "
             "through HBM"
         )
+    if stream not in ("blocked", "dma"):
+        raise ValueError(f"unknown stream mode {stream!r}")
     # pad rows: zero raster + zero valid -> zero err, zero dw, zero acc_y
     raster = _pad_batch_axis(raster, 1, b_pad)
     y_star = _pad_batch_axis(y_star, 0, b_pad)
     valid = _pad_batch_axis(valid, 1, b_pad)
 
-    kern = functools.partial(
-        _train_kernel,
+    consts = dict(
         alpha=float(alpha),
         kappa=float(kappa),
         v_th=float(v_th),
@@ -413,55 +583,99 @@ def rsnn_train(
         infer_all=(infer_window == "all"),
         T=T,
     )
-    # Phase 2 re-visits the tick blocks via (i mod T); their contents are
-    # ignored there (the traces live in VMEM) — the index map only has to be
-    # in-bounds.
-    full = lambda shape: pl.BlockSpec(shape, lambda b, i: tuple(0 for _ in shape))
+    out_shape = [
+        jax.ShapeDtypeStruct((n_in, H), jnp.float32),
+        jax.ShapeDtypeStruct((H, H), jnp.float32),
+        jax.ShapeDtypeStruct((H, O), jnp.float32),
+        jax.ShapeDtypeStruct((b_pad, O), dt),
+        jax.ShapeDtypeStruct((b_pad, 1), dt),
+    ]
+    scratch = [
+        pltpu.VMEM((bt, H), jnp.float32),      # v
+        pltpu.VMEM((bt, H), jnp.float32),      # z
+        pltpu.VMEM((bt, O), jnp.float32),      # y
+        pltpu.VMEM((bt, n_in), jnp.float32),   # xbar carry
+        pltpu.VMEM((bt, H), jnp.float32),      # pbar carry
+        pltpu.VMEM((bt, H), jnp.float32),      # zbar carry
+        pltpu.VMEM((bt, O), jnp.float32),      # acc_y
+        pltpu.VMEM((bt, 1), jnp.float32),      # n_spk
+        pltpu.VMEM((T, bt, H), jnp.float32),   # h trace
+        pltpu.VMEM((T, bt, n_in), jnp.float32),  # xbar trace
+        pltpu.VMEM((T, bt, H), jnp.float32),   # pbar trace
+        pltpu.VMEM((T, bt, H), jnp.float32),   # zbar trace
+        pltpu.VMEM((T, bt, O), jnp.float32),   # err trace
+        pltpu.VMEM((bt, H), jnp.float32),      # F carry
+        pltpu.VMEM((n_in, H), jnp.float32),    # dw_in acc
+        pltpu.VMEM((H, H), jnp.float32),       # dw_rec acc
+        pltpu.VMEM((H, O), jnp.float32),       # dw_out acc
+    ]
 
-    outs = pl.pallas_call(
-        kern,
-        grid=(nb, 2 * T),
-        in_specs=[
-            pl.BlockSpec((1, bt, n_in), lambda b, i: (i % T, b, 0)),
-            pl.BlockSpec((bt, O), lambda b, i: (b, 0)),
-            pl.BlockSpec((1, bt), lambda b, i: (i % T, b)),
-            full((n_in, H)),
-            full((H, H)),
-            full((H, O)),
-            full((H, O)),
-        ],
-        out_specs=[
-            full((n_in, H)), full((H, H)), full((H, O)),
-            pl.BlockSpec((bt, O), lambda b, i: (b, 0)),
-            pl.BlockSpec((bt, 1), lambda b, i: (b, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n_in, H), jnp.float32),
-            jax.ShapeDtypeStruct((H, H), jnp.float32),
-            jax.ShapeDtypeStruct((H, O), jnp.float32),
-            jax.ShapeDtypeStruct((b_pad, O), dt),
-            jax.ShapeDtypeStruct((b_pad, 1), dt),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bt, H), jnp.float32),      # v
-            pltpu.VMEM((bt, H), jnp.float32),      # z
-            pltpu.VMEM((bt, O), jnp.float32),      # y
-            pltpu.VMEM((bt, n_in), jnp.float32),   # xbar carry
-            pltpu.VMEM((bt, H), jnp.float32),      # pbar carry
-            pltpu.VMEM((bt, H), jnp.float32),      # zbar carry
-            pltpu.VMEM((bt, O), jnp.float32),      # acc_y
-            pltpu.VMEM((bt, 1), jnp.float32),      # n_spk
-            pltpu.VMEM((T, bt, H), jnp.float32),   # h trace
-            pltpu.VMEM((T, bt, n_in), jnp.float32),  # xbar trace
-            pltpu.VMEM((T, bt, H), jnp.float32),   # pbar trace
-            pltpu.VMEM((T, bt, H), jnp.float32),   # zbar trace
-            pltpu.VMEM((T, bt, O), jnp.float32),   # err trace
-            pltpu.VMEM((bt, H), jnp.float32),      # F carry
-            pltpu.VMEM((n_in, H), jnp.float32),    # dw_in acc
-            pltpu.VMEM((H, H), jnp.float32),       # dw_rec acc
-            pltpu.VMEM((H, O), jnp.float32),       # dw_out acc
-        ],
-        interpret=interpret,
-    )(raster, y_star, valid, w_in, w_rec, w_out, b_fb)
+    if stream == "dma":
+        bitmap = _block_bitmap(raster, bt)
+        kern = functools.partial(_train_dma_kernel, **consts, nb=nb, bt=bt)
+        full = lambda shape: pl.BlockSpec(
+            shape, lambda b, i, s_ref: tuple(0 for _ in shape)
+        )
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb, 2 * T),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),   # raster stays in HBM
+                pl.BlockSpec((bt, O), lambda b, i, s_ref: (b, 0)),
+                # valid pins to tick T-1 across phase 2: the block index is
+                # then unchanged step-to-step, so Pallas skips the re-fetch
+                # the blocked variant's (i mod T) map pays for
+                pl.BlockSpec(
+                    (1, bt), lambda b, i, s_ref: (jnp.minimum(i, T - 1), b)
+                ),
+                full((n_in, H)),
+                full((H, H)),
+                full((H, O)),
+                full((H, O)),
+            ],
+            out_specs=[
+                full((n_in, H)), full((H, H)), full((H, O)),
+                pl.BlockSpec((bt, O), lambda b, i, s_ref: (b, 0)),
+                pl.BlockSpec((bt, 1), lambda b, i, s_ref: (b, 0)),
+            ],
+            scratch_shapes=scratch + [
+                pltpu.VMEM((bt, H), jnp.float32),        # input current
+                pltpu.VMEM((2, bt, n_in), jnp.float32),  # event double buffer
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        )
+        outs = pl.pallas_call(
+            kern, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(bitmap, raster, y_star, valid, w_in, w_rec, w_out, b_fb)
+    else:
+        kern = functools.partial(_train_kernel, **consts)
+        # Phase 2 re-visits the tick blocks via (i mod T); their contents
+        # are ignored there (the traces live in VMEM) — the index map only
+        # has to be in-bounds.
+        full = lambda shape: pl.BlockSpec(
+            shape, lambda b, i: tuple(0 for _ in shape)
+        )
+        outs = pl.pallas_call(
+            kern,
+            grid=(nb, 2 * T),
+            in_specs=[
+                pl.BlockSpec((1, bt, n_in), lambda b, i: (i % T, b, 0)),
+                pl.BlockSpec((bt, O), lambda b, i: (b, 0)),
+                pl.BlockSpec((1, bt), lambda b, i: (i % T, b)),
+                full((n_in, H)),
+                full((H, H)),
+                full((H, O)),
+                full((H, O)),
+            ],
+            out_specs=[
+                full((n_in, H)), full((H, H)), full((H, O)),
+                pl.BlockSpec((bt, O), lambda b, i: (b, 0)),
+                pl.BlockSpec((bt, 1), lambda b, i: (b, 0)),
+            ],
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(raster, y_star, valid, w_in, w_rec, w_out, b_fb)
     dw_in, dw_rec, dw_out, acc_y, n_spk = outs
     return dw_in, dw_rec, dw_out, acc_y[:B], n_spk[:B]

@@ -25,7 +25,7 @@ def _interpret() -> bool:
 @partial(
     jax.jit,
     static_argnames=("alpha", "kappa", "v_th", "reset", "boxcar_width", "quant",
-                     "vmem_budget", "batch_tile"),
+                     "vmem_budget", "batch_tile", "stream"),
 )
 def rsnn_forward(
     raster: jax.Array,
@@ -41,19 +41,20 @@ def rsnn_forward(
     quant: Optional[QuantizedMode] = None,   # frozen dataclass: hashable static
     vmem_budget: int = _rsnn.DEFAULT_VMEM_BUDGET,
     batch_tile: Optional[int] = None,
+    stream: str = "blocked",
 ) -> Dict[str, jax.Array]:
     return _rsnn.rsnn_forward(
         raster, w_in, w_rec, w_out,
         alpha=alpha, kappa=kappa, v_th=v_th, reset=reset,
         boxcar_width=boxcar_width, quant=quant, vmem_budget=vmem_budget,
-        batch_tile=batch_tile, interpret=_interpret(),
+        batch_tile=batch_tile, stream=stream, interpret=_interpret(),
     )
 
 
 @partial(
     jax.jit,
     static_argnames=("alpha", "kappa", "v_th", "reset", "quant", "infer_window",
-                     "vmem_budget", "batch_tile"),
+                     "vmem_budget", "batch_tile", "stream"),
 )
 def rsnn_infer(
     raster: jax.Array,
@@ -70,21 +71,24 @@ def rsnn_infer(
     infer_window: str = "valid",
     vmem_budget: int = _rsnn.DEFAULT_VMEM_BUDGET,
     batch_tile: Optional[int] = None,
+    stream: str = "blocked",
 ) -> Tuple[jax.Array, jax.Array]:
     """Inference-specialized forward (serving path): batch-tiled grid,
-    VMEM-accumulated ``(acc_y, n_spk)``, no per-tick HBM streams."""
+    VMEM-accumulated ``(acc_y, n_spk)``, no per-tick HBM streams.
+    ``stream="dma"`` runs the double-buffered event-streaming variant
+    (quiet tick blocks neither fetched nor projected; bit-exact)."""
     return _rsnn.rsnn_infer(
         raster, valid, w_in, w_rec, w_out,
         alpha=alpha, kappa=kappa, v_th=v_th, reset=reset, quant=quant,
         infer_window=infer_window, vmem_budget=vmem_budget,
-        batch_tile=batch_tile, interpret=_interpret(),
+        batch_tile=batch_tile, stream=stream, interpret=_interpret(),
     )
 
 
 @partial(
     jax.jit,
     static_argnames=("alpha", "kappa", "v_th", "reset", "quant", "infer_window",
-                     "vmem_budget", "batch_tile"),
+                     "vmem_budget", "batch_tile", "stream"),
 )
 def rsnn_step_sessions(
     raster: jax.Array,
@@ -107,6 +111,7 @@ def rsnn_step_sessions(
     infer_window: str = "valid",
     vmem_budget: int = _rsnn.DEFAULT_VMEM_BUDGET,
     batch_tile: Optional[int] = None,
+    stream: str = "blocked",
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Session-stateful inference tile (streaming serving): carries are
     arguments and results, so the pool gather → step → scatter round-trip
@@ -115,7 +120,7 @@ def rsnn_step_sessions(
         raster, live, valid, v0, z0, y0, acc0, nspk0, w_in, w_rec, w_out,
         alpha=alpha, kappa=kappa, v_th=v_th, reset=reset, quant=quant,
         infer_window=infer_window, vmem_budget=vmem_budget,
-        batch_tile=batch_tile, interpret=_interpret(),
+        batch_tile=batch_tile, stream=stream, interpret=_interpret(),
     )
 
 
@@ -124,7 +129,7 @@ def rsnn_step_sessions(
     static_argnames=(
         "alpha", "kappa", "v_th", "reset", "boxcar_width", "quant",
         "error", "target_amplitude", "infer_window", "vmem_budget",
-        "batch_tile",
+        "batch_tile", "stream",
     ),
 )
 def rsnn_train(
@@ -147,16 +152,19 @@ def rsnn_train(
     infer_window: str = "valid",
     vmem_budget: int = _rsnn.DEFAULT_VMEM_BUDGET,
     batch_tile: Optional[int] = None,
+    stream: str = "blocked",
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused train op: forward + in-kernel readout error + reverse e-prop in
     one two-phase batch-tiled kernel, traces VMEM-resident per tile; any
-    batch size runs (tile rows derived from ``vmem_budget``)."""
+    batch size runs (tile rows derived from ``vmem_budget``).
+    ``stream="dma"`` double-buffers the event blocks (read once, active
+    blocks only) instead of the blocked pipeline's two-phase re-touch."""
     return _eprop.rsnn_train(
         raster, y_star, valid, w_in, w_rec, w_out, b_fb,
         alpha=alpha, kappa=kappa, v_th=v_th, reset=reset,
         boxcar_width=boxcar_width, quant=quant, error=error,
         target_amplitude=target_amplitude, infer_window=infer_window,
-        vmem_budget=vmem_budget, batch_tile=batch_tile,
+        vmem_budget=vmem_budget, batch_tile=batch_tile, stream=stream,
         interpret=_interpret(),
     )
 

@@ -256,10 +256,42 @@ def tick_transition(
     on TPU (the default f32 passes would round the >bf16-mantissa weights).
     """
     precision = None if quant is None else jax.lax.Precision.HIGHEST
-    current = jnp.dot(x_t, w_in, preferred_element_type=jnp.float32,
-                      precision=precision)
-    current += jnp.dot(z, w_rec, preferred_element_type=jnp.float32,
-                       precision=precision)
+    in_cur = jnp.dot(x_t, w_in, preferred_element_type=jnp.float32,
+                     precision=precision)
+    return tick_from_input_current(
+        in_cur, v, z, y, w_rec, w_out,
+        alpha=alpha, kappa=kappa, v_th=v_th, reset_sub=reset_sub,
+        boxcar_width=boxcar_width, quant=quant,
+    )
+
+
+def tick_from_input_current(
+    in_cur: jax.Array,  # (B, H) precomputed input current x_t @ w_in
+    v: jax.Array,       # (B, H) post-reset membrane
+    z: jax.Array,       # (B, H) spikes from the previous tick
+    y: jax.Array,       # (B, O) readout membrane
+    w_rec: jax.Array,   # (H, H) — pre-masked
+    w_out: jax.Array,   # (H, O)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    reset_sub: bool,
+    boxcar_width: float,
+    quant: Optional[QuantizedMode],
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """:func:`tick_transition` with the input projection hoisted out — the
+    entry point of the event-driven paths, where ``x_t @ w_in`` is either
+    skipped for all-quiet tick blocks (DMA-streaming kernels) or gathered
+    over active rows only (:func:`repro.kernels.events.
+    sparse_input_projection`).  ``in_cur + z @ w_rec`` reproduces the
+    original ``dot; +=`` operand order, so results are bit-identical to the
+    one-shot form — a quiet tick's skipped projection contributes the same
+    exact zeros the dense all-zero dot would.
+    """
+    precision = None if quant is None else jax.lax.Precision.HIGHEST
+    current = in_cur + jnp.dot(z, w_rec, preferred_element_type=jnp.float32,
+                               precision=precision)
 
     if quant is None:
         v_pre = alpha * v + current
@@ -280,6 +312,83 @@ def tick_transition(
     else:
         y_new = quant.sat(quant.leak(y, quant.kappa_reg) + y_lin)
     return v_new, z_new, y_new, h
+
+
+# ---------------------------------------------------------------------------
+# double-buffered event streaming (stream="dma" kernel variants)
+#
+# The software analogue of FeNN-DMA's DMA controller: instead of letting the
+# Pallas pipeline fetch every tick's (Bt, N_in) event block synchronously,
+# the raster stays in HBM (memory_space=ANY) and the kernel issues its own
+# async copies into a 2-slot VMEM buffer — tick s's block is consumed while
+# tick s+1's copy is in flight.  Steps are linearized as s = b·T + t across
+# the (nb, T) grid, so the prefetch of s+1 naturally crosses batch-tile
+# boundaries: tile b's last tick prefetches tile b+1's first block.
+#
+# A per-(tile, tick) activity bitmap rides in as a scalar-prefetch argument
+# and gates both the copy and the input projection: an all-quiet block is
+# neither fetched nor multiplied through (the in-kernel tick skip).  Only
+# the input projection may be skipped — the recurrent current and the
+# leak dynamics run every tick (membranes leak even with no input, and
+# recurrent spikes persist) — which is exactly what keeps the skip
+# bit-exact against the dense path.
+# ---------------------------------------------------------------------------
+
+
+def _block_bitmap(raster_padded: jax.Array, bt: int) -> jax.Array:
+    """Per-(batch-tile, tick) activity of a padded ``(T, b_pad, N)`` raster,
+    flattened to ``(nb·T,)`` int32 in linearized step order ``s = b·T + t``
+    (the scalar-prefetch argument of the DMA kernels)."""
+    T, b_pad, _ = raster_padded.shape
+    nb = b_pad // bt
+    act = (raster_padded.reshape(T, nb, bt, -1) != 0).any(axis=(2, 3))
+    return act.T.reshape(nb * T).astype(jnp.int32)
+
+
+def _stream_events(bitmap_ref, raster_hbm, ev_scr, sem, *, s, total, T, bt,
+                   gate=None):
+    """One double-buffered streaming step: warm-up copy at s=0, prefetch of
+    step s+1's block into the other slot, then the blocking wait for step
+    s's own copy.  Returns ``(active, slot)`` — when ``active`` (a traced
+    bool) holds, ``ev_scr[slot]`` now contains step s's event block.
+
+    Slot parity is safe with skipped steps: slot s%2 was last waited on at
+    step s-2, and a copy is only ever started for a step whose bitmap bit is
+    set — the same predicate that gates its wait.
+
+    ``gate`` (optional traced bool) disables the whole step when False —
+    the fused train kernel passes its forward-phase predicate so backward
+    steps neither wait nor prefetch (the next tile's warm-up copy, started
+    at the last forward tick, stays in flight across the entire backward
+    phase).
+    """
+    def dma(step, slot):
+        return pltpu.make_async_copy(
+            raster_hbm.at[step % T, pl.ds((step // T) * bt, bt), :],
+            ev_scr.at[slot],
+            sem.at[slot],
+        )
+
+    active = bitmap_ref[s] > 0
+    nxt = jnp.minimum(s + 1, total - 1)
+    active_next = (s + 1 < total) & (bitmap_ref[nxt] > 0)
+    if gate is not None:
+        active = gate & active
+        active_next = gate & active_next
+
+    @pl.when((s == 0) & active)
+    def _warm():
+        dma(s, s % 2).start()
+
+    @pl.when(active_next)
+    def _prefetch():
+        dma(s + 1, (s + 1) % 2).start()
+
+    @pl.when(active)
+    def _wait():
+        dma(s, s % 2).wait()
+
+    return active, s % 2
 
 
 # ---------------------------------------------------------------------------
@@ -354,6 +463,100 @@ def _kernel(
     v_out_ref[0] = v_new
 
 
+def _forward_dma_kernel(
+    bitmap_ref,   # (nb·T,) int32 scalar-prefetch activity bitmap
+    raster_hbm,   # (T, b_pad, N_in) — stays in HBM, streamed manually
+    w_in_ref,     # (N_in, H)
+    w_rec_ref,    # (H, H)
+    w_out_ref,    # (H, O)
+    z_out_ref,    # (1, B, H)
+    h_out_ref,    # (1, B, H)
+    xbar_out_ref, # (1, B, N_in)
+    pbar_out_ref, # (1, B, H)
+    zbar_out_ref, # (1, B, H)
+    y_out_ref,    # (1, B, O)
+    v_out_ref,    # (1, B, H)
+    v_scr,        # VMEM (B, H)
+    z_scr,        # VMEM (B, H)
+    y_scr,        # VMEM (B, O)
+    xbar_scr,     # VMEM (B, N_in)
+    pbar_scr,     # VMEM (B, H)
+    zbar_scr,     # VMEM (B, H)
+    cur_scr,      # VMEM (B, H) — this tick's input current (zeros if quiet)
+    ev_scr,       # VMEM (2, B, N_in) — the double buffer
+    sem,          # DMA semaphores (2,)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    reset_sub: bool,
+    boxcar_width: float,
+    quant: Optional[QuantizedMode],
+    T: int,
+    nb: int,
+    bt: int,
+):
+    """:func:`_kernel` with double-buffered event streaming: the raster
+    block of tick s+1 is copied in while tick s computes, and an all-quiet
+    block skips both the copy and the ``x_t @ w_in`` projection (the
+    recurrent current, leaks and trace filters still run — that is what
+    keeps the skip bit-exact)."""
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    s = b * T + t
+
+    @pl.when(t == 0)
+    def _init():
+        v_scr[...] = jnp.zeros_like(v_scr)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        y_scr[...] = jnp.zeros_like(y_scr)
+        xbar_scr[...] = jnp.zeros_like(xbar_scr)
+        pbar_scr[...] = jnp.zeros_like(pbar_scr)
+        zbar_scr[...] = jnp.zeros_like(zbar_scr)
+
+    active, slot = _stream_events(
+        bitmap_ref, raster_hbm, ev_scr, sem, s=s, total=nb * T, T=T, bt=bt
+    )
+    precision = None if quant is None else jax.lax.Precision.HIGHEST
+
+    @pl.when(active)
+    def _project():
+        x_t = ev_scr[slot]
+        cur_scr[...] = jnp.dot(x_t, w_in_ref[...],
+                               preferred_element_type=jnp.float32,
+                               precision=precision)
+        xbar_scr[...] = alpha * xbar_scr[...] + x_t
+
+    @pl.when(jnp.logical_not(active))
+    def _quiet():
+        cur_scr[...] = jnp.zeros_like(cur_scr)
+        xbar_scr[...] = alpha * xbar_scr[...]
+
+    z = z_scr[...]
+    v_new, z_new, y_new, h = tick_from_input_current(
+        cur_scr[...], v_scr[...], z, y_scr[...],
+        w_rec_ref[...], w_out_ref[...],
+        alpha=alpha, kappa=kappa, v_th=v_th, reset_sub=reset_sub,
+        boxcar_width=boxcar_width, quant=quant,
+    )
+    pbar = alpha * pbar_scr[...] + z          # presyn trace: z BEFORE this tick
+    zbar = kappa * zbar_scr[...] + z_new
+
+    v_scr[...] = v_new
+    z_scr[...] = z_new
+    y_scr[...] = y_new
+    pbar_scr[...] = pbar
+    zbar_scr[...] = zbar
+
+    z_out_ref[0] = z_new
+    h_out_ref[0] = h
+    xbar_out_ref[0] = xbar_scr[...]
+    pbar_out_ref[0] = pbar
+    zbar_out_ref[0] = zbar
+    y_out_ref[0] = y_new
+    v_out_ref[0] = v_new
+
+
 def rsnn_forward(
     raster: jax.Array,   # (T, B, N_in) f32
     w_in: jax.Array,     # (N_in, H)
@@ -368,6 +571,7 @@ def rsnn_forward(
     quant: Optional[QuantizedMode] = None,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     batch_tile: Optional[int] = None,
+    stream: str = "blocked",
     interpret: bool = False,
 ) -> Dict[str, jax.Array]:
     """Fused forward over one ``(T, B)`` launch; returns per-tick tensors
@@ -394,13 +598,14 @@ def rsnn_forward(
     dt = raster.dtype
     if quant is not None:
         alpha, kappa, v_th = quant.alpha, quant.kappa, float(quant.threshold)
+    if stream not in ("blocked", "dma"):
+        raise ValueError(f"unknown stream mode {stream!r}")
     bt, nb, b_pad = _tile_batch(
         B, batch_tile or max_forward_tile(n_in, H, O, vmem_budget)
     )
     raster = _pad_batch_axis(raster, 1, b_pad)
 
-    kern = functools.partial(
-        _kernel,
+    consts = dict(
         alpha=float(alpha),
         kappa=float(kappa),
         v_th=float(v_th),
@@ -408,41 +613,83 @@ def rsnn_forward(
         boxcar_width=float(boxcar_width),
         quant=quant,
     )
-    tick_spec = lambda cols: pl.BlockSpec((1, bt, cols), lambda b, t: (t, b, 0))
-    full = lambda shape: pl.BlockSpec(shape, lambda b, t: tuple(0 for _ in shape))
+    out_shape = [
+        jax.ShapeDtypeStruct((T, b_pad, H), dt),
+        jax.ShapeDtypeStruct((T, b_pad, H), dt),
+        jax.ShapeDtypeStruct((T, b_pad, n_in), dt),
+        jax.ShapeDtypeStruct((T, b_pad, H), dt),
+        jax.ShapeDtypeStruct((T, b_pad, H), dt),
+        jax.ShapeDtypeStruct((T, b_pad, O), dt),
+        jax.ShapeDtypeStruct((T, b_pad, H), dt),
+    ]
+    carry_scratch = [
+        pltpu.VMEM((bt, H), jnp.float32),
+        pltpu.VMEM((bt, H), jnp.float32),
+        pltpu.VMEM((bt, O), jnp.float32),
+        pltpu.VMEM((bt, n_in), jnp.float32),
+        pltpu.VMEM((bt, H), jnp.float32),
+        pltpu.VMEM((bt, H), jnp.float32),
+    ]
 
-    outs = pl.pallas_call(
-        kern,
-        grid=(nb, T),
-        in_specs=[
-            tick_spec(n_in),
-            full((n_in, H)),
-            full((H, H)),
-            full((H, O)),
-        ],
-        out_specs=[
-            tick_spec(H), tick_spec(H), tick_spec(n_in),
-            tick_spec(H), tick_spec(H), tick_spec(O), tick_spec(H),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((T, b_pad, H), dt),
-            jax.ShapeDtypeStruct((T, b_pad, H), dt),
-            jax.ShapeDtypeStruct((T, b_pad, n_in), dt),
-            jax.ShapeDtypeStruct((T, b_pad, H), dt),
-            jax.ShapeDtypeStruct((T, b_pad, H), dt),
-            jax.ShapeDtypeStruct((T, b_pad, O), dt),
-            jax.ShapeDtypeStruct((T, b_pad, H), dt),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bt, H), jnp.float32),
-            pltpu.VMEM((bt, H), jnp.float32),
-            pltpu.VMEM((bt, O), jnp.float32),
-            pltpu.VMEM((bt, n_in), jnp.float32),
-            pltpu.VMEM((bt, H), jnp.float32),
-            pltpu.VMEM((bt, H), jnp.float32),
-        ],
-        interpret=interpret,
-    )(raster, w_in, w_rec, w_out)
+    if stream == "dma":
+        bitmap = _block_bitmap(raster, bt)
+        kern = functools.partial(
+            _forward_dma_kernel, **consts, T=T, nb=nb, bt=bt
+        )
+        tick_spec = lambda cols: pl.BlockSpec(
+            (1, bt, cols), lambda b, t, s_ref: (t, b, 0)
+        )
+        full = lambda shape: pl.BlockSpec(
+            shape, lambda b, t, s_ref: tuple(0 for _ in shape)
+        )
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb, T),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),   # raster stays in HBM
+                full((n_in, H)),
+                full((H, H)),
+                full((H, O)),
+            ],
+            out_specs=[
+                tick_spec(H), tick_spec(H), tick_spec(n_in),
+                tick_spec(H), tick_spec(H), tick_spec(O), tick_spec(H),
+            ],
+            scratch_shapes=carry_scratch + [
+                pltpu.VMEM((bt, H), jnp.float32),        # input current
+                pltpu.VMEM((2, bt, n_in), jnp.float32),  # event double buffer
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        )
+        outs = pl.pallas_call(
+            kern, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(bitmap, raster, w_in, w_rec, w_out)
+    else:
+        kern = functools.partial(_kernel, **consts)
+        tick_spec = lambda cols: pl.BlockSpec(
+            (1, bt, cols), lambda b, t: (t, b, 0)
+        )
+        full = lambda shape: pl.BlockSpec(
+            shape, lambda b, t: tuple(0 for _ in shape)
+        )
+        outs = pl.pallas_call(
+            kern,
+            grid=(nb, T),
+            in_specs=[
+                tick_spec(n_in),
+                full((n_in, H)),
+                full((H, H)),
+                full((H, O)),
+            ],
+            out_specs=[
+                tick_spec(H), tick_spec(H), tick_spec(n_in),
+                tick_spec(H), tick_spec(H), tick_spec(O), tick_spec(H),
+            ],
+            out_shape=out_shape,
+            scratch_shapes=carry_scratch,
+            interpret=interpret,
+        )(raster, w_in, w_rec, w_out)
     z, h, xbar, pbar, zbar, y, v = (o[:, :B] for o in outs)
     return {"z": z, "h": h, "xbar": xbar, "pbar": pbar, "zbar": zbar, "y": y,
             "v": v}
@@ -510,6 +757,84 @@ def _infer_kernel(
         nspk_ref[...] = nspk_scr[...]
 
 
+def _infer_dma_kernel(
+    bitmap_ref,   # (nb·T,) int32 scalar-prefetch activity bitmap
+    raster_hbm,   # (T, b_pad, N_in) — stays in HBM, streamed manually
+    valid_ref,    # (1, B)
+    w_in_ref,     # (N_in, H)
+    w_rec_ref,    # (H, H)
+    w_out_ref,    # (H, O)
+    acc_y_ref,    # (B, O) out
+    nspk_ref,     # (B, 1) out
+    v_scr,        # VMEM (B, H)
+    z_scr,        # VMEM (B, H)
+    y_scr,        # VMEM (B, O)
+    acc_scr,      # VMEM (B, O)
+    nspk_scr,     # VMEM (B, 1)
+    cur_scr,      # VMEM (B, H) — this tick's input current (zeros if quiet)
+    ev_scr,       # VMEM (2, B, N_in) — the double buffer
+    sem,          # DMA semaphores (2,)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    reset_sub: bool,
+    quant: Optional[QuantizedMode],
+    infer_all: bool,
+    T: int,
+    nb: int,
+    bt: int,
+):
+    """:func:`_infer_kernel` with double-buffered event streaming and the
+    in-kernel quiet-tick skip — the event-driven serving hot path."""
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    s = b * T + t
+
+    @pl.when(t == 0)
+    def _init():
+        v_scr[...] = jnp.zeros_like(v_scr)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        y_scr[...] = jnp.zeros_like(y_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        nspk_scr[...] = jnp.zeros_like(nspk_scr)
+
+    active, slot = _stream_events(
+        bitmap_ref, raster_hbm, ev_scr, sem, s=s, total=nb * T, T=T, bt=bt
+    )
+    precision = None if quant is None else jax.lax.Precision.HIGHEST
+
+    @pl.when(active)
+    def _project():
+        cur_scr[...] = jnp.dot(ev_scr[slot], w_in_ref[...],
+                               preferred_element_type=jnp.float32,
+                               precision=precision)
+
+    @pl.when(jnp.logical_not(active))
+    def _quiet():
+        cur_scr[...] = jnp.zeros_like(cur_scr)
+
+    valid_t = valid_ref[0]                     # (B,)
+    v_new, z_new, y_new, _ = tick_from_input_current(
+        cur_scr[...], v_scr[...], z_scr[...], y_scr[...],
+        w_rec_ref[...], w_out_ref[...],
+        alpha=alpha, kappa=kappa, v_th=v_th, reset_sub=reset_sub,
+        boxcar_width=0.5, quant=quant,
+    )
+    v_scr[...] = v_new
+    z_scr[...] = z_new
+    y_scr[...] = y_new
+
+    w_inf = 1.0 if infer_all else valid_t[:, None]
+    acc_scr[...] += y_new * w_inf
+    nspk_scr[...] += (z_new * valid_t[:, None]).sum(axis=1, keepdims=True)
+
+    @pl.when(t == T - 1)
+    def _flush():
+        acc_y_ref[...] = acc_scr[...]
+        nspk_ref[...] = nspk_scr[...]
+
+
 def rsnn_infer(
     raster: jax.Array,   # (T, B, N_in) f32
     valid: jax.Array,    # (T, B) f32 TARGET_VALID mask
@@ -525,6 +850,7 @@ def rsnn_infer(
     infer_window: str = "valid",
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     batch_tile: Optional[int] = None,
+    stream: str = "blocked",
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Inference-only forward over one ``(T, B)`` launch — the serving path.
@@ -544,14 +870,15 @@ def rsnn_infer(
     dt = raster.dtype
     if quant is not None:
         alpha, kappa, v_th = quant.alpha, quant.kappa, float(quant.threshold)
+    if stream not in ("blocked", "dma"):
+        raise ValueError(f"unknown stream mode {stream!r}")
     bt, nb, b_pad = _tile_batch(
         B, batch_tile or max_forward_tile(n_in, H, O, vmem_budget)
     )
     raster = _pad_batch_axis(raster, 1, b_pad)
     valid = _pad_batch_axis(valid, 1, b_pad)
 
-    kern = functools.partial(
-        _infer_kernel,
+    consts = dict(
         alpha=float(alpha),
         kappa=float(kappa),
         v_th=float(v_th),
@@ -560,35 +887,71 @@ def rsnn_infer(
         infer_all=(infer_window == "all"),
         T=T,
     )
-    full = lambda shape: pl.BlockSpec(shape, lambda b, t: tuple(0 for _ in shape))
+    out_shape = [
+        jax.ShapeDtypeStruct((b_pad, O), dt),
+        jax.ShapeDtypeStruct((b_pad, 1), dt),
+    ]
+    carry_scratch = [
+        pltpu.VMEM((bt, H), jnp.float32),
+        pltpu.VMEM((bt, H), jnp.float32),
+        pltpu.VMEM((bt, O), jnp.float32),
+        pltpu.VMEM((bt, O), jnp.float32),
+        pltpu.VMEM((bt, 1), jnp.float32),
+    ]
 
-    acc_y, n_spk = pl.pallas_call(
-        kern,
-        grid=(nb, T),
-        in_specs=[
-            pl.BlockSpec((1, bt, n_in), lambda b, t: (t, b, 0)),
-            pl.BlockSpec((1, bt), lambda b, t: (t, b)),
-            full((n_in, H)),
-            full((H, H)),
-            full((H, O)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bt, O), lambda b, t: (b, 0)),
-            pl.BlockSpec((bt, 1), lambda b, t: (b, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b_pad, O), dt),
-            jax.ShapeDtypeStruct((b_pad, 1), dt),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bt, H), jnp.float32),
-            pltpu.VMEM((bt, H), jnp.float32),
-            pltpu.VMEM((bt, O), jnp.float32),
-            pltpu.VMEM((bt, O), jnp.float32),
-            pltpu.VMEM((bt, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )(raster, valid, w_in, w_rec, w_out)
+    if stream == "dma":
+        bitmap = _block_bitmap(raster, bt)
+        kern = functools.partial(_infer_dma_kernel, **consts, nb=nb, bt=bt)
+        full = lambda shape: pl.BlockSpec(
+            shape, lambda b, t, s_ref: tuple(0 for _ in shape)
+        )
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb, T),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),   # raster stays in HBM
+                pl.BlockSpec((1, bt), lambda b, t, s_ref: (t, b)),
+                full((n_in, H)),
+                full((H, H)),
+                full((H, O)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bt, O), lambda b, t, s_ref: (b, 0)),
+                pl.BlockSpec((bt, 1), lambda b, t, s_ref: (b, 0)),
+            ],
+            scratch_shapes=carry_scratch + [
+                pltpu.VMEM((bt, H), jnp.float32),        # input current
+                pltpu.VMEM((2, bt, n_in), jnp.float32),  # event double buffer
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        )
+        acc_y, n_spk = pl.pallas_call(
+            kern, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(bitmap, raster, valid, w_in, w_rec, w_out)
+    else:
+        kern = functools.partial(_infer_kernel, **consts)
+        full = lambda shape: pl.BlockSpec(
+            shape, lambda b, t: tuple(0 for _ in shape)
+        )
+        acc_y, n_spk = pl.pallas_call(
+            kern,
+            grid=(nb, T),
+            in_specs=[
+                pl.BlockSpec((1, bt, n_in), lambda b, t: (t, b, 0)),
+                pl.BlockSpec((1, bt), lambda b, t: (t, b)),
+                full((n_in, H)),
+                full((H, H)),
+                full((H, O)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bt, O), lambda b, t: (b, 0)),
+                pl.BlockSpec((bt, 1), lambda b, t: (b, 0)),
+            ],
+            out_shape=out_shape,
+            scratch_shapes=carry_scratch,
+            interpret=interpret,
+        )(raster, valid, w_in, w_rec, w_out)
     return acc_y[:B], n_spk[:B]
 
 
@@ -672,6 +1035,102 @@ def _session_kernel(
         nspk_out_ref[...] = nspk_scr[...]
 
 
+def _session_dma_kernel(
+    bitmap_ref,   # (nb·T,) int32 scalar-prefetch activity bitmap
+    raster_hbm,   # (T, b_pad, N_in) — stays in HBM, streamed manually
+    live_ref,     # (1, B)
+    valid_ref,    # (1, B)
+    v0_ref,       # (B, H)
+    z0_ref,       # (B, H)
+    y0_ref,       # (B, O)
+    acc0_ref,     # (B, O)
+    nspk0_ref,    # (B, 1)
+    w_in_ref,     # (N_in, H)
+    w_rec_ref,    # (H, H)
+    w_out_ref,    # (H, O)
+    v_out_ref,    # (B, H)
+    z_out_ref,    # (B, H)
+    y_out_ref,    # (B, O)
+    acc_out_ref,  # (B, O)
+    nspk_out_ref, # (B, 1)
+    v_scr,        # VMEM (B, H)
+    z_scr,        # VMEM (B, H)
+    y_scr,        # VMEM (B, O)
+    acc_scr,      # VMEM (B, O)
+    nspk_scr,     # VMEM (B, 1)
+    cur_scr,      # VMEM (B, H) — this tick's input current (zeros if quiet)
+    ev_scr,       # VMEM (2, B, N_in) — the double buffer
+    sem,          # DMA semaphores (2,)
+    *,
+    alpha: float,
+    kappa: float,
+    v_th: float,
+    reset_sub: bool,
+    quant: Optional[QuantizedMode],
+    infer_all: bool,
+    T: int,
+    nb: int,
+    bt: int,
+):
+    """:func:`_session_kernel` with double-buffered event streaming — the
+    event-driven variant of the streaming-serving tick tile.  Sparse
+    session traffic (idle sessions, short chunks padded into the tile)
+    makes the quiet-block skip especially effective here: a tick where no
+    packed session has input is neither fetched nor projected."""
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    s = b * T + t
+
+    @pl.when(t == 0)
+    def _load():
+        v_scr[...] = v0_ref[...]
+        z_scr[...] = z0_ref[...]
+        y_scr[...] = y0_ref[...]
+        acc_scr[...] = acc0_ref[...]
+        nspk_scr[...] = nspk0_ref[...]
+
+    active, slot = _stream_events(
+        bitmap_ref, raster_hbm, ev_scr, sem, s=s, total=nb * T, T=T, bt=bt
+    )
+    precision = None if quant is None else jax.lax.Precision.HIGHEST
+
+    @pl.when(active)
+    def _project():
+        cur_scr[...] = jnp.dot(ev_scr[slot], w_in_ref[...],
+                               preferred_element_type=jnp.float32,
+                               precision=precision)
+
+    @pl.when(jnp.logical_not(active))
+    def _quiet():
+        cur_scr[...] = jnp.zeros_like(cur_scr)
+
+    live_t = live_ref[0][:, None]              # (B, 1)
+    valid_t = valid_ref[0][:, None]
+
+    v_new, z_new, y_new, _ = tick_from_input_current(
+        cur_scr[...], v_scr[...], z_scr[...], y_scr[...],
+        w_rec_ref[...], w_out_ref[...],
+        alpha=alpha, kappa=kappa, v_th=v_th, reset_sub=reset_sub,
+        boxcar_width=0.5, quant=quant,
+    )
+    keep = live_t > 0
+    v_scr[...] = jnp.where(keep, v_new, v_scr[...])
+    z_scr[...] = jnp.where(keep, z_new, z_scr[...])
+    y_scr[...] = jnp.where(keep, y_new, y_scr[...])
+
+    w_acc = live_t if infer_all else valid_t
+    acc_scr[...] += y_new * w_acc
+    nspk_scr[...] += (z_new * valid_t).sum(axis=1, keepdims=True)
+
+    @pl.when(t == T - 1)
+    def _flush():
+        v_out_ref[...] = v_scr[...]
+        z_out_ref[...] = z_scr[...]
+        y_out_ref[...] = y_scr[...]
+        acc_out_ref[...] = acc_scr[...]
+        nspk_out_ref[...] = nspk_scr[...]
+
+
 def rsnn_step_sessions(
     raster: jax.Array,   # (T, B, N_in) f32 — one tick-tile of B sessions
     live: jax.Array,     # (T, B) f32 dynamics mask
@@ -693,6 +1152,7 @@ def rsnn_step_sessions(
     infer_window: str = "valid",
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     batch_tile: Optional[int] = None,
+    stream: str = "blocked",
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Session-stateful inference over one ``(T, B)`` tick-tile — the
@@ -713,6 +1173,8 @@ def rsnn_step_sessions(
     dt = raster.dtype
     if quant is not None:
         alpha, kappa, v_th = quant.alpha, quant.kappa, float(quant.threshold)
+    if stream not in ("blocked", "dma"):
+        raise ValueError(f"unknown stream mode {stream!r}")
     bt, nb, b_pad = _tile_batch(
         B, batch_tile or max_forward_tile(n_in, H, O, vmem_budget)
     )
@@ -723,8 +1185,7 @@ def rsnn_step_sessions(
         _pad_batch_axis(c, 0, b_pad) for c in (v0, z0, y0, acc0, nspk0)
     ]
 
-    kern = functools.partial(
-        _session_kernel,
+    consts = dict(
         alpha=float(alpha),
         kappa=float(kappa),
         v_th=float(v_th),
@@ -733,37 +1194,73 @@ def rsnn_step_sessions(
         infer_all=(infer_window == "all"),
         T=T,
     )
-    full = lambda shape: pl.BlockSpec(shape, lambda b, t: tuple(0 for _ in shape))
-    row = lambda cols: pl.BlockSpec((bt, cols), lambda b, t: (b, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((b_pad, H), dt),
+        jax.ShapeDtypeStruct((b_pad, H), dt),
+        jax.ShapeDtypeStruct((b_pad, O), dt),
+        jax.ShapeDtypeStruct((b_pad, O), dt),
+        jax.ShapeDtypeStruct((b_pad, 1), dt),
+    ]
+    carry_scratch = [
+        pltpu.VMEM((bt, H), jnp.float32),
+        pltpu.VMEM((bt, H), jnp.float32),
+        pltpu.VMEM((bt, O), jnp.float32),
+        pltpu.VMEM((bt, O), jnp.float32),
+        pltpu.VMEM((bt, 1), jnp.float32),
+    ]
 
-    outs = pl.pallas_call(
-        kern,
-        grid=(nb, T),
-        in_specs=[
-            pl.BlockSpec((1, bt, n_in), lambda b, t: (t, b, 0)),
-            pl.BlockSpec((1, bt), lambda b, t: (t, b)),
-            pl.BlockSpec((1, bt), lambda b, t: (t, b)),
-            row(H), row(H), row(O), row(O), row(1),
-            full((n_in, H)),
-            full((H, H)),
-            full((H, O)),
-        ],
-        out_specs=[row(H), row(H), row(O), row(O), row(1)],
-        out_shape=[
-            jax.ShapeDtypeStruct((b_pad, H), dt),
-            jax.ShapeDtypeStruct((b_pad, H), dt),
-            jax.ShapeDtypeStruct((b_pad, O), dt),
-            jax.ShapeDtypeStruct((b_pad, O), dt),
-            jax.ShapeDtypeStruct((b_pad, 1), dt),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bt, H), jnp.float32),
-            pltpu.VMEM((bt, H), jnp.float32),
-            pltpu.VMEM((bt, O), jnp.float32),
-            pltpu.VMEM((bt, O), jnp.float32),
-            pltpu.VMEM((bt, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )(raster, live, valid, *carries, w_in, w_rec, w_out)
+    if stream == "dma":
+        bitmap = _block_bitmap(raster, bt)
+        kern = functools.partial(_session_dma_kernel, **consts, nb=nb, bt=bt)
+        full = lambda shape: pl.BlockSpec(
+            shape, lambda b, t, s_ref: tuple(0 for _ in shape)
+        )
+        row = lambda cols: pl.BlockSpec((bt, cols), lambda b, t, s_ref: (b, 0))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb, T),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),   # raster stays in HBM
+                pl.BlockSpec((1, bt), lambda b, t, s_ref: (t, b)),
+                pl.BlockSpec((1, bt), lambda b, t, s_ref: (t, b)),
+                row(H), row(H), row(O), row(O), row(1),
+                full((n_in, H)),
+                full((H, H)),
+                full((H, O)),
+            ],
+            out_specs=[row(H), row(H), row(O), row(O), row(1)],
+            scratch_shapes=carry_scratch + [
+                pltpu.VMEM((bt, H), jnp.float32),        # input current
+                pltpu.VMEM((2, bt, n_in), jnp.float32),  # event double buffer
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        )
+        outs = pl.pallas_call(
+            kern, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(bitmap, raster, live, valid, *carries, w_in, w_rec, w_out)
+    else:
+        kern = functools.partial(_session_kernel, **consts)
+        full = lambda shape: pl.BlockSpec(
+            shape, lambda b, t: tuple(0 for _ in shape)
+        )
+        row = lambda cols: pl.BlockSpec((bt, cols), lambda b, t: (b, 0))
+        outs = pl.pallas_call(
+            kern,
+            grid=(nb, T),
+            in_specs=[
+                pl.BlockSpec((1, bt, n_in), lambda b, t: (t, b, 0)),
+                pl.BlockSpec((1, bt), lambda b, t: (t, b)),
+                pl.BlockSpec((1, bt), lambda b, t: (t, b)),
+                row(H), row(H), row(O), row(O), row(1),
+                full((n_in, H)),
+                full((H, H)),
+                full((H, O)),
+            ],
+            out_specs=[row(H), row(H), row(O), row(O), row(1)],
+            out_shape=out_shape,
+            scratch_shapes=carry_scratch,
+            interpret=interpret,
+        )(raster, live, valid, *carries, w_in, w_rec, w_out)
     v, z, y, acc_y, n_spk = (o[:B] for o in outs)
     return v, z, y, acc_y, n_spk

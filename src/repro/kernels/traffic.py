@@ -41,11 +41,29 @@ constant grid index maps, so both stay VMEM-resident across every batch tile
 zero streams of the last tile's pad rows.  See
 :func:`train_fused_tiled_bytes` / :func:`infer_fused_tiled_bytes` (the
 as-executed padded counts) and the per-tile :func:`tile_table`.
+
+**Event-driven (``stream="dma"``) variants** are density-parameterized:
+the raster never enters the block pipeline — the kernel DMAs only the
+*active* ``(batch-tile, tick)`` event blocks (per-block activity bitmap,
+scalar-prefetched), so raster bytes scale with the measured block density
+(:func:`repro.kernels.events.block_density`), and the fused train kernel
+sheds its phase-2 raster re-touch entirely (read once, not twice).  The
+``*_dma_tiled_bytes`` formulas below are the as-executed counts at a given
+density; :func:`op_table` grows dma rows when a density is passed.
+
+**Roofline helpers** close the loop from analytic bytes to wall-clock:
+:func:`device_roofline` resolves the running device's peak HBM bandwidth
+(TPU generations from ``launch/mesh.py`` constants; a coarse DDR figure as
+the CPU fallback, flagged unmeasured), and :func:`bandwidth_table` turns
+``(bytes, seconds)`` benchmark records into achieved-GB/s versus roofline
+rows — the table ``benchmarks/bench_kernels.py`` uploads and
+``benchmarks/roofline.py`` tunes ``Bt``/``vmem_budget`` against.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+import math
+from typing import Dict, List, Optional
 
 # One element-size / weight-count / tile-size source with the VMEM budget
 # helpers (the batch-tiled grids derive their tile rows from the same place).
@@ -206,6 +224,202 @@ def stream_step_tiled_bytes(
     return _F32 * (reads + writes)
 
 
+# ---------------------------------------------------------------------------
+# event-driven (stream="dma") as-executed byte formulas — density-parameterized
+# ---------------------------------------------------------------------------
+
+
+def _dma_tile(B: int, T: int, bt: int) -> tuple:
+    """``(bp, nb, bitmap_bytes)`` shared by the dma formulas: padded rows,
+    tile count, and the int32 activity bitmap's own stream (one word per
+    ``(tile, tick)`` block — the scalar-prefetch argument)."""
+    bp = _cdiv(B, bt) * bt
+    nb = bp // bt
+    return bp, nb, 4 * nb * T
+
+
+def _active_blocks(nb: int, T: int, block_density: float) -> int:
+    """As-executed active block count at a measured block density — rounded
+    up (a partially quiet launch never moves less than its active blocks)."""
+    return min(nb * T, int(math.ceil(float(block_density) * nb * T)))
+
+
+def infer_dma_tiled_bytes(
+    T: int,
+    B: int,
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    block_density: float = 1.0,
+    batch_tile: Optional[int] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> int:
+    """Event-streaming inference launch (``rsnn_infer(stream="dma")``):
+    only the *active* event blocks are DMA'd from HBM (quiet ticks are
+    skipped via the bitmap), plus the bitmap itself and the valid mask;
+    weights and the ``(B, O)`` outputs as in the blocked variant."""
+    bt = batch_tile or max_forward_tile(n_in, n_hid, n_out, vmem_budget)
+    bt = max(1, min(bt, B))
+    bp, nb, bitmap = _dma_tile(B, T, bt)
+    active = _active_blocks(nb, T, block_density)
+    reads = _F32 * (
+        active * bt * n_in + T * bp + _weights(n_in, n_hid, n_out)
+    ) + bitmap
+    writes = _F32 * (bp * n_out + bp)
+    return reads + writes
+
+
+def train_dma_tiled_bytes(
+    T: int,
+    B: int,
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    block_density: float = 1.0,
+    batch_tile: Optional[int] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> int:
+    """Event-streaming fused train launch (``rsnn_train(stream="dma")``):
+    active event blocks are DMA'd **once** (the blocked variant's phase-2
+    grid re-touch is gone), the valid mask is pinned to one block across
+    phase 2 (fetched once, not twice), plus targets, weights + feedback and
+    the bitmap; writes unchanged (``dw`` + readout accumulator + counts)."""
+    bt = batch_tile or max_fused_train_tile(T, n_in, n_hid, n_out, vmem_budget)
+    bt = max(1, min(bt, B))
+    bp, nb, bitmap = _dma_tile(B, T, bt)
+    active = _active_blocks(nb, T, block_density)
+    reads = _F32 * (
+        active * bt * n_in + T * bp + bp * n_out
+        + _weights(n_in, n_hid, n_out, feedback=True)
+    ) + bitmap
+    writes = _F32 * (_dw(n_in, n_hid, n_out) + bp * n_out + bp)
+    return reads + writes
+
+
+def stream_step_dma_tiled_bytes(
+    T: int,
+    B: int,
+    n_in: int,
+    n_hid: int,
+    n_out: int,
+    block_density: float = 1.0,
+    batch_tile: Optional[int] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> int:
+    """Event-streaming session-step launch
+    (``rsnn_step_sessions(stream="dma")``): the dma inference streams plus
+    the ``live`` mask and the carry round-trip of the session pool."""
+    bt = batch_tile or max_forward_tile(n_in, n_hid, n_out, vmem_budget)
+    bt = max(1, min(bt, B))
+    bp, nb, bitmap = _dma_tile(B, T, bt)
+    active = _active_blocks(nb, T, block_density)
+    state = bp * (2 * n_hid + 2 * n_out + 1)
+    reads = _F32 * (
+        active * bt * n_in + 2 * T * bp + state
+        + _weights(n_in, n_hid, n_out)
+    ) + bitmap
+    writes = _F32 * state
+    return reads + writes
+
+
+def sparse_projection_bytes(
+    T: int, B: int, n_in: int, n_hid: int, capacity: int
+) -> int:
+    """XLA-side row-compacted input projection
+    (:func:`repro.kernels.events.sparse_input_projection`): one full-raster
+    activity scan, the gathered ``(capacity, N)`` row buffer round-trip, the
+    weight block, and the scattered ``(T·B, H)`` projection write.  Honest
+    accounting — the *byte* total is close to the dense projection's (the
+    output write dominates); what compaction cuts is the matmul FLOPs,
+    ``T·B·N·H → capacity·N·H`` (see :func:`projection_flops`)."""
+    cap = min(capacity, T * B)
+    reads = T * B * n_in + 2 * cap * n_in + n_in * n_hid
+    writes = cap * n_in + T * B * n_hid
+    return _F32 * (reads + writes)
+
+
+def projection_flops(
+    T: int, B: int, n_in: int, n_hid: int, capacity: Optional[int] = None
+) -> int:
+    """MACs×2 of the input projection — dense ``(T·B, N) @ (N, H)``, or the
+    compacted ``(capacity, N) @ (N, H)`` when a row capacity is given."""
+    rows = T * B if capacity is None else min(capacity, T * B)
+    return 2 * rows * n_in * n_hid
+
+
+# ---------------------------------------------------------------------------
+# roofline: achieved bandwidth vs device peak
+# ---------------------------------------------------------------------------
+
+# Peak HBM bandwidth / peak dense FLOP/s per chip generation, keyed by
+# `jax.devices()[0].device_kind` prefix.  The v5e row re-uses the
+# launch/mesh.py constants (single source); other rows are public figures.
+_DEVICE_ROOFLINES = {
+    "TPU v5 lite": None,   # filled from launch.mesh below (v5e)
+    "TPU v5e": None,
+    "TPU v4": (1.2e12, 275e12),
+    "TPU v5p": (2.8e12, 459e12),
+    "TPU v6": (1.6e12, 918e12),
+}
+
+# Coarse DDR figure for hosts without an accelerator: wall-clock there is
+# interpret-mode and meaningless, so rows are flagged unmeasured and CI
+# gates on analytic byte ratios only (same policy as the serve gate).
+_CPU_FALLBACK_BW = 40e9
+
+
+def device_roofline(device=None) -> Dict[str, object]:
+    """Resolve the running device's roofline constants.
+
+    Returns ``{"kind", "hbm_bw", "peak_flops", "measured"}`` —
+    ``measured=False`` means wall-clock on this device says nothing about
+    kernel bandwidth (CPU interpret mode) and achieved-vs-roofline columns
+    are recorded for trend only, never gated."""
+    from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+    if device is None:
+        import jax
+
+        device = jax.devices()[0]
+    kind = getattr(device, "device_kind", str(device))
+    for prefix, consts in _DEVICE_ROOFLINES.items():
+        if kind.lower().startswith(prefix.lower()):
+            hbm, flops = consts or (HBM_BW, PEAK_FLOPS_BF16)
+            return {"kind": kind, "hbm_bw": hbm, "peak_flops": flops,
+                    "measured": True}
+    return {"kind": kind, "hbm_bw": _CPU_FALLBACK_BW, "peak_flops": 0.0,
+            "measured": False}
+
+
+def achieved_bandwidth(bytes_moved: int, seconds: float) -> float:
+    """Bytes/s actually sustained by one timed launch."""
+    return bytes_moved / seconds if seconds > 0 else 0.0
+
+
+def bandwidth_table(
+    records: List[Dict[str, object]],
+    roofline: Optional[Dict[str, object]] = None,
+) -> List[Dict[str, object]]:
+    """The achieved-vs-roofline table: one row per benchmark record.
+
+    Each record needs ``{"op", "bytes", "seconds"}`` (extra keys pass
+    through); rows gain ``achieved_gbps``, ``roofline_gbps`` and
+    ``roofline_frac`` — the fraction of device peak the launch sustained.
+    On unmeasured devices (CPU interpret mode) ``roofline_frac`` is None.
+    """
+    roofline = roofline or device_roofline()
+    peak = float(roofline["hbm_bw"])
+    out = []
+    for rec in records:
+        bw = achieved_bandwidth(int(rec["bytes"]), float(rec["seconds"]))
+        row = dict(rec)
+        row["achieved_gbps"] = bw / 1e9
+        row["roofline_gbps"] = peak / 1e9
+        row["roofline_frac"] = (bw / peak) if roofline["measured"] else None
+        out.append(row)
+    return out
+
+
 def op_table(
     T: int,
     B: int,
@@ -213,14 +427,18 @@ def op_table(
     n_hid: int,
     n_out: int,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    density: Optional[float] = None,
 ) -> Dict[str, int]:
     """The full before/after data-movement table for one launch shape.
 
     ``train_fused`` / ``infer_fused`` are the *as-executed* batch-tiled
     numbers (tile rows derived from ``vmem_budget``); when the whole batch
-    fits one tile they coincide with the single-tile formulas above."""
+    fits one tile they coincide with the single-tile formulas above.
+    Passing a measured per-(tile, tick) **block** ``density`` adds the
+    event-driven rows (``train_dma`` / ``infer_dma``) at that as-executed
+    density."""
     args = (T, B, n_in, n_hid, n_out)
-    return {
+    table = {
         "forward_traces": forward_traces_bytes(*args),
         "eprop_update": eprop_update_bytes(*args),
         "train_two_kernel": train_two_kernel_bytes(*args),
@@ -228,6 +446,14 @@ def op_table(
         "infer_streamed": infer_streamed_bytes(*args),
         "infer_fused": infer_fused_tiled_bytes(*args, vmem_budget=vmem_budget),
     }
+    if density is not None:
+        table["train_dma"] = train_dma_tiled_bytes(
+            *args, block_density=density, vmem_budget=vmem_budget
+        )
+        table["infer_dma"] = infer_dma_tiled_bytes(
+            *args, block_density=density, vmem_budget=vmem_budget
+        )
+    return table
 
 
 def tile_table(

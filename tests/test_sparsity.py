@@ -1,0 +1,275 @@
+"""Spike-sparsity fast path + double-buffered event streaming (PR 7).
+
+The contract under test: the event path — XLA-side row compaction on the
+scan backend, DMA block-skipping on the kernel backend — is **bit-exact**
+with the dense path in float and quantized modes, across every edge the
+tiling can hit: all-quiet samples, ``B=1``, a ragged last batch tile,
+delayed supervision, and capacity overflow (which must fall back to the
+dense projection, not truncate events).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant_ref
+from repro.core.backend import ExecutionBackend
+from repro.core.rsnn import Presets, init_params, trainable
+from repro.kernels import events, ops
+
+ALPHA, KAPPA = 0.99, 0.78
+
+
+def _cfg(T=24, quantized=False):
+    return Presets.braille(n_classes=3, num_ticks=T, quantized=quantized)
+
+
+def _tile(key, cfg, B, density=0.05):
+    ks = jax.random.split(key, 3)
+    weights = trainable(init_params(ks[0], cfg))
+    T = cfg.num_ticks
+    raster = (jax.random.uniform(ks[1], (T, B, cfg.n_in)) < density).astype(
+        jnp.float32
+    )
+    label = jax.random.randint(ks[2], (B,), 0, cfg.n_out)
+    y_star = jax.nn.one_hot(label, cfg.n_out)
+    valid = ((jnp.arange(T)[:, None] >= T // 3) * jnp.ones((T, B))).astype(
+        jnp.float32
+    )
+    return weights, raster, y_star, valid
+
+
+def _pair(cfg, backend, raster):
+    """(dense, event) backend pair — event forced at the tile's density."""
+    d = float(events.raster_density(raster))
+    return (
+        ExecutionBackend(cfg, backend, sparsity="dense"),
+        ExecutionBackend(cfg, backend, sparsity="event", event_density=d),
+    )
+
+
+def _assert_same_tree(a, b, msg=""):
+    ta, tb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(ta) == len(tb)
+    for x, y in zip(ta, tb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------- edge tiles
+
+
+@pytest.mark.parametrize("backend", ["scan", "kernel"])
+def test_all_quiet_samples_bit_exact(backend):
+    """A tile with zero events anywhere: every block is skipped on the DMA
+    path and the compacted projection is empty — outputs still match the
+    dense path exactly (leak-only dynamics are not shortcut)."""
+    cfg = _cfg()
+    weights, raster, y_star, valid = _tile(jax.random.key(0), cfg, B=6)
+    raster = jnp.zeros_like(raster)
+    be_d, be_e = _pair(cfg, backend, raster)
+    assert be_e.sparsity == "event"  # forced, density 0.0
+    _assert_same_tree(be_d.inference(weights, raster, valid),
+                      be_e.inference(weights, raster, valid), "inference")
+    _assert_same_tree(be_d.train_tile(weights, raster, y_star, valid),
+                      be_e.train_tile(weights, raster, y_star, valid), "train")
+
+
+@pytest.mark.parametrize("backend", ["scan", "kernel"])
+def test_single_sample_tile_bit_exact(backend):
+    """B=1: one batch row per tile, degenerate bitmap/compaction shapes."""
+    cfg = _cfg()
+    weights, raster, y_star, valid = _tile(jax.random.key(1), cfg, B=1)
+    be_d, be_e = _pair(cfg, backend, raster)
+    _assert_same_tree(be_d.inference(weights, raster, valid),
+                      be_e.inference(weights, raster, valid), "inference")
+    _assert_same_tree(be_d.train_tile(weights, raster, y_star, valid),
+                      be_e.train_tile(weights, raster, y_star, valid), "train")
+
+
+def test_ragged_last_tile_bit_exact():
+    """B=10 with batch_tile=4 → tiles of 4+4+2; padded rows in the last
+    tile are all-quiet, so the DMA path's bitmap must treat them exactly
+    like the blocked path's zero padding."""
+    cfg = _cfg()
+    weights, raster, y_star, valid = _tile(jax.random.key(2), cfg, B=10)
+    w_in, w_rec, w_out = weights["w_in"], weights["w_rec"], weights["w_out"]
+    kw = dict(alpha=ALPHA, kappa=KAPPA, batch_tile=4)
+    out_b = ops.rsnn_infer(raster, valid, w_in, w_rec, w_out,
+                           stream="blocked", **kw)
+    out_d = ops.rsnn_infer(raster, valid, w_in, w_rec, w_out,
+                           stream="dma", **kw)
+    _assert_same_tree(out_b, out_d, "infer ragged")
+    b_fb = w_out
+    tr_b = ops.rsnn_train(raster, y_star, valid, w_in, w_rec, w_out, b_fb,
+                          stream="blocked", **kw)
+    tr_d = ops.rsnn_train(raster, y_star, valid, w_in, w_rec, w_out, b_fb,
+                          stream="dma", **kw)
+    _assert_same_tree(tr_b, tr_d, "train ragged")
+
+
+@pytest.mark.parametrize("backend", ["scan", "kernel"])
+def test_label_delay_valid_window_bit_exact(backend):
+    """Delayed supervision (label_delay > 0): the valid window opens later,
+    so early active ticks contribute dynamics but no readout — the event
+    path must not confuse activity gating with supervision gating."""
+    delay = 6
+    cfg = dataclasses.replace(_cfg(), label_delay=delay)
+    weights, raster, y_star, _ = _tile(jax.random.key(3), cfg, B=5)
+    T, B = cfg.num_ticks, 5
+    lt = T // 3
+    valid = ((jnp.arange(T)[:, None] >= lt + delay) * jnp.ones((T, B))
+             ).astype(jnp.float32)
+    be_d, be_e = _pair(cfg, backend, raster)
+    out_d = be_d.inference(weights, raster, valid)
+    out_e = be_e.inference(weights, raster, valid)
+    _assert_same_tree(out_d, out_e, "inference")
+    _assert_same_tree(be_d.train_tile(weights, raster, y_star, valid),
+                      be_e.train_tile(weights, raster, y_star, valid), "train")
+
+
+# ----------------------------------------------------------- quantized golden
+
+
+@pytest.mark.parametrize("backend", ["scan", "kernel"])
+def test_quantized_event_path_matches_golden(backend):
+    """Quantized mode at Braille-like sparsity: the event path reproduces
+    the integer golden reference bit for bit (`core/quant_ref.py` is the
+    oracle — same bar the dense path already clears)."""
+    cfg = _cfg(T=32, quantized=True)
+    weights, raster, _, valid = _tile(jax.random.key(4), cfg, B=12,
+                                      density=0.05)
+    be = ExecutionBackend(cfg, backend, sparsity="event",
+                          event_density=float(events.raster_density(raster)))
+    mask = 1.0 - np.eye(cfg.n_hid, dtype=np.float32)
+    g = quant_ref.golden_forward(
+        np.asarray(raster),
+        np.asarray(weights["w_in"]),
+        np.asarray(weights["w_rec"]) * mask,
+        np.asarray(weights["w_out"]),
+        cfg.neuron.quant,
+        reset=cfg.neuron.reset,
+        boxcar_width=cfg.neuron.boxcar_width,
+        valid=np.asarray(valid),
+    )
+    dyn = be.dynamics(weights, raster)
+    for k in ("v", "z", "y"):
+        np.testing.assert_array_equal(
+            np.asarray(dyn[k]).astype(np.int64), g[k], err_msg=f"{backend}:{k}"
+        )
+    out = be.inference(weights, raster, valid)
+    np.testing.assert_array_equal(
+        np.asarray(out["acc_y"]).astype(np.int64), g["acc_y"])
+    np.testing.assert_array_equal(np.asarray(out["pred"]), g["pred"])
+
+
+# ---------------------------------------------------- dispatch + density sweep
+
+
+def test_density_sweep_dispatch_invariance():
+    """Outputs are invariant to the dense/event dispatch decision across a
+    density sweep spanning both sides of the threshold — auto mode can never
+    change results, only bytes."""
+    cfg = _cfg()
+    thr = events.SPARSE_DENSITY_THRESHOLD
+    for i, d in enumerate([0.0, 0.05, 0.2, 0.5, 0.9]):
+        weights, raster, y_star, valid = _tile(
+            jax.random.key(10 + i), cfg, B=4, density=d)
+        be_dense = ExecutionBackend(cfg, "scan", sparsity="dense")
+        be_auto = ExecutionBackend(cfg, "scan", sparsity="auto",
+                                   event_density=d)
+        assert be_auto.sparsity == ("event" if d <= thr else "dense")
+        _assert_same_tree(
+            be_dense.train_tile(weights, raster, y_star, valid),
+            be_auto.train_tile(weights, raster, y_star, valid),
+            f"density={d}")
+
+
+def test_resolve_sparsity_policy():
+    thr = events.SPARSE_DENSITY_THRESHOLD
+    assert events.resolve_sparsity("dense", 0.01) == "dense"
+    assert events.resolve_sparsity("event", 0.99) == "event"
+    assert events.resolve_sparsity("auto", thr) == "event"
+    assert events.resolve_sparsity("auto", thr + 0.01) == "dense"
+    assert events.resolve_sparsity(None, 0.1) == "event"
+    # no density measurement → stay dense unless forced
+    assert events.resolve_sparsity(None, None) == "dense"
+    assert events.resolve_sparsity("event", None) == "event"
+    with pytest.raises(AssertionError):
+        events.resolve_sparsity("bogus", 0.1)
+
+
+# ------------------------------------------------- compaction capacity limits
+
+
+def test_capacity_overflow_falls_back_dense():
+    """More active rows than capacity: the projection must return the dense
+    result (cond fallback), never a truncated event set."""
+    key = jax.random.key(5)
+    T, B, n_in, H = 8, 4, 12, 16
+    raster = (jax.random.uniform(key, (T, B, n_in)) < 0.9).astype(jnp.float32)
+    w_in = jax.random.normal(jax.random.key(6), (n_in, H))
+    dense = jnp.dot(raster.reshape(T * B, n_in), w_in).reshape(T, B, H)
+    n_act = int(events.row_activity(raster).sum())
+    assert n_act > 4  # the sweep below crosses the overflow boundary
+    for cap in (2, n_act - 1, n_act, n_act + 3, T * B):
+        proj, n_active = events.sparse_input_projection(
+            raster, w_in, capacity=cap)
+        assert int(n_active) == n_act
+        np.testing.assert_array_equal(np.asarray(proj), np.asarray(dense),
+                                      err_msg=f"capacity={cap}")
+
+
+def test_suggest_row_capacity_bounds():
+    T, B, n_in = 100, 16, 12
+    cap = events.suggest_row_capacity(T, B, 0.05, n_in=n_in)
+    rd = events.row_density(0.05, n_in)
+    assert cap >= int(T * B * rd)       # at least the expected active rows
+    assert cap <= T * B                 # never more than dense
+    assert events.suggest_row_capacity(T, B, 1.0, n_in=n_in) == T * B
+    assert events.suggest_row_capacity(T, B, 0.0, n_in=n_in) >= 64
+
+
+def test_block_bitmap_matches_numpy():
+    key = jax.random.key(7)
+    T, B, n_in, bt = 10, 9, 12, 4
+    raster = (jax.random.uniform(key, (T, B, n_in)) < 0.02).astype(jnp.float32)
+    b_pad = 12  # 3 tiles of 4 — last real tile ragged, pad rows quiet
+    padded = jnp.zeros((T, b_pad, n_in)).at[:, :B].set(raster)
+    bm = np.asarray(events.block_bitmap(padded, bt))
+    nb = b_pad // bt
+    act = np.asarray(padded).reshape(T, nb, bt * n_in).sum(-1) > 0  # (T, nb)
+    ref = act.T.reshape(nb * T)  # linearized step order s = b*T + t
+    np.testing.assert_array_equal(bm.astype(bool), ref)
+
+
+# -------------------------------------------- DMA vs blocked, all four kernels
+
+
+def test_dma_parity_forward_and_sessions():
+    """stream="dma" vs "blocked" for the two kernels the backend-level tests
+    above don't reach directly: the trace-emitting forward and the
+    session-stateful streaming step (with dead rows in the live mask)."""
+    cfg = _cfg()
+    weights, raster, _, valid = _tile(jax.random.key(8), cfg, B=6)
+    w_in, w_rec, w_out = weights["w_in"], weights["w_rec"], weights["w_out"]
+    kw = dict(alpha=ALPHA, kappa=KAPPA, batch_tile=4)
+    f_b = ops.rsnn_forward(raster, w_in, w_rec, w_out, stream="blocked", **kw)
+    f_d = ops.rsnn_forward(raster, w_in, w_rec, w_out, stream="dma", **kw)
+    _assert_same_tree(f_b, f_d, "forward")
+
+    T, B = raster.shape[:2]
+    live = jnp.ones((T, B)).at[:, 0].set(0.0)   # one dead session row
+    live = live.at[T // 2:, 3].set(0.0)          # one that ends mid-tile
+    valid = valid * live
+    state = ExecutionBackend(cfg, "kernel").init_session_state(B)
+    carry = (state["v"], state["z"], state["y"], state["acc_y"],
+             state["n_spk"])
+    s_b = ops.rsnn_step_sessions(raster, live, valid, *carry,
+                                 w_in, w_rec, w_out, stream="blocked", **kw)
+    s_d = ops.rsnn_step_sessions(raster, live, valid, *carry,
+                                 w_in, w_rec, w_out, stream="dma", **kw)
+    _assert_same_tree(s_b, s_d, "step_sessions")
