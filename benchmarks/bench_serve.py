@@ -42,8 +42,9 @@ from repro.core import aer
 from repro.core.controller import make_infer_fn
 from repro.core.rsnn import Presets, init_params, trainable
 from repro.data.braille import BrailleConfig, make_braille_dataset
+from repro.data.cue import CueConfig, make_cue_dataset
 from repro.data.pipeline import EventStream
-from repro.serve import BatchedEngine
+from repro.serve import BatchedEngine, ModelRegistry
 from repro.serve.batching import decode_events_host, request_ticks
 
 REPS = 3   # best-of-N measurement passes (noisy shared-CPU containers)
@@ -254,6 +255,109 @@ def main_streaming(opts):
     return {"rc": 0 if ok else 1, "streaming": summary}
 
 
+def main_multi_model(opts):
+    """Multi-model serving smoke (ISSUE 8): Braille + cue registered in one
+    :class:`~repro.serve.ModelRegistry`, served concurrently from one
+    :class:`~repro.serve.BatchedEngine` over a mixed ``(events, model_id)``
+    stream.  Gates bitwise equality of every per-model result against two
+    dedicated single-model engines, and records per-model throughput under
+    the ``"multi_model"`` key of ``BENCH_serve.json``."""
+    num_ticks = 128
+    n_req = 48 if opts.fast else 256    # per model
+    cfg_b = Presets.braille(n_classes=3, num_ticks=num_ticks)
+    params_b = init_params(jax.random.key(0), cfg_b)
+    ccfg = CueConfig()
+    cfg_c = Presets.cue_accumulation(num_ticks=ccfg.num_ticks)
+    params_c = init_params(jax.random.key(1), cfg_c)
+
+    data_b = make_braille_dataset(
+        "AEU", BrailleConfig(num_ticks=num_ticks,
+                             samples_per_class=max(2, n_req // 3))
+    )
+    stream_b = list(EventStream(data_b, "train"))[:n_req]
+    data_c = make_cue_dataset(n_req, 2, cfg=ccfg)
+    stream_c = list(EventStream(data_c, "train"))[:n_req]
+
+    registry = ModelRegistry()
+    registry.register("braille", cfg_b, params_b, backend="auto")
+    registry.register("cue", cfg_c, params_c, backend="auto")
+    eng = BatchedEngine(registry=registry, max_batch=opts.batch)
+
+    # interleaved mixed-model traffic: requests alternate model per arrival
+    mixed = []
+    for evb, evc in zip(stream_b, stream_c):
+        mixed.append((evb, "braille"))
+        mixed.append((evc, "cue"))
+
+    print(f"multi-model serving: braille(T={num_ticks}) + cue(T={ccfg.num_ticks}) "
+          f"— {len(mixed)} mixed requests, batch={opts.batch}")
+    eng.serve(iter(mixed))       # warm pass: compiles every tile shape
+    best = None
+    for _ in range(REPS):
+        results, stats = eng.serve(iter(mixed))
+        if best is None or stats.wall_s < best[1].wall_s:
+            best = (results, stats)
+    results, stats = best
+    per = stats.per_model or {}
+    for mid in ("braille", "cue"):
+        s = per.get(mid)
+        if s:
+            print(f"  {mid:8s}: {s.requests:4d} requests  "
+                  f"{s.samples_per_sec:9.1f} samples/s  {s.batches} tiles  "
+                  f"p99={s.p99_latency_s*1e3:.2f} ms")
+
+    # bitwise gate: per-model results vs two dedicated single-model engines
+    ded_b = BatchedEngine(cfg_b, params_b, backend="auto",
+                          max_batch=opts.batch)
+    ded_c = BatchedEngine(cfg_c, params_c, backend="auto",
+                          max_batch=opts.batch)
+    ref_b, _ = ded_b.serve(iter(stream_b))
+    ref_c, _ = ded_c.serve(iter(stream_c))
+    mism = 0
+    for mid, refs in (("braille", ref_b), ("cue", ref_c)):
+        got = [r for r in results if r.model_id == mid]
+        for g, r in zip(got, refs):
+            if not np.array_equal(np.asarray(g.logits), np.asarray(r.logits)):
+                mism += 1
+    print(f"correctness: {len(results) - mism}/{len(results)} mixed-engine "
+          f"results bitwise equal to the dedicated single-model engines")
+
+    summary = {
+        "requests": len(results),
+        "batch": opts.batch,
+        "models": {
+            mid: {
+                "requests": s.requests,
+                "samples_per_sec": s.samples_per_sec,
+                "batches": s.batches,
+                "p50_latency_s": s.p50_latency_s,
+                "p99_latency_s": s.p99_latency_s,
+                "compiled_shapes": s.compiled_shapes,
+                "hbm_bytes_streamed": s.hbm_bytes_streamed,
+            }
+            for mid, s in per.items()
+        },
+        "samples_per_sec": stats.samples_per_sec,
+        "compiled_shapes": stats.compiled_shapes,
+        "mismatches": mism,
+    }
+    if opts.out_dir:
+        out_dir = Path(opts.out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out = out_dir / "BENCH_serve.json"
+        payload = {"schema": 1, "benchmark": "batched_serving",
+                   "jax_backend": jax.default_backend()}
+        if out.exists():     # merge alongside the other serving sections
+            payload = json.loads(out.read_text())
+        payload["multi_model"] = summary
+        out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {out}")
+    ok = mism == 0
+    print(f"acceptance (per-model results bitwise equal to dedicated "
+          f"engines): {'PASS' if ok else 'FAIL'}")
+    return {"rc": 0 if ok else 1, "multi_model": summary}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="fewer requests")
@@ -268,6 +372,10 @@ def main(argv=None):
     ap.add_argument("--streaming", action="store_true",
                     help="stateful session streaming instead of the "
                          "whole-sample comparison")
+    ap.add_argument("--multi-model", action="store_true",
+                    help="Braille + cue registered in one engine, served "
+                         "over a mixed stream (bitwise-gated vs dedicated "
+                         "engines; per-model throughput recorded)")
     ap.add_argument("--sessions", type=int, default=0,
                     help="concurrent sessions for --streaming "
                          "(default 10000, or 1024 under --smoke/--fast)")
@@ -281,6 +389,8 @@ def main(argv=None):
 
     if opts.streaming:
         return main_streaming(opts)
+    if opts.multi_model:
+        return main_multi_model(opts)
 
     num_ticks = 128
     n_req = 128 if opts.fast else 512

@@ -6,7 +6,13 @@
   kernels allclose + µbench                         -> bench_kernels
   serving batched vs sequential throughput          -> bench_serve
   stateful session streaming (events/s, tick p99)   -> bench_serve --streaming
+  multi-model serving (Braille + cue, one engine)   -> bench_serve --multi-model
   achieved-vs-roofline bandwidth + Bt auto-tune     -> roofline
+
+``--fast`` also swaps the full cue run for its 3-seed END_B-vs-END_S
+acceptance smoke (``bench_cue --smoke``); its section folds into
+``BENCH_train.json`` under ``"cue"``, and the multi-model per-model
+throughput folds into ``BENCH_serve.json`` under ``"multi_model"``.
 
 ``python -m benchmarks.run [--fast]`` — default runs the paper's full
 200-epoch Braille protocol; ``--fast`` trims braille to its 12-epoch smoke
@@ -66,7 +72,9 @@ def main(argv=None):
         ("serve", lambda: bench_serve.main(["--fast"] if opts.fast else [])),
         ("streaming", lambda: bench_serve.main(
             ["--streaming"] + (["--fast"] if opts.fast else []))),
-        ("cue", lambda: bench_cue.main([])),
+        ("multi_model", lambda: bench_serve.main(
+            ["--multi-model"] + (["--fast"] if opts.fast else []))),
+        ("cue", lambda: bench_cue.main(["--smoke"] if opts.fast else [])),
         ("resources", lambda: bench_resources.main([])),
         ("braille", lambda: bench_braille.main(
             ["--smoke"] if opts.fast else ["--epochs", "200"])),
@@ -92,21 +100,27 @@ def main(argv=None):
 
     out_dir = Path(opts.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
-    if "braille" in reports:
-        r = reports["braille"]
-        _write_report(out_dir / "BENCH_train.json", {
-            "benchmark": "braille_training",
-            "rows": r.get("rows", []),
-            "throughput": r.get("throughput"),
-        })
-    if ("serve" in reports and reports["serve"].get("serve")) or (
-        "streaming" in reports and reports["streaming"].get("streaming")
+    if "braille" in reports or "cue" in reports:
+        payload = {"benchmark": "braille_training"}
+        if "braille" in reports:
+            r = reports["braille"]
+            payload["rows"] = r.get("rows", [])
+            payload["throughput"] = r.get("throughput")
+        if "cue" in reports and reports["cue"].get("cue"):
+            payload["cue"] = reports["cue"]["cue"]
+        _write_report(out_dir / "BENCH_train.json", payload)
+    if any(
+        k in reports and reports[k].get(v)
+        for k, v in (("serve", "serve"), ("streaming", "streaming"),
+                     ("multi_model", "multi_model"))
     ):
         payload = {"benchmark": "batched_serving"}
         if "serve" in reports:
             payload.update(reports["serve"].get("serve") or {})
         if "streaming" in reports:
             payload["streaming"] = reports["streaming"]["streaming"]
+        if "multi_model" in reports:
+            payload["multi_model"] = reports["multi_model"]["multi_model"]
         _write_report(out_dir / "BENCH_serve.json", payload)
 
     if failures:

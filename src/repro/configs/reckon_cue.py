@@ -1,11 +1,39 @@
 """The paper's own network #1 — cue accumulation (§4.2): 40 input,
 100 recurrent LIF, 2 LI outputs, reset-by-subtraction, delayed supervision.
+
+``CONFIG_QUANT`` / ``config_for(quantized=True)`` arm the
+hardware-equivalence mode: the tuned register values interpreted as
+ReckOn's fixed-point datapath (8-bit weight SRAM on the Q(8,4) grid,
+saturating 12-bit membrane grid, leaks as ``reg/256`` floor-multipliers),
+with the reset-by-subtraction membrane update the cue network uses on
+chip.  ``QUANT_OPT`` is the matching optimizer config — identical to the
+Braille one, since both tasks share the SRAM numerics (one fabric, two
+programs).
 """
 
+from repro.core.quant import WEIGHT_SPEC, QuantizedMode
 from repro.core.rsnn import Presets
+from repro.optim.eprop_opt import EpropSGDConfig
+
+# The tuned SPI parameter-bank values, as the quantized datapath reads them
+# (alpha 254/256, kappa 200/256 — the cue network's slower readout leak).
+SPI_REGS = QuantizedMode(threshold=0x03F0, alpha_reg=0x0FE, kappa_reg=0xC8)
 
 CONFIG = Presets.cue_accumulation()
+CONFIG_QUANT = Presets.cue_accumulation(quantized=True)
+
+# Chip-faithful weight storage: 8-bit SRAM codes + float residual
+# accumulator, committed at every END_S/END_B with the chip's stochastic
+# rounding (sub-LSB updates make expected progress).
+QUANT_OPT = EpropSGDConfig(lr=1e-2, clip=10.0, quant=WEIGHT_SPEC,
+                           stochastic_round=True)
 
 
-def reduced():
-    return Presets.cue_accumulation(n_in=12, n_hid=20, num_ticks=40)
+def config_for(quantized: bool = False, **over):
+    return Presets.cue_accumulation(quantized=quantized, **over)
+
+
+def reduced(quantized: bool = False):
+    return Presets.cue_accumulation(
+        n_in=12, n_hid=20, num_ticks=40, quantized=quantized
+    )

@@ -148,6 +148,12 @@ class RuntimeConfig:
     # repro.kernels.events.resolve_sparsity, the single policy point.
     sparsity: Optional[str] = None
     event_density: Optional[float] = None
+    # Which registered model this runtime request acts on behalf of —
+    # identity metadata for routing/attribution (error messages, per-model
+    # serving stats), NEVER part of the execution bucket: two models with
+    # equal configs share one compiled backend (see BackendPool), so
+    # check_compatible and the pool's bucket key both ignore it.
+    model_id: Optional[str] = None
 
 
 def _resolve_runtime(
@@ -160,6 +166,7 @@ def _resolve_runtime(
     rules: Optional[shardlib.ShardingRules],
     sparsity: Optional[str] = None,
     event_density: Optional[float] = None,
+    model_id: Optional[str] = None,
 ) -> RuntimeConfig:
     """Merge an explicit :class:`RuntimeConfig` with the deprecated loose
     kwargs: the config wins wherever it sets a field; loose kwargs only fill
@@ -167,14 +174,16 @@ def _resolve_runtime(
     if runtime is None:
         return RuntimeConfig(backend=backend, alpha=alpha, quant=quant,
                              vmem_budget=vmem_budget, mesh=mesh, rules=rules,
-                             sparsity=sparsity, event_density=event_density)
+                             sparsity=sparsity, event_density=event_density,
+                             model_id=model_id)
     rt = runtime
     if rt.backend == "auto" and backend != "auto":
         rt = dataclasses.replace(rt, backend=backend)
     for name, val in (("alpha", alpha), ("quant", quant),
                       ("vmem_budget", vmem_budget), ("mesh", mesh),
                       ("rules", rules), ("sparsity", sparsity),
-                      ("event_density", event_density)):
+                      ("event_density", event_density),
+                      ("model_id", model_id)):
         if getattr(rt, name) is None and val is not None:
             rt = dataclasses.replace(rt, **{name: val})
     return rt
@@ -842,6 +851,91 @@ class ExecutionBackend:
 BackendLike = Union[str, ExecutionBackend]
 
 
+def bucket_key(cfg: RSNNConfig, rt: RuntimeConfig) -> Tuple:
+    """The execution-equality bucket of a ``(cfg, runtime)`` request: two
+    requests with equal keys can share one :class:`ExecutionBackend` (and
+    therefore its jit caches) without any behavioural difference.
+
+    The key pre-resolves every field exactly as the constructor would
+    (``"auto"`` backend, defaulted alpha/quant/vmem, measured-density
+    sparsity dispatch), so ``braille`` requested with ``backend="auto"`` on
+    CPU and ``backend="scan"`` land in the same bucket.  The full
+    :class:`~repro.core.rsnn.RSNNConfig` participates — that is the
+    ``(T, N, H, O, quant)`` shape bucket plus every baked-in trace-time
+    constant (leaks, reset mode, e-prop window …), which is precisely the
+    set of things a traced program closes over.  ``rt.model_id`` is
+    deliberately EXCLUDED: which model a request serves never changes the
+    compiled program.
+    """
+    name = resolve_backend(rt.backend)
+    quant = rt.quant if rt.quant is not None else cfg.neuron.quant
+    if quant is not None:
+        alpha = quant.alpha
+    else:
+        alpha = float(cfg.neuron.alpha if rt.alpha is None else rt.alpha)
+    sparsity = events.resolve_sparsity(rt.sparsity, rt.event_density)
+    return (
+        cfg, name, alpha, quant, int(rt.vmem_budget or DEFAULT_VMEM_BUDGET),
+        rt.mesh, None if rt.rules is None else id(rt.rules),
+        sparsity, rt.event_density,
+    )
+
+
+class BackendPool:
+    """One shared jit cache over shape-bucketed configs.
+
+    Where each engine/learner historically constructed its own
+    :class:`ExecutionBackend` (its own jit caches), a pool hands out **one
+    backend per execution bucket** (:func:`bucket_key`): registering a
+    second model with an equal config compiles nothing, and models whose
+    configs differ only in weights trivially share every program — the
+    software analog of the paper's runtime reprogrammability, where one
+    fabric serves many weight-SRAM images.
+
+    :class:`repro.serve.registry.ModelRegistry` owns one of these; pass
+    ``pool=`` to :func:`as_backend` to resolve through it.
+    """
+
+    def __init__(self):
+        self._by_key: Dict[Tuple, ExecutionBackend] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def backends(self) -> Tuple[ExecutionBackend, ...]:
+        """The distinct pooled backends (one per execution bucket)."""
+        return tuple(self._by_key.values())
+
+    def get(self, cfg: RSNNConfig, rt: RuntimeConfig) -> ExecutionBackend:
+        """The pooled backend for this bucket — constructed on first request,
+        returned as-is (zero new compiled programs) afterwards."""
+        key = bucket_key(cfg, rt)
+        hit = self._by_key.get(key)
+        if hit is not None:
+            hit.check_compatible(rt)
+            return hit
+        be = ExecutionBackend(cfg, runtime=dataclasses.replace(
+            rt, model_id=None
+        ))
+        self._by_key[key] = be
+        return be
+
+    def adopt(self, backend: ExecutionBackend) -> ExecutionBackend:
+        """Seed the pool with an externally constructed backend (e.g. an
+        :class:`~repro.core.controller.OnlineLearner`'s, so registering its
+        model shares the learner's live jit cache).  If the bucket is
+        already occupied the pooled instance wins — one backend per bucket —
+        and the caller should use the returned object."""
+        key = bucket_key(backend.cfg, backend.runtime)
+        return self._by_key.setdefault(key, backend)
+
+    def compiled_shapes(self, op: Optional[str] = None) -> int:
+        """Distinct ``(T, B)`` tile shapes across every pooled backend —
+        the multi-model recompile counter (hot-swapping / registering into
+        an existing bucket must not move it)."""
+        return sum(be.compiled_shapes(op) for be in self._by_key.values())
+
+
 def as_backend(
     cfg: RSNNConfig,
     backend: BackendLike = "auto",
@@ -852,6 +946,8 @@ def as_backend(
     runtime: Optional[RuntimeConfig] = None,
     sparsity: Optional[str] = None,
     event_density: Optional[float] = None,
+    model_id: Optional[str] = None,
+    pool: Optional[BackendPool] = None,
 ) -> ExecutionBackend:
     """The single runtime-resolution point: coerce a backend name, a
     :class:`RuntimeConfig`, or an existing :class:`ExecutionBackend` into a
@@ -864,15 +960,25 @@ def as_backend(
     :meth:`ExecutionBackend.check_compatible` and returned as-is.  The
     loose ``alpha``/``quant``/``vmem_budget``/``mesh`` kwargs are the
     deprecated passthrough; new callers bundle them in ``runtime=``.
+
+    ``model_id`` tags the request with the registered model it acts for
+    (identity only — never part of the execution bucket).  ``pool=`` routes
+    construction through a :class:`BackendPool`, so equal-bucket requests
+    from different models share one backend instead of compiling their own.
     """
     if isinstance(backend, RuntimeConfig):
         assert runtime is None, "runtime passed twice"
         backend, runtime = backend.backend, backend
     name = backend if isinstance(backend, str) else "auto"
     rt = _resolve_runtime(runtime, name, alpha, quant, vmem_budget, mesh, None,
-                          sparsity, event_density)
+                          sparsity, event_density, model_id)
     if isinstance(backend, ExecutionBackend):
-        assert backend.cfg == cfg, "shared backend built for a different config"
+        assert backend.cfg == cfg, (
+            "shared backend built for a different config"
+            + (f" (model {rt.model_id!r})" if rt.model_id else "")
+        )
         backend.check_compatible(rt)
-        return backend
+        return pool.adopt(backend) if pool is not None else backend
+    if pool is not None:
+        return pool.get(cfg, rt)
     return ExecutionBackend(cfg, runtime=rt)

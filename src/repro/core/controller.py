@@ -286,6 +286,15 @@ class OnlineLearner:
     :class:`repro.serve.BatchedEngine` serving this learner's live weights).
     ``ctrl.commit`` selects the training loop: ``"sample"`` = per-sample
     END_S commit (X-HEEP-faithful), ``"batch"`` = END_B batch commit (ARM).
+
+    ``registry``/``model_id`` attach the learner to a
+    :class:`repro.serve.registry.ModelRegistry` (the multi-tenant serving
+    state): the learner registers itself under ``model_id`` — sharing its
+    execution backend with the registry's pool, so serving mints no new
+    programs — and *publishes* its live weights into the registry every
+    ``publish_every`` commits (:meth:`publish` does it on demand).  A
+    serving engine routed at that model picks the new SRAM image up on its
+    next launched tile: the paper's online-learning loop, mid-serve.
     """
 
     def __init__(
@@ -297,6 +306,9 @@ class OnlineLearner:
         backend: BackendLike = "auto",
         mesh=None,
         runtime=None,
+        registry=None,
+        model_id: Optional[str] = None,
+        publish_every: int = 1,
     ):
         self.cfg, self.ctrl = cfg, ctrl
         self.opt = EpropSGD(opt_cfg)
@@ -324,6 +336,34 @@ class OnlineLearner:
         self._train_fn = train_builder(cfg, self.opt, self.backend)
         self._eval_fn = make_eval_batch_fn(cfg, self.backend)
         self.log = EpochLog(train_acc=[], val_acc=[])
+        # ---- registry attachment (duck-typed: anything with register /
+        # update_weights keyed by model_id, i.e. serve.registry.ModelRegistry;
+        # core stays importable without the serve layer) ------------------
+        self.registry = registry
+        self.model_id = model_id if model_id is not None else "default"
+        self.publish_every = max(1, int(publish_every))
+        self._commits = 0
+        if registry is not None:
+            if self.model_id in registry:
+                registry.update_weights(self.model_id, self.inference_params())
+            else:
+                # share this learner's backend: registered into the pool, so
+                # an engine serving this model reuses the learner's jit cache
+                registry.register(
+                    self.model_id, cfg, self.inference_params(),
+                    backend=self.backend,
+                )
+
+    def publish(self) -> None:
+        """Push the live weights into the attached registry (the SPI weight
+        reload, mid-serve): engines routing ``model_id`` serve the new SRAM
+        image from their next launched tile.  No recompilation — weights
+        are jit arguments end to end."""
+        if self.registry is None:
+            raise ValueError(
+                "learner has no registry attached — construct with registry="
+            )
+        self.registry.update_weights(self.model_id, self.inference_params())
 
     def train_batch(self, batch: DeviceBatch) -> Dict[str, jax.Array]:
         """Train on one device batch (one END_B commit, or one END_S scan over
@@ -334,6 +374,10 @@ class OnlineLearner:
         self.weights, self.opt_state, m = self._train_fn(
             self.weights, self.opt_state, batch, sub
         )
+        if self.registry is not None:
+            self._commits += 1
+            if self._commits % self.publish_every == 0:
+                self.publish()
         return m
 
     def train_epoch(self, pipeline, epoch: int) -> float:

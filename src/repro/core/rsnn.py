@@ -109,19 +109,34 @@ class Presets:
     """The two experimental networks of the paper."""
 
     @staticmethod
-    def cue_accumulation(num_ticks: int = 150, **over) -> RSNNConfig:
+    def cue_accumulation(
+        num_ticks: int = 150, quantized: bool = False, **over
+    ) -> RSNNConfig:
         """§4.2: 40 input, 100 recurrent, 2 output; reset-by-subtraction.
 
         Tuned registers (grid-searched to the paper's accuracy band —
         avg val ≈96%, avg train ≈92% over 10 epochs on 50/50 splits):
         alpha=0xFE/256, kappa=0xC8/256, lr=1e-2, w_in gain 3.
+
+        ``quantized=True`` arms the hardware-equivalence mode with the same
+        register values on ReckOn's fixed-point datapath — threshold
+        ``0x03F0``, alpha LSBs ``0x0FE`` (254/256), kappa ``0xC8``
+        (200/256) — under reset-by-subtraction (the datapath subtracts the
+        threshold word on spike instead of clearing the membrane).
         """
         kw = dict(
             n_in=40,
             n_hid=100,
             n_out=2,
             num_ticks=num_ticks,
-            neuron=NeuronConfig(alpha=254.0 / 256.0, kappa=200.0 / 256.0, reset="sub"),
+            neuron=NeuronConfig(
+                alpha=254.0 / 256.0,
+                kappa=200.0 / 256.0,
+                reset="sub",
+                quant=QuantizedMode(
+                    threshold=0x03F0, alpha_reg=0x0FE, kappa_reg=0xC8
+                ) if quantized else None,
+            ),
             eprop=EpropConfig(mode="factored", error="softmax", infer_window="valid"),
             w_in_gain=3.0,
         )

@@ -11,9 +11,18 @@ state resident in a device-side :class:`~repro.serve.session.SessionPool`
 whole-sample entry points (``submit()`` / ``serve()``) remain supported as
 a thin open-feed-close wrapper over the same machinery.
 
+Multi-model serving: a :class:`~repro.serve.registry.ModelRegistry` holds
+any number of ``model_id``-keyed networks (config + quant contract +
+weight-SRAM image, hot-swappable mid-serve) over one shared backend pool;
+``BatchedEngine(registry=...)`` serves them all concurrently, routing every
+``submit``/``open_session``/``serve`` call by ``model_id`` — the paper's
+runtime reprogrammability (one fabric, many SRAM programs) at service
+scale.
+
 * :mod:`repro.serve.session`   — device-resident state pool, session records;
 * :mod:`repro.serve.batching`  — ragged-stream decode/padding + capacity math;
 * :mod:`repro.serve.scheduler` — whole-sample bucketing + continuous packing;
+* :mod:`repro.serve.registry`  — model registry: specs, hot-swap, routing;
 * :mod:`repro.serve.engine`    — the engine, session handles, stats.
 
 See ``docs/serving.md`` for the session lifecycle and the migration guide
@@ -41,6 +50,13 @@ from repro.serve.engine import (
     SessionHandle,
     StreamStats,
 )
+from repro.serve.registry import (
+    DEFAULT_MODEL,
+    SRAM_KEYS,
+    ModelRegistry,
+    ModelSpec,
+    expected_shapes,
+)
 from repro.serve.scheduler import (
     BatchTile,
     BucketingScheduler,
@@ -57,6 +73,12 @@ __all__ = [
     "ServeStats",
     "StreamStats",
     "SessionSnapshot",
+    # model registry (multi-model serving)
+    "ModelRegistry",
+    "ModelSpec",
+    "expected_shapes",
+    "DEFAULT_MODEL",
+    "SRAM_KEYS",
     # schedulers
     "BucketingScheduler",
     "StreamPacker",

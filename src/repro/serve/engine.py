@@ -22,6 +22,21 @@ path (``submit()`` / ``serve()`` over complete event buffers, bucketed by
 open-feed-close wrapper over the same session machinery — existing callers
 run unmodified, with identical results.
 
+**Multi-model serving** (the paper's runtime reprogrammability — one
+fabric, many SRAM programs): an engine constructed with ``registry=``
+serves every model in a :class:`~repro.serve.registry.ModelRegistry`
+concurrently.  Each registered model gets its own *lane* — scheduler,
+stream packer and carry pool (state shapes differ per network) — so every
+tile stays single-model, like one SRAM image per chip program; the pump
+loop interleaves launches across lanes, and request ids stay unique and
+admission-ordered engine-wide through one shared allocator.  ``submit``,
+``open_session``, ``serve`` and ``warmup`` route by ``model_id``
+(defaulting to the first registered model), results carry their model id,
+and :class:`ServeStats`/:class:`StreamStats` break out per-model.  The
+classic single-model constructor ``BatchedEngine(cfg, params)`` is the
+one-lane special case: it builds a private registry under the
+``"default"`` id.
+
 Backend dispatch (``"kernel"`` = fused Pallas kernels, ``"scan"`` = the
 reference ``lax.scan``, ``"auto"`` = kernel on TPU / scan elsewhere) lives in
 :mod:`repro.core.backend`, not here; the engine just submits tiles.  Weights
@@ -31,7 +46,9 @@ learning online) never recompiles — and because an
 :class:`~repro.core.backend.ExecutionBackend` instance can be passed in
 directly (``BatchedEngine.from_learner`` does exactly that), the engine and
 a live :class:`~repro.core.controller.OnlineLearner` share one jit cache:
-train, swap weights, serve, no recompile.
+train, swap weights, serve, no recompile.  Models whose configs fall in the
+same execution bucket share one pooled backend, so a multi-model engine
+compiles each tile shape once, not once per model.
 
 Quantized serving: when the backend runs the hardware-equivalence mode
 (``cfg.neuron.quant`` / ``ExecutionBackend(quant=...)``), the engine is the
@@ -46,16 +63,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backend import BackendLike, RuntimeConfig, as_backend
+from repro.core.backend import BackendLike, ExecutionBackend, RuntimeConfig
 from repro.core.rsnn import RSNNConfig
 from repro.kernels import traffic
 from repro.serve import batching
+from repro.serve.registry import DEFAULT_MODEL, ModelRegistry, ModelSpec
 from repro.serve.scheduler import BatchTile, BucketingScheduler, StreamPacker
 from repro.serve.session import SessionPool, SessionSnapshot, _Session
 
@@ -74,22 +92,7 @@ class ServeResult:
                               # cadence and max_inflight_tiles
     bucket_ticks: int         # padded tick length served at
     batch_size: int           # live samples in the tile
-
-
-@dataclasses.dataclass
-class _PendingTile:
-    """A launched-but-unsynchronised batch tile: the device is still (or may
-    still be) computing ``acc_y`` while the host moves on to later buckets."""
-
-    acc_y: jax.Array          # (b_pad, n_out) device array, possibly in flight
-    labels: np.ndarray
-    tile: BatchTile
-    b_live: int
-
-    def ready(self) -> bool:
-        """Non-blocking readiness probe (conservative where unsupported)."""
-        is_ready = getattr(self.acc_y, "is_ready", None)
-        return bool(is_ready()) if callable(is_ready) else False
+    model_id: str = DEFAULT_MODEL   # which registered model served it
 
 
 @dataclasses.dataclass
@@ -107,6 +110,9 @@ class ServeStats:
     # logits tile per batch instead of seven (T, B, ·) tensors); 0 on the
     # scan backend, which runs no Pallas tile.
     hbm_bytes_streamed: int = 0
+    # model_id → ServeStats for that model's slice of the run; populated by
+    # serve() when the window touched more than one model, else None.
+    per_model: Optional[Dict[str, "ServeStats"]] = None
 
     @classmethod
     def collect(
@@ -132,6 +138,23 @@ class ServeStats:
 
 
 @dataclasses.dataclass
+class _PendingTile:
+    """A launched-but-unsynchronised batch tile: the device is still (or may
+    still be) computing ``acc_y`` while the host moves on to later buckets."""
+
+    acc_y: jax.Array          # (b_pad, n_out) device array, possibly in flight
+    labels: np.ndarray
+    tile: BatchTile
+    b_live: int
+    lane: "_ModelLane"
+
+    def ready(self) -> bool:
+        """Non-blocking readiness probe (conservative where unsupported)."""
+        is_ready = getattr(self.acc_y, "is_ready", None)
+        return bool(is_ready()) if callable(is_ready) else False
+
+
+@dataclasses.dataclass
 class _PendingStreamTile:
     """A launched-but-unharvested streaming tick-tile: the device may still
     be computing while the host packs the next tile."""
@@ -140,6 +163,7 @@ class _PendingStreamTile:
     lanes: List[Tuple["_Session", int, int]]   # (session, ticks, events) at launch
     t_launch: float
     num_ticks: int
+    lane: "_ModelLane"
 
     def ready(self) -> bool:
         is_ready = getattr(self.acc_y, "is_ready", None)
@@ -164,6 +188,101 @@ class StreamStats:
     readmissions: int
     compiled_shapes: int          # distinct step_sessions (T, B) programs
     hbm_bytes_streamed: int = 0
+    # model_id → StreamStats for that model's lane; populated when the
+    # engine serves more than one model, else None.
+    per_model: Optional[Dict[str, "StreamStats"]] = None
+
+
+class _ModelLane:
+    """Per-model serving state inside a :class:`BatchedEngine`.
+
+    One lane per registered model: its own :class:`BucketingScheduler`
+    (whole-sample buckets), :class:`StreamPacker` (streaming ready-queue)
+    and :class:`SessionPool` (carry shapes differ per network, so pools
+    cannot be shared), plus the model-attributed traffic counters.  Tiles
+    never mix models — a launch reads exactly one SRAM image, like the
+    chip — but the engine pump interleaves launches across lanes.
+    """
+
+    def __init__(self, engine: "BatchedEngine", spec: ModelSpec):
+        self.spec = spec
+        cfg, be = spec.cfg, spec.backend
+        budget = be.vmem_budget
+        self.max_batch = engine._max_batch or batching.max_batch_for(
+            cfg, budget, num_devices=be.num_devices
+        )
+        # per-kernel-tile rows, for the analytic HBM traffic accounting
+        self.tile_rows = batching.max_batch_for(cfg, budget)
+        self.scheduler = BucketingScheduler(
+            self.max_batch, engine.tick_granularity, clock=engine._clock,
+            rid_alloc=engine._alloc_rid,
+        )
+        # Pool capacity must seat one full tile of sessions at once; the
+        # trash row on top keeps gather/scatter shapes fixed.
+        capacity = max(
+            engine._max_sessions or batching.max_sessions_for(cfg),
+            self.max_batch,
+        )
+        self.pool = SessionPool(
+            be, capacity, idle_timeout=engine._idle_timeout,
+            clock=engine._clock,
+        )
+        self.packer = StreamPacker(
+            self.max_batch, tick_tile=engine._tick_tile,
+            tick_granularity=engine.tick_granularity,
+        )
+        self.zero_states: Dict[int, Dict[str, jax.Array]] = {}
+        self.tile_lat: List[float] = []
+        self.reset_counters()
+
+    @property
+    def model_id(self) -> str:
+        return self.spec.model_id
+
+    @property
+    def cfg(self) -> RSNNConfig:
+        return self.spec.cfg
+
+    @property
+    def backend(self) -> ExecutionBackend:
+        return self.spec.backend
+
+    @property
+    def weights(self) -> Dict[str, jax.Array]:
+        """The live SRAM image — fetched per launch, so a registry hot-swap
+        applies to the very next tile."""
+        return self.spec.weights
+
+    def reset_counters(self) -> None:
+        self.tile_lat.clear()
+        self.bytes_streamed = 0
+        self.tiles = 0
+        self.events = 0
+        self.ticks = 0
+        self.lanes = 0
+
+    def zero_state(self, b_pad: int):
+        """Cached zero-carry pytree per tile width (a read-only jit input,
+        so reusing it across launches is safe)."""
+        st = self.zero_states.get(b_pad)
+        if st is None:
+            st = self.zero_states[b_pad] = self.backend.init_session_state(
+                b_pad
+            )
+        return st
+
+    def account_tile_bytes(self, num_ticks: int, b_pad: int, fn) -> None:
+        """Attribute one kernel launch's analytic HBM bytes to this lane
+        (scan runs no Pallas tile, so nothing is attributed)."""
+        if self.backend.backend != "kernel":
+            return
+        cfg = self.cfg
+        ndev = self.backend.num_devices
+        shard_b = -(-b_pad // ndev)
+        self.bytes_streamed += ndev * fn(
+            num_ticks, shard_b, cfg.n_in, cfg.n_hid, cfg.n_out,
+            batch_tile=self.tile_rows,
+        )
 
 
 class SessionHandle:
@@ -185,6 +304,10 @@ class SessionHandle:
     @property
     def sid(self) -> int:
         return self._sess.sid
+
+    @property
+    def model_id(self) -> str:
+        return self._sess.model_id
 
     @property
     def closed(self) -> bool:
@@ -213,33 +336,48 @@ class SessionHandle:
 
 
 class BatchedEngine:
-    """Batched AER classification service for one :class:`RSNNConfig` network.
+    """Batched AER classification service over one or many registered models.
 
     Parameters
     ----------
     cfg:
-        The network the weights belong to (e.g. ``Presets.braille(...)``).
+        The network the weights belong to (e.g. ``Presets.braille(...)``) —
+        the single-model convenience path, mutually exclusive with
+        ``registry``.
     params:
         ``{"w_in", "w_rec", "w_out"}`` (+ optional scalar ``"alpha"``) — the
         same pytree :class:`~repro.core.controller.OnlineLearner` trains.
+    registry:
+        A :class:`~repro.serve.registry.ModelRegistry` to serve instead of a
+        single ``(cfg, params)`` pair: every registered model becomes
+        routable via the ``model_id=`` arguments (models registered *after*
+        construction too — lanes materialise on first use).  The first
+        registered model (or ``model_id`` when given) is the default route.
+    model_id:
+        The id the single-model path registers under, and the default route
+        for calls that don't pass ``model_id=``.
     backend:
         ``"kernel" | "scan" | "auto"``, or an existing
         :class:`~repro.core.backend.ExecutionBackend` to share its jit cache
-        (the online-learning-while-serving configuration).
+        (the online-learning-while-serving configuration).  With
+        ``registry=`` each model already resolved its own pooled backend,
+        so this is ignored.
     max_batch:
         Admission size per tile; defaults to one full per-device kernel tile
         times the data-parallel device count
         (:func:`repro.serve.batching.max_batch_for`).  The kernels batch-tile
-        internally, so this is a scheduling knob, not a VMEM cap.
+        internally, so this is a scheduling knob, not a VMEM cap.  Applies
+        per lane (an explicit value caps every model's tiles).
     mesh:
         Data-parallel serving: a mesh whose data axes the backend shards
         every inference tile's sample axis over (weights replicated) —
         admission scales with the device count.
     max_sessions:
-        Streaming capacity ``S_cap`` — resident sessions the device pool
-        holds; defaults to :func:`repro.serve.batching.max_sessions_for`'s
-        byte-budget sizing.  Sessions beyond it are LRU-evicted to host
-        memory (bit-exact) and readmitted on their next packed tile.
+        Streaming capacity ``S_cap`` — resident sessions each model's
+        device pool holds; defaults to
+        :func:`repro.serve.batching.max_sessions_for`'s byte-budget sizing
+        per model.  Sessions beyond it are LRU-evicted to host memory
+        (bit-exact) and readmitted on their next packed tile.
     idle_timeout:
         Seconds of inactivity after which a resident session is offloaded
         (``None`` disables the sweep).
@@ -256,9 +394,11 @@ class BatchedEngine:
 
     def __init__(
         self,
-        cfg: RSNNConfig,
-        params: Dict[str, jax.Array],
+        cfg: Optional[RSNNConfig] = None,
+        params: Optional[Dict[str, jax.Array]] = None,
         *,
+        registry: Optional[ModelRegistry] = None,
+        model_id: str = DEFAULT_MODEL,
         backend: BackendLike = "auto",
         max_batch: Optional[int] = None,
         tick_granularity: int = 32,
@@ -271,79 +411,114 @@ class BatchedEngine:
         tick_tile: Optional[int] = None,
         runtime: Optional[RuntimeConfig] = None,
     ):
-        self.cfg = cfg
-        alpha = float(np.asarray(params.get("alpha", cfg.neuron.alpha)))
-        self.engine = as_backend(
-            cfg, backend, alpha=alpha, vmem_budget=vmem_budget, mesh=mesh,
-            runtime=runtime,
-        )
-        self.backend = self.engine.backend
-        # Size admission and traffic accounting from the budget the backend
-        # actually tiles with — a shared backend (from_learner) keeps its own
-        # (as_backend asserts if the caller explicitly passed a different one).
-        budget = self.engine.vmem_budget
-        self.max_batch = max_batch or batching.max_batch_for(
-            cfg, budget, num_devices=self.engine.num_devices
-        )
-        # per-kernel-tile rows, for the analytic HBM traffic accounting
-        self._tile_rows = batching.max_batch_for(cfg, budget)
         self.tick_granularity = tick_granularity
         # Backpressure for the deferred-sync serve loop: at most this many
         # launched-but-unharvested tiles (each pins its raster + acc_y device
         # buffers) before the host blocks on the oldest.
         self.max_inflight_tiles = max(1, int(max_inflight_tiles))
         self._clock = clock
-        self._bytes_streamed = 0
-        # Quantized SRAM loads go through one jit'd snap program; on
-        # accelerator backends it donates the engine's previous SRAM image so
-        # update_weights reuses those buffers instead of copying every swap.
-        # (CPU has no buffer donation — donating there only emits warnings.)
-        donate = jax.default_backend() in ("tpu", "gpu")
-        self._jit_sram_load = jax.jit(
-            self._sram_load_impl, donate_argnums=(1,) if donate else ()
-        )
-        self.update_weights(params)
-        self.scheduler = BucketingScheduler(
-            self.max_batch, tick_granularity, clock=clock
-        )
-        # ---- streaming session machinery -------------------------------
-        # Pool capacity must seat one full tile of sessions at once; the
-        # trash row on top keeps gather/scatter shapes fixed.
-        capacity = max(
-            max_sessions or batching.max_sessions_for(cfg), self.max_batch
-        )
-        self.pool = SessionPool(
-            self.engine, capacity, idle_timeout=idle_timeout, clock=clock
-        )
-        self.packer = StreamPacker(
-            self.max_batch, tick_tile=tick_tile,
-            tick_granularity=tick_granularity,
-        )
+        self._max_batch = max_batch
+        self._max_sessions = max_sessions
+        self._idle_timeout = idle_timeout
+        self._tick_tile = tick_tile
+        self._next_rid = 0
+        if registry is None:
+            if cfg is None or params is None:
+                raise ValueError(
+                    "BatchedEngine needs either (cfg, params) or registry="
+                )
+            registry = ModelRegistry()
+            registry.register(
+                model_id, cfg, params, backend=backend, runtime=runtime,
+                vmem_budget=vmem_budget, mesh=mesh,
+            )
+        else:
+            if cfg is not None or params is not None:
+                raise ValueError(
+                    "pass either (cfg, params) or registry=, not both"
+                )
+            if len(registry) == 0:
+                raise ValueError("registry has no registered models")
+        self.registry = registry
+        if model_id in registry:
+            self.default_model = model_id
+        elif model_id == DEFAULT_MODEL:
+            self.default_model = registry.ids()[0]
+        else:
+            registry.get(model_id)   # raises KeyError naming the options
+        self._lanes: Dict[str, _ModelLane] = {}
         self._sessions: Dict[int, _Session] = {}
         self._next_sid = 0
-        self._zero_states: Dict[int, Dict[str, jax.Array]] = {}
         self._stream_pending: List[_PendingStreamTile] = []
-        self._tile_lat: List[float] = []
-        self._stream_tiles = 0
-        self._stream_events = 0
-        self._stream_ticks = 0
-        self._stream_lanes = 0
+        self._lane(self.default_model)   # default lane is always live
+
+    # --------------------------------------------------------------- routing
+
+    def _alloc_rid(self) -> int:
+        """Engine-wide request ids: every lane's scheduler draws from this
+        one counter, so rids stay unique and admission-ordered across
+        models."""
+        rid = self._next_rid
+        self._next_rid += 1
+        return rid
+
+    def _lane(self, model_id: Optional[str] = None) -> _ModelLane:
+        """The serving lane for a model (default route when ``None``),
+        created on first use — so models registered after engine
+        construction, e.g. by a learner publishing mid-serve, become
+        routable with no engine-side setup."""
+        mid = self.default_model if model_id is None else model_id
+        lane = self._lanes.get(mid)
+        if lane is None:
+            lane = self._lanes[mid] = _ModelLane(self, self.registry.get(mid))
+        return lane
+
+    def model_ids(self) -> Tuple[str, ...]:
+        """Models currently routable through this engine."""
+        return self.registry.ids()
+
+    # Single-model compatibility surface: the historical attributes resolve
+    # against the default lane, so one-model callers (and the test suite's
+    # whole-sample paths) are unchanged.
+
+    @property
+    def cfg(self) -> RSNNConfig:
+        return self._lane().cfg
+
+    @property
+    def engine(self) -> ExecutionBackend:
+        return self._lane().backend
+
+    @property
+    def backend(self) -> str:
+        return self._lane().backend.backend
+
+    @property
+    def max_batch(self) -> int:
+        return self._lane().max_batch
+
+    @property
+    def scheduler(self) -> BucketingScheduler:
+        return self._lane().scheduler
+
+    @property
+    def packer(self) -> StreamPacker:
+        return self._lane().packer
+
+    @property
+    def pool(self) -> SessionPool:
+        return self._lane().pool
+
+    @property
+    def _weights(self) -> Dict[str, jax.Array]:
+        return self._lane().weights
 
     @property
     def quantized(self) -> bool:
-        """True when tiles execute the fixed-point hardware-equivalence
-        datapath (logits are then membrane-grid integers)."""
-        return self.engine.quant is not None
-
-    def _sram(self, k: str, v: jax.Array) -> jax.Array:
-        """What the engine actually holds per weight: the 8-bit SRAM grid
-        value in quantized mode (the datapath would re-snap anyway — this
-        makes ``_weights`` observable as the SRAM image), raw otherwise.
-        Feedback matrices (``b_fb``) are not SRAM words and pass through."""
-        q = self.engine.quant
-        if q is None or k == "b_fb":
-            return jnp.asarray(v)
-        return q.weight_spec.round_nearest(jnp.asarray(v))
+        """True when default-route tiles execute the fixed-point
+        hardware-equivalence datapath (logits are then membrane-grid
+        integers)."""
+        return self._lane().backend.quant is not None
 
     @classmethod
     def from_learner(cls, learner, **kw) -> "BatchedEngine":
@@ -354,65 +529,48 @@ class BatchedEngine:
         kw.setdefault("backend", learner.backend)
         return cls(learner.cfg, learner.inference_params(), **kw)
 
-    def _sram_load_impl(self, weights, old_weights):
-        """One jit'd SRAM load.  ``old_weights`` — the engine's previous
-        SRAM image — is donated on accelerator backends so the snapped
-        output lands in the old buffers (no per-swap weight copies)."""
-        del old_weights  # only donated for its buffers
-        return {k: self._sram(k, v) for k, v in weights.items()}
-
-    def update_weights(self, weights: Dict[str, jax.Array]) -> None:
-        """Swap in newly-trained weights (no recompilation — weights are
-        jit arguments).  In quantized mode this is the SRAM load: weights
-        are snapped onto the 8-bit grid, through a jit'd program that
-        donates (and thus reuses) the previous SRAM image's buffers."""
-        new = {
-            k: v for k, v in weights.items()
-            if k in ("w_in", "w_rec", "w_out", "b_fb")
-        }
-        if self.engine.quant is None:
-            # float mode: no snap, no copy — the engine aliases the caller's
-            # (device-resident) arrays directly
-            self._weights = {k: jnp.asarray(v) for k, v in new.items()}
-            return
-        old = getattr(self, "_weights", None)
-        if old is not None and set(old) == set(new):
-            self._weights = self._jit_sram_load(new, old)
-        else:
-            self._weights = {k: self._sram(k, v) for k, v in new.items()}
+    def update_weights(
+        self, weights: Dict[str, jax.Array], model_id: Optional[str] = None
+    ) -> None:
+        """Swap in newly-trained weights for one model (no recompilation —
+        weights are jit arguments).  In quantized mode this is the SRAM
+        load: weights are snapped onto the 8-bit grid, through a jit'd
+        program that donates (and thus reuses) the previous SRAM image's
+        buffers.  Delegates to
+        :meth:`~repro.serve.registry.ModelRegistry.update_weights`, so a
+        mis-shaped image fails loudly at the registry boundary."""
+        self.registry.update_weights(
+            self.default_model if model_id is None else model_id, weights
+        )
 
     # ----------------------------------------------------------------- serving
 
-    def _launch_tile(self, tile: BatchTile) -> "_PendingTile":
+    def _launch_tile(self, lane: _ModelLane, tile: BatchTile) -> _PendingTile:
         """Decode, pad and *launch* one batch tile — returns without
         synchronising on the device so consecutive buckets overlap host
         decode with device compute."""
+        cfg = lane.cfg
         events = [r.events for r in tile.requests]
         raster, valid, labels = batching.decode_events_host(
-            events, self.cfg.n_in, tile.num_ticks, self.cfg.label_delay
+            events, cfg.n_in, tile.num_ticks, cfg.label_delay
         )
         b_live = len(events)
-        b_pad = batching.padded_batch_size(b_live, self.max_batch)
+        b_pad = batching.padded_batch_size(b_live, lane.max_batch)
         raster, valid = batching.pad_batch(raster, valid, b_pad)
-        if self.backend == "kernel":
-            # analytic accounting for the inference-specialized kernel; the
-            # scan backend runs no Pallas tile, so no bytes are attributed.
-            # With a data mesh, every device fetches its own replicated
-            # weight set and runs its (shard-padded) slice of the batch.
-            ndev = self.engine.num_devices
-            shard_b = -(-b_pad // ndev)
-            self._bytes_streamed += ndev * traffic.infer_fused_tiled_bytes(
-                tile.num_ticks, shard_b, self.cfg.n_in, self.cfg.n_hid,
-                self.cfg.n_out, batch_tile=self._tile_rows,
-            )
-        out = self.engine.inference(
-            self._weights, jnp.asarray(raster), jnp.asarray(valid)
+        # With a data mesh, every device fetches its own replicated weight
+        # set and runs its (shard-padded) slice of the batch.
+        lane.account_tile_bytes(
+            tile.num_ticks, b_pad, traffic.infer_fused_tiled_bytes
+        )
+        out = lane.backend.inference(
+            lane.weights, jnp.asarray(raster), jnp.asarray(valid)
         )
         return _PendingTile(
-            acc_y=out["acc_y"], labels=labels, tile=tile, b_live=b_live
+            acc_y=out["acc_y"], labels=labels, tile=tile, b_live=b_live,
+            lane=lane,
         )
 
-    def _finalize(self, pending: "_PendingTile") -> List[ServeResult]:
+    def _finalize(self, pending: _PendingTile) -> List[ServeResult]:
         """Materialise one launched tile's results (synchronises on it)."""
         acc_y = np.asarray(pending.acc_y)[: pending.b_live]
         t_done = self._clock()
@@ -425,29 +583,46 @@ class BatchedEngine:
                 latency_s=t_done - req.t_submit,
                 bucket_ticks=pending.tile.num_ticks,
                 batch_size=pending.b_live,
+                model_id=pending.lane.model_id,
             )
             for i, req in enumerate(pending.tile.requests)
         ]
 
-    def run_tile(self, tile: BatchTile) -> List[ServeResult]:
-        """Decode, pad, classify one batch tile; per-request results."""
-        return self._finalize(self._launch_tile(tile))
+    def run_tile(
+        self, tile: BatchTile, model_id: Optional[str] = None
+    ) -> List[ServeResult]:
+        """Decode, pad, classify one batch tile; per-request results.  The
+        tile must come from the same model's scheduler it is run under."""
+        return self._finalize(self._launch_tile(self._lane(model_id), tile))
 
-    def submit(self, events: np.ndarray, meta: Optional[dict] = None) -> int:
-        return self.scheduler.submit(events, meta)
+    def submit(
+        self,
+        events: np.ndarray,
+        meta: Optional[dict] = None,
+        model_id: Optional[str] = None,
+    ) -> int:
+        """Admit one AER sample for a registered model (default route when
+        ``model_id`` is ``None``); returns its engine-unique request id."""
+        return self._lane(model_id).scheduler.submit(events, meta)
 
     # ---------------------------------------------------- session streaming
 
-    def open_session(self, meta: Optional[dict] = None) -> SessionHandle:
+    def open_session(
+        self, meta: Optional[dict] = None, model_id: Optional[str] = None
+    ) -> SessionHandle:
         """Open one AER event stream with persistent recurrent state.
 
-        The session's carry ``(v, z, y, acc_y, n_spk)`` lives in the
-        device-resident :class:`~repro.serve.session.SessionPool` while hot
-        (LRU-evicted to host bit-exactly under capacity pressure) — feed
-        events in arbitrary increments; chunking never changes the result.
+        The session is pinned to its model's lane for life — its carry
+        ``(v, z, y, acc_y, n_spk)`` lives in that model's device-resident
+        :class:`~repro.serve.session.SessionPool` while hot (LRU-evicted to
+        host bit-exactly under capacity pressure) — feed events in
+        arbitrary increments; chunking never changes the result.
         """
-        sess = _Session(self._next_sid, self._clock(), meta)
-        sess.gate_label = self.cfg.eprop.infer_window == "valid"
+        lane = self._lane(model_id)
+        sess = _Session(
+            self._next_sid, self._clock(), meta, model_id=lane.model_id
+        )
+        sess.gate_label = lane.cfg.eprop.infer_window == "valid"
         self._next_sid += 1
         self._sessions[sess.sid] = sess
         return SessionHandle(self, sess)
@@ -455,74 +630,83 @@ class BatchedEngine:
     def _feed(self, sess: _Session, events: np.ndarray) -> int:
         n = sess.feed(events)
         if sess.processable() > 0:
-            self.packer.enqueue(sess)
+            self._lanes[sess.model_id].packer.enqueue(sess)
         return n
 
-    def _launch_chunks(self, sessions, chunks, num_ticks: int):
+    def _launch_chunks(self, lane: _ModelLane, sessions, chunks, num_ticks):
         """The shared streaming launch: seat sessions in the pool (one
         batched admission scatter), decode their chunks into one rectangular
         tick-tile, gather carries → ``step_sessions`` → scatter carries.
         Returns the backend's output state (device values, not synced)."""
-        b_pad = batching.padded_batch_size(len(sessions), self.max_batch)
+        cfg = lane.cfg
+        b_pad = batching.padded_batch_size(len(sessions), lane.max_batch)
         raster, live, valid = batching.decode_session_chunks(
-            chunks, self.cfg.n_in, num_ticks, self.cfg.label_delay,
-            b_pad=b_pad,
+            chunks, cfg.n_in, num_ticks, cfg.label_delay, b_pad=b_pad,
         )
-        slots, admit = self.pool.place(sessions)
+        slots, admit = lane.pool.place(sessions)
         if admit is not None:
-            self.pool.admit(admit)
-        idx = self.pool.padded_slots(slots, b_pad)
-        state = self.pool.gather(idx)
-        out = self.engine.step_sessions(
-            self._weights, jnp.asarray(raster), jnp.asarray(live),
+            lane.pool.admit(admit)
+        idx = lane.pool.padded_slots(slots, b_pad)
+        state = lane.pool.gather(idx)
+        out = lane.backend.step_sessions(
+            lane.weights, jnp.asarray(raster), jnp.asarray(live),
             jnp.asarray(valid), state,
         )
-        self.pool.scatter(idx, out)
-        if self.backend == "kernel":
-            ndev = self.engine.num_devices
-            shard_b = -(-b_pad // ndev)
-            self._bytes_streamed += ndev * traffic.stream_step_tiled_bytes(
-                num_ticks, shard_b, self.cfg.n_in, self.cfg.n_hid,
-                self.cfg.n_out, batch_tile=self._tile_rows,
-            )
-        self._stream_tiles += 1
-        self._stream_lanes += len(sessions)
-        self._stream_ticks += sum(c.n_live for c in chunks)
-        self._stream_events += sum(len(c.sp_tick) for c in chunks)
+        lane.pool.scatter(idx, out)
+        lane.account_tile_bytes(
+            num_ticks, b_pad, traffic.stream_step_tiled_bytes
+        )
+        lane.tiles += 1
+        lane.lanes += len(sessions)
+        lane.ticks += sum(c.n_live for c in chunks)
+        lane.events += sum(len(c.sp_tick) for c in chunks)
         return out
 
-    def _pump_once(self) -> bool:
-        """Pack and launch one streaming tick-tile; False when no session
-        has processable ticks."""
-        nxt = self.packer.next_tile()
+    def _pump_lane_once(self, lane: _ModelLane) -> bool:
+        """Pack and launch one streaming tick-tile from one model's lane;
+        False when none of its sessions has processable ticks."""
+        nxt = lane.packer.next_tile()
         if nxt is None:
             return False
         sessions, num_ticks = nxt
         chunks = [s.take_chunk(num_ticks) for s in sessions]
-        out = self._launch_chunks(sessions, chunks, num_ticks)
+        out = self._launch_chunks(lane, sessions, chunks, num_ticks)
         self._stream_pending.append(_PendingStreamTile(
             acc_y=out["acc_y"],
             lanes=[(s, s.cursor, s.n_events) for s in sessions],
             t_launch=self._clock(),
             num_ticks=num_ticks,
+            lane=lane,
         ))
         for s in sessions:
             if s.processable() > 0:
-                self.packer.enqueue(s)
+                lane.packer.enqueue(s)
         self._harvest_stream(block=False)
         while len(self._stream_pending) > self.max_inflight_tiles:
             self._harvest_one()   # backpressure: block on the oldest tile
         return True
 
+    def _pump_once(self) -> bool:
+        """One interleaving round: launch at most one tick-tile per model
+        lane (fair share across models — no lane starves behind another's
+        backlog); False when no session anywhere has processable ticks."""
+        launched = False
+        for lane in list(self._lanes.values()):
+            launched |= self._pump_lane_once(lane)
+        return launched
+
     def pump(self, drain: bool = False) -> int:
         """Advance every open session through its pending ticks (continuous
-        batching: tiles launch asynchronously, harvested opportunistically).
-        ``drain`` additionally blocks until all launched tiles are
-        harvested.  Returns the number of tiles launched."""
+        batching: tiles launch asynchronously, harvested opportunistically;
+        with several models registered, launches interleave across their
+        lanes round-robin).  ``drain`` additionally blocks until all
+        launched tiles are harvested.  Returns the number of interleaving
+        rounds that launched work."""
         n = 0
         while self._pump_once():
             n += 1
-        self.pool.sweep()
+        for lane in self._lanes.values():
+            lane.pool.sweep()
         if drain:
             self._harvest_stream(block=True)
         return n
@@ -530,7 +714,7 @@ class BatchedEngine:
     def _harvest_one(self) -> None:
         p = self._stream_pending.pop(0)
         acc = np.asarray(p.acc_y)   # synchronises on this tile
-        self._tile_lat.append(self._clock() - p.t_launch)
+        p.lane.tile_lat.append(self._clock() - p.t_launch)
         for i, (sess, ticks, events) in enumerate(p.lanes):
             sess.snapshot = SessionSnapshot(
                 sid=sess.sid, pred=int(np.argmax(acc[i])), logits=acc[i],
@@ -546,16 +730,18 @@ class BatchedEngine:
         offloaded host copy, or zeros for a never-run session.  Pool state
         chains on every launched tile, so this is exact without waiting for
         the harvest loop."""
+        lane = self._lanes[sess.model_id]
         if sess.slot is not None:
-            return np.asarray(self.pool.state["acc_y"][sess.slot])
+            return np.asarray(lane.pool.state["acc_y"][sess.slot])
         if sess.offloaded is not None:
             return np.asarray(sess.offloaded["acc_y"], np.float32)
-        return np.zeros((self.cfg.n_out,), np.float32)
+        return np.zeros((lane.cfg.n_out,), np.float32)
 
     def _finish_session(self, sess: _Session) -> SessionSnapshot:
+        lane = self._lanes[sess.model_id]
         sess.closed = True   # extends the horizon to the last fed tick
         if sess.processable() > 0:
-            self.packer.enqueue(sess)
+            lane.packer.enqueue(sess)
         while sess.processable() > 0 and self._pump_once():
             pass
         self._harvest_stream(block=True)
@@ -566,53 +752,97 @@ class BatchedEngine:
             final=True,
         )
         sess.snapshot = snap
-        self.pool.release(sess)
+        lane.pool.release(sess)
         self._sessions.pop(sess.sid, None)
         return snap
 
     def _abandon_session(self, sess: _Session) -> None:
         sess.closed = True
-        self.pool.release(sess)
+        self._lanes[sess.model_id].pool.release(sess)
         self._sessions.pop(sess.sid, None)
 
     def reset_stream_stats(self) -> None:
-        """Zero the streaming counters (start of a measurement window)."""
-        self._tile_lat.clear()
-        self._stream_tiles = 0
-        self._stream_events = 0
-        self._stream_ticks = 0
-        self._stream_lanes = 0
-        self._bytes_streamed = 0
+        """Zero the streaming counters of every lane (start of a
+        measurement window)."""
+        for lane in self._lanes.values():
+            lane.reset_counters()
 
-    def stream_stats(self, wall_s: float) -> StreamStats:
-        """Streaming counters since the last :meth:`reset_stream_stats`,
-        normalised over the caller-measured wall window."""
-        lat = np.array(self._tile_lat) if self._tile_lat else np.zeros(1)
-        tiles = self._stream_tiles
+    def _lane_stream_stats(self, lane: _ModelLane, wall_s: float) -> StreamStats:
+        lat = np.array(lane.tile_lat) if lane.tile_lat else np.zeros(1)
+        tiles = lane.tiles
+        sessions = sum(
+            1 for s in self._sessions.values() if s.model_id == lane.model_id
+        )
         return StreamStats(
-            sessions=len(self._sessions),
+            sessions=sessions,
             tiles=tiles,
-            events=self._stream_events,
-            ticks=self._stream_ticks,
+            events=lane.events,
+            ticks=lane.ticks,
             wall_s=wall_s,
             events_per_sec=(
-                self._stream_events / wall_s if wall_s > 0 else float("inf")
+                lane.events / wall_s if wall_s > 0 else float("inf")
             ),
             ticks_per_sec=(
-                self._stream_ticks / wall_s if wall_s > 0 else float("inf")
+                lane.ticks / wall_s if wall_s > 0 else float("inf")
             ),
             p50_tile_latency_s=float(np.percentile(lat, 50)),
             p99_tile_latency_s=float(np.percentile(lat, 99)),
-            mean_lanes=(self._stream_lanes / tiles) if tiles else 0.0,
-            evictions=self.pool.evictions,
-            readmissions=self.pool.readmissions,
-            compiled_shapes=self.engine.compiled_shapes("step_sessions"),
-            hbm_bytes_streamed=self._bytes_streamed,
+            mean_lanes=(lane.lanes / tiles) if tiles else 0.0,
+            evictions=lane.pool.evictions,
+            readmissions=lane.pool.readmissions,
+            compiled_shapes=lane.backend.compiled_shapes("step_sessions"),
+            hbm_bytes_streamed=lane.bytes_streamed,
+        )
+
+    def _compiled_step_shapes(self) -> int:
+        """Distinct ``step_sessions`` programs across the engine's lanes,
+        counting each pooled backend once (same-bucket models share one jit
+        cache, and its shapes must not be double-counted)."""
+        uniq = {id(l.backend): l.backend for l in self._lanes.values()}
+        return sum(
+            be.compiled_shapes("step_sessions") for be in uniq.values()
+        )
+
+    def stream_stats(
+        self, wall_s: float, model_id: Optional[str] = None
+    ) -> StreamStats:
+        """Streaming counters since the last :meth:`reset_stream_stats`,
+        normalised over the caller-measured wall window.  ``model_id``
+        selects one lane; otherwise counters aggregate across lanes, with
+        the per-lane breakdown attached as ``per_model`` when the engine
+        serves several models."""
+        if model_id is not None:
+            return self._lane_stream_stats(self._lane(model_id), wall_s)
+        lanes = list(self._lanes.values())
+        per = {l.model_id: self._lane_stream_stats(l, wall_s) for l in lanes}
+        lat = [t for l in lanes for t in l.tile_lat]
+        arr = np.array(lat) if lat else np.zeros(1)
+        tiles = sum(l.tiles for l in lanes)
+        events = sum(l.events for l in lanes)
+        ticks = sum(l.ticks for l in lanes)
+        return StreamStats(
+            sessions=len(self._sessions),
+            tiles=tiles,
+            events=events,
+            ticks=ticks,
+            wall_s=wall_s,
+            events_per_sec=events / wall_s if wall_s > 0 else float("inf"),
+            ticks_per_sec=ticks / wall_s if wall_s > 0 else float("inf"),
+            p50_tile_latency_s=float(np.percentile(arr, 50)),
+            p99_tile_latency_s=float(np.percentile(arr, 99)),
+            mean_lanes=(sum(l.lanes for l in lanes) / tiles) if tiles else 0.0,
+            evictions=sum(l.pool.evictions for l in lanes),
+            readmissions=sum(l.pool.readmissions for l in lanes),
+            compiled_shapes=self._compiled_step_shapes(),
+            hbm_bytes_streamed=sum(l.bytes_streamed for l in lanes),
+            per_model=per if len(lanes) > 1 else None,
         )
 
     # ----------------------------------------- whole-sample compat wrapper
 
-    def _launch_session_tile(self, tile: BatchTile) -> "_PendingTile":
+    def _launch_session_tile(
+        self, lane: _ModelLane, tile: BatchTile
+    ) -> _PendingTile:
         """One whole-sample bucket tile executed through the session-step
         op as a single open-feed-close chunk, with
         :func:`~repro.serve.batching.decode_events_host` semantics exactly:
@@ -625,49 +855,43 @@ class BatchedEngine:
         unobserved — and skips the session pool entirely: whole-sample
         serving pays no pool-sized scatter and no per-request host
         bookkeeping."""
+        cfg = lane.cfg
         T = tile.num_ticks
         bufs = [req.events for req in tile.requests]
-        b_pad = batching.padded_batch_size(len(bufs), self.max_batch)
+        b_pad = batching.padded_batch_size(len(bufs), lane.max_batch)
         raster, valid, labels = batching.decode_events_host(
-            bufs, self.cfg.n_in, T, self.cfg.label_delay
+            bufs, cfg.n_in, T, cfg.label_delay
         )
         raster, valid = batching.pad_batch(raster, valid, b_pad)
         live = np.zeros((T, b_pad), np.float32)
         live[:, : len(bufs)] = 1.0
-        out = self.engine.step_sessions(
-            self._weights, jnp.asarray(raster), jnp.asarray(live),
-            jnp.asarray(valid), self._zero_state(b_pad),
+        out = lane.backend.step_sessions(
+            lane.weights, jnp.asarray(raster), jnp.asarray(live),
+            jnp.asarray(valid), lane.zero_state(b_pad),
         )
-        if self.backend == "kernel":
-            ndev = self.engine.num_devices
-            shard_b = -(-b_pad // ndev)
-            self._bytes_streamed += ndev * traffic.stream_step_tiled_bytes(
-                T, shard_b, self.cfg.n_in, self.cfg.n_hid, self.cfg.n_out,
-                batch_tile=self._tile_rows,
-            )
-        self._stream_tiles += 1
-        self._stream_lanes += len(bufs)
-        self._stream_ticks += T * len(bufs)
+        lane.account_tile_bytes(T, b_pad, traffic.stream_step_tiled_bytes)
+        lane.tiles += 1
+        lane.lanes += len(bufs)
+        lane.ticks += T * len(bufs)
         return _PendingTile(
             acc_y=out["acc_y"], labels=labels, tile=tile,
-            b_live=len(bufs),
+            b_live=len(bufs), lane=lane,
         )
 
-    def _zero_state(self, b_pad: int):
-        """Cached zero-carry pytree per tile width (a read-only jit input,
-        so reusing it across launches is safe)."""
-        st = self._zero_states.get(b_pad)
-        if st is None:
-            st = self._zero_states[b_pad] = self.engine.init_session_state(
-                b_pad
-            )
-        return st
-
     def serve(
-        self, stream: Iterable[np.ndarray], flush: bool = True
+        self,
+        stream: Iterable[Union[np.ndarray, Tuple[np.ndarray, str]]],
+        flush: bool = True,
+        model_id: Optional[str] = None,
     ) -> Tuple[List[ServeResult], ServeStats]:
         """Run a whole stream of AER sample buffers; results in admission
         (rid) order plus throughput/latency stats.
+
+        Stream items are raw event buffers (routed to ``model_id``, default
+        route when ``None``) or ``(events, model_id)`` pairs — mixed-model
+        traffic interleaves freely; each buffer lands in its own model's
+        scheduler and tiles stay single-model.  Per-model stats ride in
+        ``stats.per_model`` whenever more than one model served.
 
         This is the whole-sample *compatibility wrapper* over the session
         runtime: each bucketed tile (same
@@ -683,55 +907,90 @@ class BatchedEngine:
         at end-of-stream.
         """
         t0 = self._clock()
-        self._bytes_streamed = 0
+        bytes0 = {
+            mid: lane.bytes_streamed for mid, lane in self._lanes.items()
+        }
         results: List[ServeResult] = []
         pending: List[_PendingTile] = []
         batches = 0
+        batches_by: Dict[str, int] = {}
+        touched: Dict[str, _ModelLane] = {}
+
+        def launch(lane: _ModelLane, tile: BatchTile) -> None:
+            nonlocal batches
+            pending.append(self._launch_session_tile(lane, tile))
+            batches += 1
+            batches_by[lane.model_id] = batches_by.get(lane.model_id, 0) + 1
 
         def harvest(block: bool) -> None:
             while pending and (block or pending[0].ready()):
                 results.extend(self._finalize(pending.pop(0)))
 
-        for events in stream:
-            self.submit(events)
-            for tile in self.scheduler.ready_tiles():
-                pending.append(self._launch_session_tile(tile))
-                batches += 1
+        for item in stream:
+            if isinstance(item, tuple):
+                events, mid = item
+            else:
+                events, mid = item, model_id
+            lane = self._lane(mid)
+            touched[lane.model_id] = lane
+            lane.scheduler.submit(events)
+            for tile in lane.scheduler.ready_tiles():
+                launch(lane, tile)
             harvest(block=False)
             while len(pending) > self.max_inflight_tiles:
                 # backpressure: the device fell behind — block on the oldest
                 # tile so in-flight buffers stay bounded
                 results.extend(self._finalize(pending.pop(0)))
         if flush:
-            for tile in self.scheduler.drain():
-                pending.append(self._launch_session_tile(tile))
-                batches += 1
+            for lane in touched.values():
+                for tile in lane.scheduler.drain():
+                    launch(lane, tile)
         harvest(block=True)   # the single per-drain sync
         wall = self._clock() - t0
         results.sort(key=lambda r: r.rid)
+
+        def lane_bytes(lane: _ModelLane) -> int:
+            return lane.bytes_streamed - bytes0.get(lane.model_id, 0)
+
         stats = ServeStats.collect(
-            results, wall, batches,
-            self.engine.compiled_shapes("step_sessions"),
-            hbm_bytes=self._bytes_streamed,
+            results, wall, batches, self._compiled_step_shapes(),
+            hbm_bytes=sum(lane_bytes(l) for l in self._lanes.values()),
         )
+        if len(touched) > 1:
+            stats.per_model = {
+                mid: ServeStats.collect(
+                    [r for r in results if r.model_id == mid],
+                    wall,
+                    batches_by.get(mid, 0),
+                    lane.backend.compiled_shapes("step_sessions"),
+                    hbm_bytes=lane_bytes(lane),
+                )
+                for mid, lane in touched.items()
+            }
         return results, stats
 
-    def warmup(self, num_ticks: int, batch: Optional[int] = None) -> None:
+    def warmup(
+        self,
+        num_ticks: int,
+        batch: Optional[int] = None,
+        model_id: Optional[str] = None,
+    ) -> None:
         """Pre-compile the forward programs for one tile shape
         (excluded-from-bench compile time; also useful before
         latency-sensitive serving).  Warms both the session-step program
         (the ``serve()``/streaming path) and the whole-sample inference
         program (the direct ``run_tile`` path)."""
-        b = batching.padded_batch_size(batch or self.max_batch, self.max_batch)
+        lane = self._lane(model_id)
+        b = batching.padded_batch_size(batch or lane.max_batch, lane.max_batch)
         t = batching.bucket_ticks(num_ticks, self.tick_granularity)
-        raster = jnp.zeros((t, b, self.cfg.n_in), jnp.float32)
+        raster = jnp.zeros((t, b, lane.cfg.n_in), jnp.float32)
         valid = jnp.ones((t, b), jnp.float32)
         jax.block_until_ready(
-            self.engine.inference(self._weights, raster, valid)["acc_y"]
+            lane.backend.inference(lane.weights, raster, valid)["acc_y"]
         )
-        state = self.engine.init_session_state(b)
+        state = lane.backend.init_session_state(b)
         jax.block_until_ready(
-            self.engine.step_sessions(
-                self._weights, raster, valid, valid, state
+            lane.backend.step_sessions(
+                lane.weights, raster, valid, valid, state
             )["acc_y"]
         )

@@ -1,0 +1,298 @@
+"""Model registry: runtime-reprogrammable multi-model serving state.
+
+The paper's SoC is runtime-reprogrammable — the host reloads ReckOn's
+weight SRAM over SPI, so one accelerator fabric serves many networks (the
+Braille classifier and the cue-accumulation task are two programs for the
+same chip).  This module is that capability's software twin:
+
+* :class:`ModelSpec` — one deployable model keyed by ``model_id``: its
+  :class:`~repro.core.rsnn.RSNNConfig` (the SPI parameter bank), its quant
+  contract (the fixed-point datapath registers, via the resolved backend),
+  and its weight-SRAM image (snapped onto the 8-bit grid in quantized
+  mode).
+* :class:`ModelRegistry` — ``register`` / ``deregister`` / ``get`` plus
+  :meth:`~ModelRegistry.update_weights`, the **hot-swap**: a jit'd SRAM
+  load (buffer-donating on accelerator backends, exactly the PR 5 engine
+  path) replaces a registered model's image mid-serve with zero
+  recompilation — weights are jit *arguments* everywhere downstream.
+
+Backends come from one shared :class:`~repro.core.backend.BackendPool`:
+models whose configs fall in the same execution bucket
+(:func:`~repro.core.backend.bucket_key` — the ``(T, N, H, O, quant)``
+shape bucket plus every baked trace-time constant) share a single
+:class:`~repro.core.backend.ExecutionBackend` and therefore one jit cache.
+Registering a second same-shaped model, or hot-swapping any model, never
+compiles anything (asserted in ``tests/test_multimodel.py``).
+
+Shape discipline: a registry knows every model's expected weight shapes
+from its config, so a mis-shaped SRAM image — the classic symptom of
+routing weights to the wrong ``model_id`` — fails at the registry boundary
+with a loud :class:`ValueError` naming the model and the per-matrix shape
+diff, instead of surfacing as a jit shape error three layers down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import (
+    BackendLike,
+    BackendPool,
+    ExecutionBackend,
+    RuntimeConfig,
+    as_backend,
+)
+from repro.core.rsnn import RSNNConfig
+
+# The model_id single-model entry points act on when the caller doesn't
+# route explicitly — what `BatchedEngine(cfg, params)` registers.
+DEFAULT_MODEL = "default"
+
+# The weight-SRAM image keys (b_fb is the e-prop feedback matrix — not SRAM
+# words on chip, but it rides with the image so a swap replaces the whole
+# learnable state consistently).
+SRAM_KEYS = ("w_in", "w_rec", "w_out", "b_fb")
+
+
+def expected_shapes(cfg: RSNNConfig) -> Dict[str, Tuple[int, int]]:
+    """Weight-SRAM image shapes a config's datapath requires."""
+    shapes = {
+        "w_in": (cfg.n_in, cfg.n_hid),
+        "w_rec": (cfg.n_hid, cfg.n_hid),
+        "w_out": (cfg.n_hid, cfg.n_out),
+    }
+    if cfg.eprop.feedback == "random":
+        shapes["b_fb"] = (cfg.n_hid, cfg.n_out)
+    return shapes
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """One registered model: config + quant contract + weight-SRAM image.
+
+    ``weights`` is the live image every launch reads (in quantized mode:
+    values already snapped onto the 8-bit SRAM grid, so the spec is
+    observable as exactly what the chip's SRAM would hold).  ``backend`` is
+    the pooled execution backend — possibly shared with other specs whose
+    configs bucket identically.
+    """
+
+    model_id: str
+    cfg: RSNNConfig
+    backend: ExecutionBackend
+    weights: Dict[str, jax.Array]
+    swaps: int = 0                   # completed hot-swaps (update_weights)
+
+    @property
+    def quant(self):
+        """The fixed-point contract tiles run under (None = float)."""
+        return self.backend.quant
+
+    @property
+    def runtime(self) -> RuntimeConfig:
+        return self.backend.runtime
+
+
+class ModelRegistry:
+    """``model_id`` → :class:`ModelSpec`, over one shared backend pool.
+
+    The registry owns model *identity* (which configs/weights exist and
+    what each is called); execution stays in the pooled backends and
+    serving stays in :class:`~repro.serve.engine.BatchedEngine` — an engine
+    constructed with ``registry=`` routes every request's ``model_id``
+    here.  Registration order is preserved (the first registered model is
+    the engine's default route).
+    """
+
+    def __init__(self, pool: Optional[BackendPool] = None):
+        self.pool = pool if pool is not None else BackendPool()
+        self._specs: "OrderedDict[str, ModelSpec]" = OrderedDict()
+        # Quantized SRAM loads go through one jit'd snap program per weight
+        # grid; on accelerator backends it donates the model's previous SRAM
+        # image so hot-swaps reuse those buffers instead of copying.
+        self._donate = jax.default_backend() in ("tpu", "gpu")
+        self._loaders: Dict[object, object] = {}
+
+    # ------------------------------------------------------------- lookup
+
+    def __contains__(self, model_id: str) -> bool:
+        return model_id in self._specs
+
+    def __len__(self) -> int:
+        return len(self._specs)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._specs)
+
+    def ids(self) -> Tuple[str, ...]:
+        """Registered model ids, in registration order."""
+        return tuple(self._specs)
+
+    def get(self, model_id: str) -> ModelSpec:
+        spec = self._specs.get(model_id)
+        if spec is None:
+            raise KeyError(
+                f"model {model_id!r} is not registered "
+                f"(registered: {list(self._specs) or 'none'})"
+            )
+        return spec
+
+    # ---------------------------------------------------------- lifecycle
+
+    def register(
+        self,
+        model_id: str,
+        cfg: RSNNConfig,
+        params: Dict[str, jax.Array],
+        *,
+        backend: BackendLike = "auto",
+        runtime: Optional[RuntimeConfig] = None,
+        **loose,
+    ) -> ModelSpec:
+        """Register a model: resolve its (pooled) backend, validate and
+        snap its weight-SRAM image, and make it routable by ``model_id``.
+
+        ``params`` is the learner-side pytree (``w_in/w_rec/w_out`` +
+        optional ``b_fb``/scalar ``alpha``); ``backend`` accepts a name, a
+        :class:`~repro.core.backend.RuntimeConfig`, or an existing
+        :class:`~repro.core.backend.ExecutionBackend` (adopted into the
+        pool, so a learner's live jit cache is shared).  Registering into
+        an already-bucketed shape constructs nothing new.
+        """
+        if model_id in self._specs:
+            raise ValueError(
+                f"model {model_id!r} already registered — deregister it "
+                "first, or use update_weights() to hot-swap its SRAM image"
+            )
+        alpha = loose.pop(
+            "alpha", float(np.asarray(params.get("alpha", cfg.neuron.alpha)))
+        )
+        be = as_backend(
+            cfg, backend, alpha=alpha, runtime=runtime,
+            model_id=model_id, pool=self.pool, **loose,
+        )
+        image = self._validated_image(model_id, cfg, params)
+        spec = ModelSpec(
+            model_id=model_id, cfg=cfg, backend=be,
+            weights=self._snap(be, image),
+        )
+        self._specs[model_id] = spec
+        return spec
+
+    def deregister(self, model_id: str) -> ModelSpec:
+        """Forget a model (its pooled backend stays — other models may
+        bucket onto it, and jit caches are harmless to keep warm)."""
+        spec = self.get(model_id)
+        del self._specs[model_id]
+        return spec
+
+    # ------------------------------------------------------------ hot-swap
+
+    def update_weights(
+        self, model_id: str, weights: Dict[str, jax.Array]
+    ) -> ModelSpec:
+        """Hot-swap a registered model's weight-SRAM image (the SPI weight
+        reload, mid-serve): shape-validated against the spec, snapped onto
+        the SRAM grid in quantized mode through a jit'd load that donates
+        the previous image's buffers on accelerator backends.  Never
+        recompiles — weights are jit arguments everywhere downstream, and
+        in-flight launches keep the image they were launched with.
+
+        Partial images are allowed (a learner publishing only the trainable
+        ``w_in/w_rec/w_out`` leaves a registered feedback matrix in place) —
+        provided matrices are validated, missing ones keep their current
+        values."""
+        spec = self.get(model_id)
+        image = self._validated_image(
+            model_id, spec.cfg, weights, require_all=False
+        )
+        old = spec.weights
+        if spec.quant is not None and set(old) == set(image):
+            loader = self._loader(spec.backend)
+            spec.weights = loader(image, old)
+        else:
+            spec.weights = self._snap(spec.backend, {**old, **image})
+        spec.swaps += 1
+        return spec
+
+    # ------------------------------------------------------------ plumbing
+
+    def _validated_image(
+        self,
+        model_id: str,
+        cfg: RSNNConfig,
+        weights: Dict[str, jax.Array],
+        *,
+        require_all: bool = True,
+    ) -> Dict[str, jax.Array]:
+        """Filter a params pytree down to the SRAM image keys and check
+        every shape against the registered config — the loud boundary that
+        turns a mis-routed image into an actionable error.  An empty image
+        is always an error; with ``require_all=False`` (hot-swap) a partial
+        image passes as long as what *is* present fits."""
+        image = {k: v for k, v in weights.items() if k in SRAM_KEYS}
+        want = expected_shapes(cfg)
+        missing = (
+            [k for k in want if k not in image]
+            if require_all or not image
+            else []
+        )
+        fb = (cfg.n_hid, cfg.n_out)   # b_fb rides along even when symmetric
+        checked = want if "b_fb" in want else {**want, "b_fb": fb}
+        diffs = [
+            f"{k}: expected {checked[k]}, got {tuple(image[k].shape)}"
+            for k in checked
+            if k in image and tuple(image[k].shape) != checked[k]
+        ]
+        if missing or diffs:
+            raise ValueError(
+                f"weight-SRAM image mismatch for model {model_id!r} "
+                f"(n_in={cfg.n_in}, n_hid={cfg.n_hid}, n_out={cfg.n_out}): "
+                + "; ".join(
+                    ([f"missing {missing}"] if missing else []) + diffs
+                )
+            )
+        return image
+
+    @staticmethod
+    def _sram(backend: ExecutionBackend, k: str, v) -> jax.Array:
+        """One image entry as the spec holds it: the 8-bit SRAM grid value
+        in quantized mode (the datapath would re-snap anyway — this makes
+        the spec observable as the SRAM image), raw otherwise.  Feedback
+        matrices are not SRAM words and pass through."""
+        q = backend.quant
+        if q is None or k == "b_fb":
+            return jnp.asarray(v)
+        return q.weight_spec.round_nearest(jnp.asarray(v))
+
+    def _snap(self, backend: ExecutionBackend, image: Dict) -> Dict:
+        return {k: self._sram(backend, k, v) for k, v in image.items()}
+
+    def _loader(self, backend: ExecutionBackend):
+        """The jit'd donated SRAM load for one backend's weight grid (one
+        program per quant mode, cached)."""
+        key = backend.quant
+        fn = self._loaders.get(key)
+        if fn is None:
+            def load(new, old):
+                del old  # only donated for its buffers
+                return self._snap(backend, new)
+
+            fn = jax.jit(
+                load, donate_argnums=(1,) if self._donate else ()
+            )
+            self._loaders[key] = fn
+        return fn
+
+    # ------------------------------------------------------------- stats
+
+    def compiled_shapes(self, op: Optional[str] = None) -> int:
+        """Distinct compiled tile shapes across the shared pool — the
+        registry-level recompile counter hot-swap assertions gate on."""
+        return self.pool.compiled_shapes(op)

@@ -64,6 +64,12 @@ class BucketingScheduler:
     diversity: every request pays at most ``granularity - 1`` dead ticks,
     and the engine compiles at most ``ceil(max_ticks / granularity)``
     distinct time lengths.
+
+    ``rid_alloc`` injects the request-id counter.  A multi-model engine
+    runs one scheduler per registered model (tiles must stay single-model —
+    one network per launch, like one SRAM image per chip program) but hands
+    every scheduler the same allocator, so rids stay unique and
+    admission-ordered across the whole engine.
     """
 
     def __init__(
@@ -71,6 +77,7 @@ class BucketingScheduler:
         max_batch: int,
         tick_granularity: int = 32,
         clock: Callable[[], float] = time.monotonic,
+        rid_alloc: Optional[Callable[[], int]] = None,
     ):
         assert max_batch >= 1 and tick_granularity >= 1
         self.max_batch = max_batch
@@ -78,6 +85,12 @@ class BucketingScheduler:
         self._clock = clock
         self._buckets: Dict[int, List[ServeRequest]] = OrderedDict()
         self._next_rid = 0
+        self._rid_alloc = rid_alloc or self._alloc_rid
+
+    def _alloc_rid(self) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        return rid
 
     def submit(self, events: np.ndarray, meta: Optional[dict] = None) -> int:
         """Admit one AER sample stream; returns its request id."""
@@ -85,14 +98,13 @@ class BucketingScheduler:
         native = batching.request_ticks(events)
         bucket = batching.bucket_ticks(native, self.tick_granularity)
         req = ServeRequest(
-            rid=self._next_rid,
+            rid=self._rid_alloc(),
             events=events,
             native_ticks=native,
             bucket=bucket,
             t_submit=self._clock(),
             meta=meta,
         )
-        self._next_rid += 1
         self._buckets.setdefault(bucket, []).append(req)
         return req.rid
 

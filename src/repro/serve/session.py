@@ -18,6 +18,12 @@ one session costs :func:`repro.kernels.rsnn_step.session_state_bytes`
 ``S_cap``.  Tiles stay sized by ``vmem_budget`` exactly as before — the two
 budgets are independent (HBM-resident pool vs VMEM-resident tile).
 
+Multi-model serving runs **one pool per registered model**: carry shapes
+are ``(·, n_hid)`` / ``(·, n_out)``, which differ per network, so a
+session is pinned to its model's pool (``_Session.model_id``) for life and
+eviction/readmission policy is per-model — capacity math adds up over the
+models an engine serves (see ``docs/serving.md``).
+
 Host-side bookkeeping lives in :class:`_Session` (pending spike events,
 stream cursor, label/END scalars); the public face is
 :class:`repro.serve.engine.SessionHandle` (``feed`` / ``poll`` / ``result``
@@ -59,11 +65,22 @@ class _Session:
         "sid", "slot", "meta", "sp_tick", "sp_addr", "sp_ptr", "cursor",
         "max_fed_tick", "label", "label_tick", "label_seen", "end_seen",
         "end_tick", "closed", "n_events", "t_open", "t_last", "snapshot",
-        "offloaded", "queued", "gate_label",
+        "offloaded", "queued", "gate_label", "model_id",
     )
 
-    def __init__(self, sid: int, now: float, meta: Optional[dict] = None):
+    def __init__(
+        self,
+        sid: int,
+        now: float,
+        meta: Optional[dict] = None,
+        model_id: str = "default",
+    ):
         self.sid = sid
+        # Which registered model's network (and therefore which per-model
+        # carry pool / stream packer) this stream runs against — state
+        # shapes differ per model, so a session is pinned to its model's
+        # pool for life.
+        self.model_id = model_id
         self.slot: Optional[int] = None    # pool row; None ⇒ offloaded/new
         self.meta = meta
         # pending spike events (absolute ticks, tick-ordered); consumed by

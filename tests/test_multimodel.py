@@ -1,0 +1,446 @@
+"""Multi-model serving (ISSUE 8): the model registry and the routed engine.
+
+The paper's SoC is runtime-reprogrammable — one ReckOn fabric, many weight-SRAM
+programs.  These tests gate the software twin end to end: registry lifecycle
+and the loud shape-mismatch boundary, bucket-shared backends (registering a
+same-shaped model compiles nothing), mixed Braille+cue traffic through one
+engine bit-identical to dedicated single-model engines (whole-sample submits
+and interleaved streaming sessions, float and quantized, both backends),
+hot-swap with an asserted zero-recompile count, a learner publishing its live
+weights into a registry mid-training, and the quantized cue datapath against
+the integer golden reference.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reckon_cue
+from repro.core import aer, quant_ref
+from repro.core.controller import ControllerConfig, OnlineLearner
+from repro.core.rsnn import Presets, init_params, trainable
+from repro.data.braille import BrailleConfig, make_braille_dataset
+from repro.data.pipeline import make_pipeline
+from repro.optim.eprop_opt import EpropSGDConfig
+from repro.serve import (
+    DEFAULT_MODEL,
+    BatchedEngine,
+    ModelRegistry,
+    expected_shapes,
+)
+from repro.serve.batching import decode_events_host
+
+
+def _request(rng, n_in, ticks, label=1):
+    raster = (rng.random((ticks, n_in)) < 0.25).astype(np.float32)
+    ev = aer.encode_sample(
+        raster, label, label_tick=max(0, ticks // 4), end_tick=ticks - 1
+    )
+    ev = np.asarray(ev, np.uint32)
+    return ev[np.argsort(ev & aer.MAX_TICK, kind="stable")]
+
+
+def _braille_cfg(T=32, quantized=False):
+    return Presets.braille(n_classes=3, num_ticks=T, quantized=quantized)
+
+
+def _two_models(quantized=False, backend="scan"):
+    """One registry holding a Braille classifier and a reduced cue network —
+    different shapes, so they exercise genuinely distinct lanes — plus a
+    per-model request list."""
+    cfg_b = _braille_cfg(quantized=quantized)
+    cfg_c = reckon_cue.reduced(quantized=quantized)
+    p_b = init_params(jax.random.key(0), cfg_b)
+    p_c = init_params(jax.random.key(1), cfg_c)
+    reg = ModelRegistry()
+    reg.register("braille", cfg_b, p_b, backend=backend)
+    reg.register("cue", cfg_c, p_c, backend=backend)
+    rng = np.random.default_rng(42)
+    reqs = {
+        "braille": [
+            _request(rng, cfg_b.n_in, int(rng.integers(12, 33)), label=i % 3)
+            for i in range(4)
+        ],
+        "cue": [
+            _request(rng, cfg_c.n_in, int(rng.integers(16, 41)), label=i % 2)
+            for i in range(4)
+        ],
+    }
+    return reg, {"braille": (cfg_b, p_b), "cue": (cfg_c, p_c)}, reqs
+
+
+def _mixed_stream(reqs):
+    """Alternate models word-for-word — worst-case interleaving."""
+    out = []
+    for i in range(max(len(v) for v in reqs.values())):
+        for mid, evs in reqs.items():
+            if i < len(evs):
+                out.append((evs[i], mid))
+    return out
+
+
+# --------------------------------------------------------------------------
+# registry lifecycle + the loud shape boundary
+# --------------------------------------------------------------------------
+
+
+def test_registry_lifecycle():
+    cfg = _braille_cfg()
+    params = init_params(jax.random.key(0), cfg)
+    reg = ModelRegistry()
+    assert len(reg) == 0 and "a" not in reg
+
+    spec = reg.register("a", cfg, params, backend="scan")
+    assert spec.model_id == "a" and "a" in reg
+    assert reg.get("a") is spec and reg.ids() == ("a",)
+    assert set(spec.weights) == set(expected_shapes(cfg))
+
+    reg.register("b", cfg, init_params(jax.random.key(1), cfg),
+                 backend="scan")
+    assert reg.ids() == ("a", "b") and list(reg) == ["a", "b"]
+
+    # duplicate ids refuse; the image survives untouched
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", cfg, params, backend="scan")
+
+    # unknown lookups name the options
+    with pytest.raises(KeyError, match="'a', 'b'"):
+        reg.get("nope")
+
+    gone = reg.deregister("a")
+    assert gone is spec and "a" not in reg and reg.ids() == ("b",)
+    with pytest.raises(KeyError):
+        reg.deregister("a")
+
+
+def test_mis_shaped_image_fails_loudly():
+    """A mis-routed SRAM image — cue weights sent to the Braille model —
+    dies at the registry boundary with the model id and the per-matrix
+    shape diff in the message, not as a jit shape error downstream."""
+    cfg_b = _braille_cfg()
+    cfg_c = reckon_cue.reduced()
+    p_b = init_params(jax.random.key(0), cfg_b)
+    p_c = init_params(jax.random.key(1), cfg_c)
+
+    reg = ModelRegistry()
+    with pytest.raises(ValueError) as ei:
+        reg.register("braille", cfg_b, p_c, backend="scan")
+    msg = str(ei.value)
+    assert "'braille'" in msg and "w_in" in msg
+    assert f"expected {(cfg_b.n_in, cfg_b.n_hid)}" in msg
+    assert f"got {(cfg_c.n_in, cfg_c.n_hid)}" in msg
+
+    reg.register("braille", cfg_b, p_b, backend="scan")
+    before = {k: np.asarray(v) for k, v in reg.get("braille").weights.items()}
+
+    # hot-swap with the wrong model's weights: same loud failure...
+    with pytest.raises(ValueError, match="'braille'"):
+        reg.update_weights("braille", trainable(p_c))
+    # ...and an empty image is never a silent no-op swap
+    with pytest.raises(ValueError, match="missing"):
+        reg.update_weights("braille", {"alpha": p_b["alpha"]})
+    # the registered image survived both rejected swaps untouched
+    spec = reg.get("braille")
+    assert spec.swaps == 0
+    for k, v in before.items():
+        np.testing.assert_array_equal(np.asarray(spec.weights[k]), v)
+
+    # partial-but-well-shaped images are the supported learner publish
+    reg.update_weights("braille", {"w_out": p_b["w_out"] * 0.5})
+    assert spec.swaps == 1
+    np.testing.assert_array_equal(
+        np.asarray(spec.weights["w_out"]), np.asarray(p_b["w_out"]) * 0.5
+    )
+    np.testing.assert_array_equal(
+        np.asarray(spec.weights["w_in"]), before["w_in"]
+    )
+
+
+def test_same_bucket_models_share_one_backend():
+    """Two models with identical execution buckets share one pooled
+    ExecutionBackend — the second registration constructs (and compiles)
+    nothing new; a differently-shaped model gets its own."""
+    cfg = _braille_cfg()
+    reg = ModelRegistry()
+    a = reg.register("a", cfg, init_params(jax.random.key(0), cfg),
+                     backend="scan")
+    b = reg.register("b", cfg, init_params(jax.random.key(1), cfg),
+                     backend="scan")
+    assert a.backend is b.backend
+    assert len(reg.pool) == 1
+
+    cue = reg.register(
+        "cue", reckon_cue.reduced(),
+        init_params(jax.random.key(2), reckon_cue.reduced()), backend="scan",
+    )
+    assert cue.backend is not a.backend
+    assert len(reg.pool) == 2
+
+
+def test_engine_constructor_contract():
+    cfg = _braille_cfg()
+    params = init_params(jax.random.key(0), cfg)
+    with pytest.raises(ValueError, match="either"):
+        BatchedEngine()
+    reg = ModelRegistry()
+    with pytest.raises(ValueError, match="no registered models"):
+        BatchedEngine(registry=reg)
+    reg.register("m", cfg, params, backend="scan")
+    with pytest.raises(ValueError, match="not both"):
+        BatchedEngine(cfg, params, registry=reg)
+    with pytest.raises(KeyError, match="'m'"):
+        BatchedEngine(registry=reg, model_id="missing")
+    # the default route is the first registered model, not "default"
+    eng = BatchedEngine(registry=reg)
+    assert eng.default_model == "m" and eng.model_ids() == ("m",)
+    # ...and the classic (cfg, params) ctor is the one-lane special case
+    classic = BatchedEngine(cfg, params, backend="scan")
+    assert classic.model_ids() == (DEFAULT_MODEL,)
+
+
+# --------------------------------------------------------------------------
+# mixed-model traffic == dedicated single-model engines, bitwise
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["scan", "kernel"])
+@pytest.mark.parametrize("quantized", [False, True])
+def test_mixed_submit_parity_bitwise(backend, quantized):
+    """An alternating Braille+cue stream through one registry engine yields
+    results bitwise identical to two dedicated single-model engines — float
+    and quantized, on both backends — with per-model stats broken out."""
+    reg, models, reqs = _two_models(quantized=quantized, backend=backend)
+    eng = BatchedEngine(registry=reg, max_batch=4)
+
+    results, stats = eng.serve(iter(_mixed_stream(reqs)))
+    by_model = {
+        mid: [r for r in results if r.model_id == mid] for mid in reqs
+    }
+    assert stats.per_model is not None
+    assert set(stats.per_model) == {"braille", "cue"}
+    for mid, evs in reqs.items():
+        assert len(by_model[mid]) == len(evs)
+        assert stats.per_model[mid].requests == len(evs)
+
+        cfg, params = models[mid]
+        ded = BatchedEngine(cfg, params, backend=backend, max_batch=4)
+        ref, _ = ded.serve(iter(evs))
+        for r, d in zip(by_model[mid], ref):
+            np.testing.assert_array_equal(
+                np.asarray(r.logits), np.asarray(d.logits)
+            )
+            assert r.pred == d.pred and r.label == d.label
+            assert r.model_id == mid
+
+
+def test_serve_model_id_kwarg_routes_raw_buffers():
+    """serve(stream, model_id=...) routes un-tupled buffers to that lane."""
+    reg, models, reqs = _two_models()
+    eng = BatchedEngine(registry=reg, max_batch=4)
+    res, _ = eng.serve(iter(reqs["cue"]), model_id="cue")
+    assert [r.model_id for r in res] == ["cue"] * len(reqs["cue"])
+    cfg, params = models["cue"]
+    ref, _ = BatchedEngine(cfg, params, backend="scan", max_batch=4).serve(
+        iter(reqs["cue"])
+    )
+    for r, d in zip(res, ref):
+        np.testing.assert_array_equal(np.asarray(r.logits),
+                                      np.asarray(d.logits))
+
+
+def test_submit_shares_one_rid_sequence():
+    """Request ids stay unique and admission-ordered engine-wide even when
+    submits interleave across models into separate per-lane schedulers."""
+    reg, _, reqs = _two_models()
+    eng = BatchedEngine(registry=reg, max_batch=4)
+    rids = []
+    for ev, mid in _mixed_stream(reqs):
+        rids.append(eng.submit(ev, model_id=mid))
+    assert rids == sorted(rids) and len(set(rids)) == len(rids)
+    results = []
+    for mid in reqs:
+        for tile in eng._lane(mid).scheduler.drain():
+            results.extend(eng.run_tile(tile, model_id=mid))
+    assert sorted(r.rid for r in results) == rids
+
+
+# --------------------------------------------------------------------------
+# interleaved streaming sessions across models (+ eviction pressure)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_mixed_streaming_sessions_bitwise(quantized):
+    """Ragged interleaved session feeds across both models — under enough
+    capacity pressure to force offload/readmit on every lane — match the
+    dedicated whole-sample engines bit for bit."""
+    reg, models, reqs = _two_models(quantized=quantized)
+    eng = BatchedEngine(
+        registry=reg, max_batch=2, max_sessions=2, tick_tile=8
+    )
+    rng = np.random.default_rng(9)
+    handles = {
+        mid: [eng.open_session(model_id=mid) for _ in evs]
+        for mid, evs in reqs.items()
+    }
+    def ragged(ev):
+        # random cut points (incl. empty feeds) partitioning the buffer
+        cuts = np.sort(rng.integers(0, len(ev) + 1, size=5))
+        return [ev[a:b] for a, b in zip([0, *cuts], [*cuts, len(ev)])]
+
+    # feed in small ragged slices, round-robin across models and sessions
+    feeds = {mid: [ragged(ev) for ev in evs] for mid, evs in reqs.items()}
+    for step in range(max(
+        len(f) for fs in feeds.values() for f in fs
+    )):
+        for mid in reqs:
+            for h, f in zip(handles[mid], feeds[mid]):
+                if step < len(f):
+                    h.feed(f[step])
+        eng.pump()
+    for mid in reqs:
+        assert eng._lane(mid).pool.evictions > 0
+
+    for mid, evs in reqs.items():
+        cfg, params = models[mid]
+        ref, _ = BatchedEngine(
+            cfg, params, backend="scan", max_batch=4
+        ).serve(iter(evs))
+        for h, d in zip(handles[mid], ref):
+            s = h.result()
+            assert s.final
+            np.testing.assert_array_equal(s.logits, np.asarray(d.logits))
+            assert s.pred == d.pred
+
+    st = eng.stream_stats(1.0)
+    assert st.per_model is not None and set(st.per_model) == set(reqs)
+
+
+# --------------------------------------------------------------------------
+# hot-swap: zero recompiles, asserted on the compile counter
+# --------------------------------------------------------------------------
+
+
+def test_hot_swap_and_same_bucket_register_never_recompile():
+    """Once a tile shape is bucketed, neither a weight hot-swap nor
+    registering+serving another same-shaped model compiles anything new —
+    weights are jit arguments, and equal buckets share one backend."""
+    cfg = _braille_cfg()
+    params = init_params(jax.random.key(0), cfg)
+    reg = ModelRegistry()
+    reg.register("a", cfg, params, backend="scan")
+    eng = BatchedEngine(registry=reg, max_batch=4)
+    rng = np.random.default_rng(3)
+    reqs = [_request(rng, cfg.n_in, 32, label=i % 3) for i in range(4)]
+
+    res1, _ = eng.serve(iter(reqs))
+    warm = reg.compiled_shapes()
+    assert warm > 0
+
+    # hot-swap: scaled weights serve different logits, same programs
+    eng.update_weights(
+        {k: v * 0.5 for k, v in trainable(params).items()}, model_id="a"
+    )
+    assert reg.get("a").swaps == 1
+    res2, _ = eng.serve(iter(reqs))
+    assert reg.compiled_shapes() == warm
+    assert any(
+        not np.array_equal(np.asarray(a.logits), np.asarray(b.logits))
+        for a, b in zip(res1, res2)
+    )
+
+    # a second model in the same bucket serves through the warm cache
+    reg.register("b", cfg, init_params(jax.random.key(7), cfg),
+                 backend="scan")
+    res3, _ = eng.serve(iter(reqs), model_id="b")
+    assert len(res3) == len(reqs)
+    assert reg.compiled_shapes() == warm
+
+
+# --------------------------------------------------------------------------
+# learner → registry publish (serve-while-learning)
+# --------------------------------------------------------------------------
+
+
+def test_learner_publishes_into_registry():
+    """An OnlineLearner attached to a registry shares its backend (pool
+    adoption — one jit cache) and auto-publishes its live weights every
+    commit; a registry engine serves the post-commit image."""
+    data = make_braille_dataset(
+        "AEU", BrailleConfig(num_ticks=32, samples_per_class=6)
+    )
+    cfg = _braille_cfg()
+    reg = ModelRegistry()
+    learner = OnlineLearner(
+        cfg, ControllerConfig(num_epochs=1, commit="batch"),
+        EpropSGDConfig(lr=0.01, clip=10.0), jax.random.key(0),
+        backend="scan", registry=reg, model_id="live",
+    )
+    assert "live" in reg
+    spec = reg.get("live")
+    assert spec.backend is learner.backend   # adopted: one jit cache
+    w0 = np.asarray(spec.weights["w_out"]).copy()
+
+    learner.train_epoch(make_pipeline("arm", data, samples_per_batch=6), 0)
+    assert spec.swaps >= 1
+    assert not np.array_equal(np.asarray(spec.weights["w_out"]), w0)
+    np.testing.assert_array_equal(
+        np.asarray(spec.weights["w_out"]), np.asarray(learner.weights["w_out"])
+    )
+
+    # the engine serves the published weights through the learner's cache
+    eng = BatchedEngine(registry=reg, max_batch=4)
+    assert eng.engine is learner.backend
+    rng = np.random.default_rng(1)
+    res, _ = eng.serve(
+        iter([_request(rng, cfg.n_in, 32, label=i % 3) for i in range(4)])
+    )
+    assert len(res) == 4 and all(r.model_id == "live" for r in res)
+
+    # publish() without a registry is a loud error, not a silent no-op
+    solo = OnlineLearner(
+        cfg, ControllerConfig(num_epochs=1), EpropSGDConfig(lr=0.01),
+        jax.random.key(1), backend="scan",
+    )
+    with pytest.raises(ValueError, match="registry"):
+        solo.publish()
+
+
+# --------------------------------------------------------------------------
+# quantized cue: served logits == integer golden reference (reset-by-sub)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["scan", "kernel"])
+def test_cue_quantized_bit_true_golden(backend):
+    """The quantized cue datapath (reset-by-subtraction, the cue preset's
+    register file) serves the integer golden-reference accumulators bit for
+    bit — the hardware-equivalence contract for the second SRAM program."""
+    cfg = reckon_cue.reduced(quantized=True)
+    assert cfg.neuron.reset == "sub" and cfg.neuron.quant is not None
+    params = init_params(jax.random.key(5), cfg)
+    eng = BatchedEngine(cfg, params, backend=backend, max_batch=2)
+    assert eng.quantized
+    rng = np.random.default_rng(11)
+    reqs = [_request(rng, cfg.n_in, 40, label=i % 2) for i in range(2)]
+    res, _ = eng.serve(iter(reqs))
+
+    weights = {k: np.asarray(eng._weights[k])
+               for k in ("w_in", "w_rec", "w_out")}
+    mask = 1.0 - np.eye(cfg.n_hid, dtype=np.float32)
+    for r, ev in zip(res, reqs):
+        raster, valid, _ = decode_events_host(
+            [ev], cfg.n_in, r.bucket_ticks, cfg.label_delay
+        )
+        g = quant_ref.golden_forward(
+            raster,
+            weights["w_in"],
+            weights["w_rec"] * mask,
+            weights["w_out"],
+            cfg.neuron.quant,
+            reset=cfg.neuron.reset,
+            boxcar_width=cfg.neuron.boxcar_width,
+            valid=valid,
+        )
+        np.testing.assert_array_equal(r.logits.astype(np.int64), g["acc_y"][0])
+        assert r.pred == int(g["pred"][0])
