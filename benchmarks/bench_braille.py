@@ -272,6 +272,10 @@ def sharded_smoke(seed: int = 1, epochs: int = 12, backend: str = "auto",
     # count, so aggregate wall-clock there measures the runner, not the
     # sharding (same policy as bench_serve's --sharded gate).  The number
     # is still measured and recorded either way.
+    from benchmarks.bench_chaos import record_overhead_section
+
+    ckpt_overhead = record_overhead_section()
+
     virtual = jax.default_backend() == "cpu"
     if ndev == 1 or virtual:
         ok = acc_gap <= 0.10
@@ -298,10 +302,20 @@ def sharded_smoke(seed: int = 1, epochs: int = 12, backend: str = "auto",
         "sharded_throughput": thr_sh,
         "aggregate_vs_sequential": agg_vs_sequential,
         "device_scaling": thr_sh["device_scaling"],
+        "checkpoint_overhead": ckpt_overhead,
         "rc": 0 if ok else 1,
     }
+    Path(out_dir).mkdir(parents=True, exist_ok=True)
     out = Path(out_dir) / "BENCH_train.json"
-    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    # merge alongside sections other benches own (e.g. bench_cue's "cue")
+    merged = {}
+    if out.exists():
+        try:
+            merged = json.loads(out.read_text())
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(payload)
+    out.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
     print(f"wrote {out}")
     return payload
 

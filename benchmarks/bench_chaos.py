@@ -1,0 +1,260 @@
+"""Chaos / fault-tolerance benchmark: recovery time, checkpoint overhead,
+and the bitwise-recovery gate — the measurement half of
+``tests/test_fault_tolerance.py``.
+
+``--smoke`` (the CI acceptance run) does three things at Braille smoke
+scale and writes ``BENCH_chaos.json``:
+
+1. **bitwise gate** — SIGKILL a subprocess training run at a commit
+   boundary, restart it until it exits clean, and require the final
+   quantized weights to equal an uninterrupted run bit for bit;
+2. **recovery time** — how long the restarted worker takes from process
+   start to its first post-resume commit (restore + recompile + replay);
+3. **checkpoint overhead** — per-commit wall time with checkpointing off /
+   async / blocking at the smoke policy cadence, reported as p50/p99
+   commit-stall milliseconds, added-ms-per-commit, and a samples-per-second
+   overhead percentage.  The acceptance gate — async checkpointing costs
+   **<10%** samples/s vs no checkpointing — enforces on real accelerator
+   devices; on shared-CPU CI runners the number is recorded, not enforced
+   (the repo-wide wall-clock-gate policy, see ``bench_braille --sharded``).
+
+Usage:
+    python -m benchmarks.bench_chaos --smoke [--out-dir .]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.train import chaos
+
+SMOKE_KW = dict(epochs=4, samples_per_class=12, num_ticks=48, spb=16)
+# Overhead is measured at the paper's operating point (256-tick Braille
+# samples, BRAM batch depth 50) while the kill drill stays tiny for
+# wall-clock; the 6 epochs give enough steady-state intervals for stable
+# statistics.  every=2 is the smoke checkpoint cadence (one durable cut
+# per 100 samples — still far hotter than any production policy).
+OVERHEAD_KW = dict(epochs=6, samples_per_class=50, num_ticks=256, spb=50)
+OVERHEAD_EVERY = 2
+OVERHEAD_REPEATS = 3
+OVERHEAD_GATE_PCT = 10.0
+
+
+def measure_checkpoint_overhead(
+    mode: str,
+    ckpt_dir: Optional[str],
+    checkpoint_every: int = OVERHEAD_EVERY,
+    **kw,
+) -> Dict[str, float]:
+    """Per-commit wall-time stats for one checkpointing mode (one run).
+
+    ``mode`` is ``"off"`` (no policy), ``"async"`` (saves queued to the
+    background writer) or ``"sync"`` (blocking saves).  The timing hook
+    blocks on the committed weights, so each interval between consecutive
+    commits is the true commit stall — compute plus the save path that
+    runs inside it.  Throughput comes from the mean of *intra-epoch*
+    intervals (epoch boundaries carry offload/decode spikes that belong
+    to the pipeline, not the checkpointer); p50/p99 commit-stall use all
+    steady-state intervals.  Warm-up (jit compile) intervals are dropped.
+    """
+    import jax
+
+    assert mode in ("off", "async", "sync"), mode
+    learner, pipeline = chaos.build_learner(
+        ckpt_dir if mode != "off" else None,
+        async_save=(mode == "async"),
+        checkpoint_every=checkpoint_every,
+        **kw,
+    )
+    spb = learner.ctrl.samples_per_batch
+    marks = []
+
+    def hook(lrn, commits):
+        jax.block_until_ready(lrn.weights)
+        marks.append((time.perf_counter(), lrn.cursor.epoch))
+
+    learner.fit(pipeline, on_commit=hook)
+    if learner.ckpt is not None:
+        learner.ckpt.wait()
+    deltas = np.asarray([b[0] - a[0] for a, b in zip(marks, marks[1:])])[3:]
+    clean = np.asarray(
+        [b[0] - a[0] for a, b in zip(marks, marks[1:]) if a[1] == b[1]]
+    )[3:]
+    assert clean.size >= 5, "need a few steady-state commits to measure"
+    return {
+        "mode": mode,
+        "commits": int(len(marks)),
+        "checkpoint_every": int(checkpoint_every),
+        "p50_commit_ms": float(np.percentile(deltas, 50) * 1e3),
+        "p99_commit_ms": float(np.percentile(deltas, 99) * 1e3),
+        "mean_commit_ms": float(np.mean(clean) * 1e3),
+        "samples_per_s": float(spb / np.mean(clean)),
+    }
+
+
+def overhead_suite(
+    ckpt_root: str,
+    repeats: int = OVERHEAD_REPEATS,
+    checkpoint_every: int = OVERHEAD_EVERY,
+    **kw,
+) -> Dict[str, Dict[str, float]]:
+    """off/async/sync overhead, interleaved and best-of-``repeats``.
+
+    Single-shot mode comparisons on a shared CPU carry large run-order
+    noise (frequency/cache warm-up, co-tenant load); interleaving the
+    modes and keeping each mode's best throughput cancels the drift.
+    Returns ``{mode: stats}`` plus ``async_overhead_pct`` /
+    ``sync_overhead_pct`` relative to ``off`` and the transferable
+    ``*_added_ms_per_commit`` (overhead percentages shrink as the commit
+    tile grows; the added milliseconds are what the checkpointer costs).
+    """
+    best: Dict[str, Dict[str, float]] = {}
+    for rep in range(repeats):
+        for mode in ("off", "async", "sync"):
+            r = measure_checkpoint_overhead(
+                mode, str(Path(ckpt_root) / f"{mode}{rep}"),
+                checkpoint_every=checkpoint_every, **kw,
+            )
+            if (mode not in best
+                    or r["samples_per_s"] > best[mode]["samples_per_s"]):
+                best[mode] = r
+    base = best["off"]["samples_per_s"]
+    for mode in ("async", "sync"):
+        best[f"{mode}_overhead_pct"] = 100.0 * (
+            base - best[mode]["samples_per_s"]) / base
+        best[f"{mode}_added_ms_per_commit"] = (
+            best[mode]["mean_commit_ms"] - best["off"]["mean_commit_ms"])
+    return best
+
+
+def record_overhead_section() -> Dict[str, Dict[str, float]]:
+    """Durability-cost record for the BENCH_train.json artifact: p50/p99
+    commit-stall ms and samples/s with async saves on vs off, measured at
+    the Braille smoke scale (the ISSUE-9 acceptance operating point) —
+    ``bench_braille``/``bench_cue`` call this so the cost is tracked
+    across PRs; the <10% gate itself runs in ``bench_chaos --smoke``."""
+    print("== checkpoint overhead (Braille smoke scale, async writer vs off) ==")
+    with tempfile.TemporaryDirectory() as d:
+        suite = overhead_suite(d, **OVERHEAD_KW)
+    for mode in ("off", "async", "sync"):
+        r = suite[mode]
+        print(f"  {mode:6s}: p50={r['p50_commit_ms']:7.2f}ms "
+              f"p99={r['p99_commit_ms']:7.2f}ms "
+              f"{r['samples_per_s']:8.1f} samples/s")
+    print(f"  async overhead {suite['async_overhead_pct']:+.1f}% "
+          f"(+{suite['async_added_ms_per_commit']:.2f}ms/commit), "
+          f"blocking {suite['sync_overhead_pct']:+.1f}% "
+          f"(gated <10% on accelerator devices by bench_chaos --smoke)")
+    return suite
+
+
+def smoke(out_dir: Optional[str] = None, seed: Optional[int] = None) -> Dict:
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+
+    print("== golden (uninterrupted) run ==")
+    gold = chaos.golden_run(**SMOKE_KW)
+
+    print("== chaos drill: SIGKILL at a commit boundary, restart ==")
+    wargs = [
+        "--epochs", SMOKE_KW["epochs"],
+        "--samples-per-class", SMOKE_KW["samples_per_class"],
+        "--ticks", SMOKE_KW["num_ticks"],
+        "--spb", SMOKE_KW["spb"],
+    ]
+    kill_at = int(rng.integers(1, 6))
+    with tempfile.TemporaryDirectory() as d:
+        out = str(Path(d) / "result")
+        res = chaos.run_chaos(
+            str(Path(d) / "ck"), out, ["--kill-at-commit", kill_at], wargs
+        )
+        got = chaos.load_result_weights(out)
+    bitwise_ok = sorted(got) == sorted(gold) and all(
+        np.array_equal(got[k], gold[k]) for k in gold
+    )
+    print(f"  killed at commit {kill_at}, resumed from "
+          f"{res['resumed_from']}, restarts={res['restarts']}, "
+          f"recovery={res['recovery_s']:.2f}s, bitwise_ok={bitwise_ok}")
+
+    print("== checkpoint overhead: off vs async vs blocking ==")
+    with tempfile.TemporaryDirectory() as d:
+        overhead = overhead_suite(d, **OVERHEAD_KW)
+    for mode in ("off", "async", "sync"):
+        r = overhead[mode]
+        print(f"  {mode:6s}: p50={r['p50_commit_ms']:8.2f}ms "
+              f"p99={r['p99_commit_ms']:8.2f}ms "
+              f"{r['samples_per_s']:8.1f} samples/s")
+    async_pct = overhead["async_overhead_pct"]
+    sync_pct = overhead["sync_overhead_pct"]
+    print(f"  async overhead {async_pct:+.1f}% "
+          f"(+{overhead['async_added_ms_per_commit']:.2f}ms/commit), "
+          f"blocking {sync_pct:+.1f}% "
+          f"(+{overhead['sync_added_ms_per_commit']:.2f}ms/commit)")
+
+    # The bitwise-recovery gate binds everywhere.  The <10% overhead gate
+    # is wall-clock: per the repo's policy (bench_braille --sharded, the
+    # bench_serve floors), wall-clock gates enforce on real accelerator
+    # devices only — shared-CPU CI runners carry co-tenant load that
+    # swings a ~1ms/commit cost by more than the gate width, so there the
+    # number is measured and recorded, not enforced.
+    import jax
+
+    gate_enforced = jax.default_backend() != "cpu"
+    overhead_ok = (not gate_enforced) or async_pct < OVERHEAD_GATE_PCT
+
+    rc = 0 if (bitwise_ok and overhead_ok) else 1
+    if gate_enforced:
+        print(f"acceptance (bitwise recovery AND async ckpt overhead "
+              f"<{OVERHEAD_GATE_PCT}%): {'PASS' if rc == 0 else 'FAIL'}")
+    else:
+        print(f"acceptance: overhead gate n/a (shared CPU host; recorded "
+              f"async {async_pct:+.1f}%); bitwise recovery "
+              f"{'PASS' if rc == 0 else 'FAIL'}")
+    payload = {
+        "benchmark": "chaos",
+        "schema": 1,
+        "kill_at_commit": kill_at,
+        "resumed_from": res["resumed_from"],
+        "restarts": res["restarts"],
+        "recovery_s": res["recovery_s"],
+        "bitwise_ok": bool(bitwise_ok),
+        "checkpoint_overhead": overhead,
+        "overhead_gate_pct": OVERHEAD_GATE_PCT,
+        "overhead_gate_enforced": bool(gate_enforced),
+        "async_overhead_pct": async_pct,
+        "sync_overhead_pct": sync_pct,
+        "wall_s": time.time() - t0,
+        "rc": rc,
+    }
+    if out_dir is not None:
+        Path(out_dir).mkdir(parents=True, exist_ok=True)
+        path = Path(out_dir) / "BENCH_chaos.json"
+        path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {path}")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: bitwise recovery + <10%% async overhead, "
+                         "written to BENCH_chaos.json")
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="fix the randomized kill commit")
+    opts = ap.parse_args(argv)
+    if not opts.smoke:
+        ap.error("only --smoke is implemented; pass --smoke")
+    return smoke(out_dir=opts.out_dir, seed=opts.seed)["rc"]
+
+
+if __name__ == "__main__":
+    sys.exit(main())

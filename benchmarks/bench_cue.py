@@ -138,10 +138,17 @@ def smoke(seeds=(0, 1, 2), epochs: int = 10, backend: str = "auto",
             except (json.JSONDecodeError, OSError):
                 merged = {}
         merged["cue"] = payload
+        merged["checkpoint_overhead"] = _checkpoint_overhead()
         merged.setdefault("schema", 1)
         path.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
-        print(f"wrote {path} (cue section)")
+        print(f"wrote {path} (cue + checkpoint_overhead sections)")
     return {"rc": payload["rc"], "cue": payload}
+
+
+def _checkpoint_overhead():
+    from benchmarks.bench_chaos import record_overhead_section
+
+    return record_overhead_section()
 
 
 def main(argv=None):

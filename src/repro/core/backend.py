@@ -93,7 +93,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import eprop
-from repro.core.quant import QuantizedMode
+from repro.core.quant import QuantizedMode, QuantSpec
 from repro.core.rsnn import RSNNConfig
 from repro.distributed import sharding as shardlib
 from repro.kernels import events, ops
@@ -148,6 +148,15 @@ class RuntimeConfig:
     # repro.kernels.events.resolve_sparsity, the single policy point.
     sparsity: Optional[str] = None
     event_density: Optional[float] = None
+    # Deterministic END_B accumulation: snap each *per-sample* dw onto this
+    # fixed-point grid before the batch reduction, making the committed dw
+    # bitwise invariant to how the sample axis is partitioned (1 vs N mesh
+    # devices, any batch tiling) — the property the elastic-resize drill
+    # gates on.  None (default) keeps the float reduction: bitwise on a
+    # fixed mesh, float-tolerance across mesh sizes.  Costs one B=1 pass
+    # per sample (lax.map), so reserve it for runs that need cross-mesh
+    # bit-reproducibility.  See repro.core.quant.DW_COMMIT_SPEC.
+    commit_grid: Optional[QuantSpec] = None
     # Which registered model this runtime request acts on behalf of —
     # identity metadata for routing/attribution (error messages, per-model
     # serving stats), NEVER part of the execution bucket: two models with
@@ -311,6 +320,7 @@ class ExecutionBackend:
             if self._batch_axes
             else 1
         )
+        self.commit_grid = rt.commit_grid
         # canonical, fully-resolved runtime description — what sharing paths
         # (BatchedEngine.from_learner) pass around and check_compatible
         # validates callers against
@@ -318,6 +328,7 @@ class ExecutionBackend:
             backend=self.backend, alpha=self.alpha, quant=self.quant,
             vmem_budget=self.vmem_budget, mesh=self.mesh, rules=self.rules,
             sparsity=self.sparsity, event_density=self.event_density,
+            commit_grid=self.commit_grid,
         )
         if cfg.eprop.mask_self_recurrence:
             self._mask = 1.0 - jnp.eye(cfg.n_hid, dtype=jnp.float32)
@@ -330,9 +341,14 @@ class ExecutionBackend:
         )
         self._jit_forward = jax.jit(self._forward_impl)
         self._jit_update = jax.jit(self._update_impl)
-        self._jit_train = jax.jit(
-            self._train_sharded if sharded else self._train_impl
-        )
+        if self.commit_grid is not None:
+            self._jit_train = jax.jit(
+                self._train_det_sharded if sharded else self._train_det_impl
+            )
+        else:
+            self._jit_train = jax.jit(
+                self._train_sharded if sharded else self._train_impl
+            )
         self._jit_dynamics = jax.jit(self._dynamics_impl)
         self._jit_step_sessions = jax.jit(
             self._step_sessions_sharded if sharded else self._step_sessions_impl
@@ -378,6 +394,24 @@ class ExecutionBackend:
             "shared backend was built for a different measured event density "
             f"({self.event_density}) than the caller's ({rt.event_density})"
         )
+        assert rt.commit_grid is None or self.commit_grid == rt.commit_grid, (
+            "shared backend accumulates END_B on a different commit grid "
+            f"({self.commit_grid}) than the caller's ({rt.commit_grid})"
+        )
+
+    def resize(self, mesh) -> "ExecutionBackend":
+        """Rebuild this backend over a different (possibly ``None``) data
+        mesh, everything else identical — the elastic-restore primitive: a
+        checkpoint saved on an 8-device mesh restores onto the survivors'
+        mesh by resizing the backend and re-placing host arrays
+        (:func:`repro.distributed.elastic.reshard`).  With a ``commit_grid``
+        set, END_B commits on the resized backend are bitwise identical to
+        the original's; without one they agree to float-reduction order.
+        Returns ``self`` when the mesh is unchanged (keeps jit caches)."""
+        if mesh is self.mesh or mesh == self.mesh:
+            return self
+        rt = dataclasses.replace(self.runtime, mesh=mesh)
+        return ExecutionBackend(self.cfg, runtime=rt)
 
     # ------------------------------------------------------------- plumbing
 
@@ -679,6 +713,113 @@ class ExecutionBackend:
             m = dict(m, acc_y=m["acc_y"][:B], pred=m["pred"][:B])
         return dw, m
 
+    # ----------------------------------------------- deterministic END_B path
+
+    def _dw_to_codes(self, dw):
+        """Snap a per-sample dw pytree onto the commit grid as int32 codes.
+
+        Integer addition is associative, so summing codes is invariant to
+        the order — and therefore to the partitioning — of the sample axis:
+        the property that makes the elastic 8→4 restore drill bitwise.  The
+        grid mirrors the chip's fixed-point dw accumulator; per-sample dw
+        magnitudes sit well inside the ±2^(bits-1-frac) headroom and int32
+        sums stay exact for any realistic batch."""
+        g = self.commit_grid
+        lo = -(2.0 ** (g.bits - 1))
+        hi = 2.0 ** (g.bits - 1) - 1
+        return jax.tree.map(
+            lambda x: jnp.clip(jnp.round(x / g.lsb), lo, hi).astype(jnp.int32),
+            dw,
+        )
+
+    def _train_det_codes(self, weights, raster, y_star, valid):
+        """Per-sample train passes, dw snapped to int32 commit-grid codes.
+
+        ``lax.map`` runs each sample as a B=1 tile through
+        :meth:`_train_impl`, so the per-sample arithmetic is literally the
+        single-device arithmetic — only the (associative, integer) reduction
+        differs between mesh layouts.  Returns per-sample ``(codes, acc_y,
+        rate, valid_sum)``."""
+
+        def one(args):
+            r, ys, v = args
+            dw, m = self._train_impl(
+                weights, r[:, None, :], ys[None, :], v[:, None]
+            )
+            codes = self._dw_to_codes(dw)
+            return codes, m["acc_y"][0], m["spike_rate"], v.sum()
+
+        return jax.lax.map(
+            one,
+            (jnp.swapaxes(raster, 0, 1), y_star, jnp.swapaxes(valid, 0, 1)),
+        )
+
+    def _codes_to_dw(self, codes):
+        lsb = self.commit_grid.lsb
+        return jax.tree.map(lambda c: c.astype(jnp.float32) * lsb, codes)
+
+    def _train_det_impl(self, weights, raster, y_star, valid):
+        """Single-device deterministic END_B: grid-snapped per-sample codes
+        summed as int32, converted to float once at the end — bitwise equal
+        to any sharded layout's commit of the same batch."""
+        codes, acc_y, rate, vs = self._train_det_codes(
+            weights, raster, y_star, valid
+        )
+        dw = self._codes_to_dw(
+            jax.tree.map(lambda c: c.sum(axis=0), codes)
+        )
+        num = (rate * jnp.maximum(vs, 1.0)).sum()
+        den = jnp.maximum(vs.sum(), 1.0)
+        metrics = {
+            "acc_y": acc_y,
+            "pred": jnp.argmax(acc_y, axis=-1),
+            "spike_rate": num / den,
+        }
+        return dw, metrics
+
+    def _train_det_sharded(self, weights, raster, y_star, valid):
+        """:meth:`_train_det_impl` over the data mesh: shards psum *int32
+        codes* (order-invariant), the float conversion happens once on the
+        replicated sum — so 1-, 4- and 8-shard layouts commit bit-identical
+        dw.  Padding rows (zero raster → zero traces → zero dw codes, zero
+        valid) are inert in both the code sum and the rate."""
+        ba = self._batch_axes
+        (raster, y_star, valid), B = self._pad_to_shards(
+            (raster, y_star, valid), (1, 0, 1)
+        )
+
+        def local(weights, raster, y_star, valid):
+            codes, acc_y, rate, vs = self._train_det_codes(
+                weights, raster, y_star, valid
+            )
+            codes = jax.tree.map(
+                lambda c: jax.lax.psum(c.sum(axis=0), ba), codes
+            )
+            num = jax.lax.psum((rate * jnp.maximum(vs, 1.0)).sum(), ba)
+            den = jnp.maximum(jax.lax.psum(vs.sum(), ba), 1.0)
+            m = {
+                "acc_y": acc_y,
+                "pred": jnp.argmax(acc_y, axis=-1),
+                "spike_rate": num / den,
+            }
+            return codes, m
+
+        codes, m = shard_map(
+            local,
+            mesh=self.mesh,
+            axis_names=set(ba),
+            in_specs=(P(), P(None, ba, None), P(ba), P(None, ba)),
+            out_specs=(
+                {"w_in": P(), "w_rec": P(), "w_out": P()},
+                {"acc_y": P(ba), "pred": P(ba), "spike_rate": P()},
+            ),
+            check_vma=False,
+        )(weights, raster, y_star, valid)
+        dw = self._codes_to_dw(codes)
+        if m["acc_y"].shape[0] != B:
+            m = dict(m, acc_y=m["acc_y"][:B], pred=m["pred"][:B])
+        return dw, m
+
     def _inference_sharded(self, weights, raster, valid):
         ba = self._batch_axes
         (raster, valid), B = self._pad_to_shards((raster, valid), (1, 1))
@@ -877,7 +1018,7 @@ def bucket_key(cfg: RSNNConfig, rt: RuntimeConfig) -> Tuple:
     return (
         cfg, name, alpha, quant, int(rt.vmem_budget or DEFAULT_VMEM_BUDGET),
         rt.mesh, None if rt.rules is None else id(rt.rules),
-        sparsity, rt.event_density,
+        sparsity, rt.event_density, rt.commit_grid,
     )
 
 

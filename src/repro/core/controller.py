@@ -48,14 +48,21 @@ still-training learner without recompiling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+import signal
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aer, eprop
 from repro.core.backend import BackendLike, ExecutionBackend, as_backend
 from repro.core.rsnn import RSNNConfig, init_params, merge_trainable, trainable
+from repro.distributed.checkpoint import (
+    CheckpointManager,
+    CheckpointPolicy,
+    ReplayCursor,
+)
 from repro.optim.eprop_opt import EpropSGD, EpropSGDConfig
 
 
@@ -295,6 +302,17 @@ class OnlineLearner:
     ``publish_every`` commits (:meth:`publish` does it on demand).  A
     serving engine routed at that model picks the new SRAM image up on its
     next launched tile: the paper's online-learning loop, mid-serve.
+
+    ``checkpoint`` (a :class:`~repro.distributed.checkpoint.CheckpointPolicy`)
+    arms durable fault tolerance: every ``policy.every``-th commit the full
+    restorable state — quantized SRAM weight image, ``EpropSGD`` float
+    residuals and sample count, the PRNG key, and the
+    :class:`~repro.distributed.checkpoint.ReplayCursor` — is saved
+    (asynchronously by default) with the backend's
+    :class:`~repro.core.quant.QuantizedMode` register contract recorded in
+    the manifest.  ``fit(..., resume=True)`` restores the newest complete
+    checkpoint, validates the contract, and replays exactly the batches the
+    interrupted run would have consumed (see ``docs/fault_tolerance.md``).
     """
 
     def __init__(
@@ -309,6 +327,7 @@ class OnlineLearner:
         registry=None,
         model_id: Optional[str] = None,
         publish_every: int = 1,
+        checkpoint: Optional[CheckpointPolicy] = None,
     ):
         self.cfg, self.ctrl = cfg, ctrl
         self.opt = EpropSGD(opt_cfg)
@@ -343,6 +362,15 @@ class OnlineLearner:
         self.model_id = model_id if model_id is not None else "default"
         self.publish_every = max(1, int(publish_every))
         self._commits = 0
+        # ---- durability ------------------------------------------------
+        self.policy = checkpoint
+        self.ckpt: Optional[CheckpointManager] = (
+            checkpoint.manager() if checkpoint is not None else None
+        )
+        self.cursor = ReplayCursor()
+        self._stop = False            # set by the SIGTERM/SIGINT handler
+        self._on_commit: Optional[Callable] = None   # chaos-harness hook
+        self._old_handlers: Dict[int, object] = {}
         if registry is not None:
             if self.model_id in registry:
                 registry.update_weights(self.model_id, self.inference_params())
@@ -374,18 +402,35 @@ class OnlineLearner:
         self.weights, self.opt_state, m = self._train_fn(
             self.weights, self.opt_state, batch, sub
         )
-        if self.registry is not None:
-            self._commits += 1
-            if self._commits % self.publish_every == 0:
-                self.publish()
+        self._commits += 1
+        if self.registry is not None and self._commits % self.publish_every == 0:
+            self.publish()
+        if self.policy is not None and self._commits % self.policy.every == 0:
+            self.save_checkpoint()
+        if self._on_commit is not None:
+            self._on_commit(self, self._commits)
         return m
 
-    def train_epoch(self, pipeline, epoch: int) -> float:
+    def train_epoch(self, pipeline, epoch: int, start_batch: int = 0) -> float:
+        """One training epoch; ``start_batch`` resumes mid-epoch (replay).
+
+        The replay cursor is advanced to ``(epoch, i + 1)`` *before* batch
+        ``i`` trains, so a checkpoint cut at the commit inside
+        :meth:`train_batch` records the first batch a resumed run must
+        consume — never a batch twice, never a skipped one.
+        """
         correct = total = 0
-        for batch in pipeline.batches("train", epoch):
+        it = (pipeline.batches("train", epoch, start_batch=start_batch)
+              if start_batch else pipeline.batches("train", epoch))
+        for i, batch in enumerate(it, start=start_batch):
+            self.cursor.epoch, self.cursor.batch = epoch, i + 1
             m = self.train_batch(batch)
             correct += int(m["correct"])
             total += int(m["count"])
+            if self._stop:
+                break
+        else:
+            self.cursor.epoch, self.cursor.batch = epoch + 1, 0
         acc = correct / max(total, 1)
         self.log.train_acc.append(acc)
         return acc
@@ -406,9 +451,149 @@ class OnlineLearner:
         (``repro.serve.BatchedEngine.from_learner``) snapshots."""
         return merge_trainable({"alpha": self.alpha}, self.weights)
 
-    def fit(self, pipeline, verbose: bool = False) -> EpochLog:
-        for epoch in range(self.ctrl.num_epochs):
-            tr = self.train_epoch(pipeline, epoch)
+    # --------------------------------------------------------- durability
+
+    def _key_data(self) -> jax.Array:
+        """The PRNG key as a plain serializable array (typed keys carry an
+        extended dtype ``np.savez`` can't store)."""
+        if jnp.issubdtype(self.key.dtype, jax.dtypes.prng_key):
+            return jax.random.key_data(self.key)
+        return self.key
+
+    def _ckpt_state(self) -> Dict[str, object]:
+        """The restorable state tree: quantized SRAM weight image (int-exact
+        float32 carriers), optimizer residuals + sample count, PRNG key."""
+        return {
+            "weights": self.weights,
+            "opt_state": self.opt_state,
+            "key": self._key_data(),
+        }
+
+    def _quant_contract(self) -> Optional[Dict]:
+        q = self.backend.quant
+        return None if q is None else q.contract()
+
+    def save_checkpoint(self, blocking: Optional[bool] = None) -> None:
+        """Cut a checkpoint at the current commit count.
+
+        ``blocking=None`` follows ``policy.async_save``; the async path
+        overlaps disk IO with the next commits and surfaces any write error
+        at the next save (see :class:`CheckpointManager`).  The manifest
+        carries everything a restore validates or replays: the commit
+        count, the :class:`ReplayCursor`, the commit mode, the quantized
+        register contract, and the saving mesh's device count.
+        """
+        if self.ckpt is None:
+            raise ValueError(
+                "learner has no checkpoint policy — construct with checkpoint="
+            )
+        blocking = (
+            not self.policy.async_save if blocking is None else blocking
+        )
+        extra = {
+            "kind": "online_learner",
+            "commits": int(self._commits),
+            "cursor": self.cursor.as_manifest(),
+            "commit_mode": self.ctrl.commit,
+            "quant": self._quant_contract(),
+            "mesh_devices": int(self.backend.num_devices),
+            "model": self.model_id,
+        }
+        state = self._ckpt_state()
+        if blocking:
+            self.ckpt.save(self._commits, state, extra)
+        else:
+            self.ckpt.save_async(self._commits, state, extra)
+
+    def restore_checkpoint(self, step: Optional[int] = None) -> bool:
+        """Restore the newest complete checkpoint (or ``step``), validating
+        the manifest against this learner's execution contract.
+
+        Returns ``False`` when the directory holds no complete checkpoint
+        (fresh start); raises :class:`ValueError` when the checkpoint was
+        cut under a *different* quantized register contract or commit mode
+        — restoring it would silently change arithmetic, the same loud-
+        boundary discipline as the per-leaf shape/dtype diff in
+        :meth:`CheckpointManager.restore`.  The restored weights work on
+        any mesh size (they are replicated host arrays; see
+        :mod:`repro.distributed.elastic`), and an attached registry is
+        re-published immediately so live serve lanes pick the restored
+        SRAM image up on their next tile.
+        """
+        if self.ckpt is None:
+            raise ValueError(
+                "learner has no checkpoint policy — construct with checkpoint="
+            )
+        if step is None:
+            step = self.ckpt.latest_step()
+        if step is None:
+            return False
+        template = jax.tree.map(np.asarray, jax.device_get(self._ckpt_state()))
+        host, manifest = self.ckpt.restore(step, template)
+        want = self._quant_contract()
+        got = manifest.get("quant")
+        if got != want:
+            raise ValueError(
+                "checkpoint was cut under a different quantized register "
+                f"contract:\n  checkpoint: {got}\n  this learner: {want}"
+            )
+        if manifest.get("commit_mode") != self.ctrl.commit:
+            raise ValueError(
+                f"checkpoint was cut in commit={manifest.get('commit_mode')!r} "
+                f"mode, this learner runs commit={self.ctrl.commit!r}"
+            )
+        self.weights = jax.tree.map(jnp.asarray, host["weights"])
+        self.opt_state = jax.tree.map(jnp.asarray, host["opt_state"])
+        k = jnp.asarray(host["key"])
+        if jnp.issubdtype(self.key.dtype, jax.dtypes.prng_key):
+            k = jax.random.wrap_key_data(k, impl=jax.random.key_impl(self.key))
+        self.key = k
+        self._commits = int(manifest["commits"])
+        self.cursor = ReplayCursor.from_manifest(manifest["cursor"])
+        if self.registry is not None:
+            self.publish()
+        return True
+
+    def install_signal_handlers(self) -> None:
+        """SIGTERM/SIGINT → finish the in-flight batch, cut a final blocking
+        checkpoint, return from :meth:`fit` (``self._stop``) — the graceful
+        half of the fault-tolerance story (SIGKILL is the chaos half)."""
+        for s in (signal.SIGTERM, signal.SIGINT):
+            self._old_handlers[s] = signal.signal(s, self._on_term)
+
+    def _on_term(self, signum, frame) -> None:
+        self._stop = True
+
+    def restore_signal_handlers(self) -> None:
+        for s, h in self._old_handlers.items():
+            signal.signal(s, h)
+        self._old_handlers = {}
+
+    @property
+    def stopped_by_signal(self) -> bool:
+        return self._stop
+
+    def fit(
+        self,
+        pipeline,
+        verbose: bool = False,
+        resume: bool = False,
+        on_commit: Optional[Callable] = None,
+    ) -> EpochLog:
+        """Run the configured epochs; ``resume=True`` restores the newest
+        checkpoint first and replays from its cursor.  ``on_commit`` is an
+        optional ``(learner, commit_count)`` hook fired after every commit
+        (checkpoint already cut) — the chaos harness's kill point."""
+        if on_commit is not None:
+            self._on_commit = on_commit
+        if resume and self.ckpt is not None:
+            self.restore_checkpoint()
+        start_batch = self.cursor.batch
+        for epoch in range(self.cursor.epoch, self.ctrl.num_epochs):
+            tr = self.train_epoch(pipeline, epoch, start_batch=start_batch)
+            start_batch = 0
+            if self._stop:
+                break
             va = (
                 self.eval_epoch(pipeline, epoch)
                 if (epoch + 1) % self.ctrl.eval_every == 0
@@ -416,4 +601,7 @@ class OnlineLearner:
             )
             if verbose:
                 print(f"epoch {epoch:4d}  train_acc={tr:.3f}  val_acc={va:.3f}")
+        if self.ckpt is not None:
+            self.ckpt.wait()
+            self.save_checkpoint(blocking=True)
         return self.log

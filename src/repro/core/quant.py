@@ -89,6 +89,17 @@ class QuantSpec:
 MEMBRANE_SPEC = QuantSpec(bits=12, frac=0)
 WEIGHT_SPEC = QuantSpec(bits=8, frac=4)
 
+# Deterministic END_B commit grid: the fixed-point accumulator each
+# per-sample e-prop contribution is snapped onto before the batch reduction
+# (``ExecutionBackend(runtime=RuntimeConfig(commit_grid=DW_COMMIT_SPEC))``).
+# Integer code sums are associative, so the committed ``dw`` is *bitwise
+# invariant* to how the sample axis is partitioned — a batch split across
+# 1, 4 or 8 mesh devices (or any tiling) commits the identical weights.
+# This is the software analog of the chip's fixed-point e-prop accumulators;
+# 24 bits with 12 fractional give per-sample headroom of ±2**11 at an LSB of
+# 2**-12 — far below any observed per-sample |dw| on the paper's workloads.
+DW_COMMIT_SPEC = QuantSpec(bits=24, frac=12)
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantizedMode:
@@ -184,6 +195,35 @@ class QuantizedMode:
         """Membrane LSBs one weight LSB contributes (integer by the
         commensurability assert in ``__post_init__``)."""
         return self.threshold >> self.weight_spec.frac
+
+    # ------------------------------------------------------------ contract
+    def contract(self) -> dict:
+        """The register contract as plain JSON-able ints — what checkpoint
+        manifests record so a restore can refuse a checkpoint written under
+        different fixed-point registers (a silent grid mismatch would make
+        the restored SRAM image meaningless)."""
+        return {
+            "threshold": int(self.threshold),
+            "alpha_reg": int(self.alpha_reg),
+            "kappa_reg": int(self.kappa_reg),
+            "membrane_bits": int(self.membrane_spec.bits),
+            "membrane_frac": int(self.membrane_spec.frac),
+            "weight_bits": int(self.weight_spec.bits),
+            "weight_frac": int(self.weight_spec.frac),
+        }
+
+    @classmethod
+    def from_contract(cls, d: dict) -> "QuantizedMode":
+        """Inverse of :meth:`contract` (manifest dict → mode)."""
+        return cls(
+            threshold=int(d["threshold"]),
+            alpha_reg=int(d["alpha_reg"]),
+            kappa_reg=int(d["kappa_reg"]),
+            membrane_spec=QuantSpec(int(d["membrane_bits"]),
+                                    int(d["membrane_frac"])),
+            weight_spec=QuantSpec(int(d["weight_bits"]),
+                                  int(d["weight_frac"])),
+        )
 
     def weight_codes(self, w: jax.Array) -> jax.Array:
         """Float weights → signed SRAM codes (integer-valued float32)."""

@@ -18,6 +18,16 @@
 
 Both yield identical decoded batches, so the controller is mode-agnostic —
 the same way the paper's AER decoder serves both SoCs.
+
+Replay determinism (the fault-tolerance contract, ``docs/fault_tolerance.md``):
+batch order is a pure function of ``(seed, epoch)`` — shuffles derive a
+fresh ``np.random.default_rng([seed, epoch])`` per epoch instead of
+advancing a process-lifetime generator — so a restarted run that resumes
+from a :class:`~repro.distributed.checkpoint.ReplayCursor` consumes exactly
+the batches the crashed run would have (``batches(split, epoch,
+start_batch=k)`` skips the first ``k`` without consuming entropy).  The
+serving-side :class:`EventStream` carries the same property per pass plus
+an explicit ``state()``/``seek()`` cursor.
 """
 
 from __future__ import annotations
@@ -31,6 +41,7 @@ import numpy as np
 
 from repro.core import aer
 from repro.core.controller import DeviceBatch, decode_events_to_batch
+from repro.distributed.checkpoint import ReplayCursor  # noqa: F401  (re-export)
 
 
 def event_density(events, n_in: Optional[int] = None,
@@ -101,8 +112,9 @@ class ResidentPipeline(_Base):
                 x.nbytes for x in jax.tree.leaves(batch)
             ) + d["events"].nbytes
 
-    def batches(self, split: str, epoch: int) -> Iterator[DeviceBatch]:
-        if split in self._resident:
+    def batches(self, split: str, epoch: int,
+                start_batch: int = 0) -> Iterator[DeviceBatch]:
+        if split in self._resident and start_batch == 0:
             yield self._resident[split]
 
 
@@ -122,21 +134,30 @@ class BatchedOffloadPipeline(_Base):
         self.samples_per_batch = samples_per_batch
         self.prefetch = max(1, prefetch)
         self.shuffle_train = shuffle_train
-        self._rng = np.random.default_rng(seed)
+        self.seed = seed
 
-    def _order(self, split: str, n: int) -> np.ndarray:
+    def _order(self, split: str, n: int, epoch: int) -> np.ndarray:
+        # Pure function of (seed, epoch): a replayed epoch shuffles
+        # identically no matter how many batches an earlier run consumed —
+        # the replay-cursor determinism contract (a process-lifetime rng
+        # here would make resume order depend on crash position).
         if split == "train" and self.shuffle_train:
-            return self._rng.permutation(n)
+            return np.random.default_rng([self.seed, epoch]).permutation(n)
         return np.arange(n)
 
-    def batches(self, split: str, epoch: int) -> Iterator[DeviceBatch]:
+    def batches(self, split: str, epoch: int,
+                start_batch: int = 0) -> Iterator[DeviceBatch]:
+        """Yield the epoch's decoded device batches; ``start_batch`` skips
+        the first ``k`` batches *without offloading them* — resume-with-
+        replay lands on the exact batch a crashed run would consume next."""
         if split not in self.dataset:
             return
         d = self.dataset[split]
         events = d["events"]
-        order = self._order(split, events.shape[0])
+        order = self._order(split, events.shape[0], epoch)
         spb = self.samples_per_batch
         chunks = [order[i : i + spb] for i in range(0, len(order), spb)]
+        chunks = chunks[start_batch:]
 
         # Double-buffered offload: issue transfer k+1 before yielding k.
         inflight: list = []
@@ -165,7 +186,15 @@ class EventStream:
     stream hands out one trimmed uint32 event buffer at a time (trailing 0x0
     pad words stripped), ready for ``repro.serve.BatchedEngine.submit`` /
     ``serve``.  ``repeat`` loops the split to synthesize sustained traffic;
-    ``shuffle`` randomizes arrival order per pass.
+    ``shuffle`` randomizes arrival order per pass (deterministically: each
+    pass's order is a pure function of ``(seed, pass)``).
+
+    The stream carries a durable cursor — ``(pass, offset)``, the next
+    request to hand out: :meth:`state` snapshots it for a checkpoint
+    manifest, :meth:`seek` restores it, and a restarted consumer replays
+    exactly the requests the crashed one would have received.  Iteration
+    advances the cursor in place, so the stream is single-consumer: a fully
+    drained stream yields nothing more until :meth:`reset`.
     """
 
     def __init__(
@@ -182,19 +211,52 @@ class EventStream:
         self.events = np.asarray(self.meta["events"], np.uint32)
         self.repeat = repeat
         self.shuffle = shuffle
-        self._rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.pass_idx = 0    # cursor: current pass through the split
+        self.offset = 0      # cursor: next index into that pass's order
 
     def __len__(self) -> int:
         return self.events.shape[0] * self.repeat
+
+    # ------------------------------------------------------------- cursor
+    def state(self) -> Dict[str, int]:
+        """Durable cursor — record in a checkpoint manifest."""
+        return {"pass": int(self.pass_idx), "offset": int(self.offset),
+                "seed": int(self.seed)}
+
+    def seek(self, state: Dict[str, int]) -> None:
+        """Restore a :meth:`state` snapshot (the seed must match — a cursor
+        indexes into the order that seed generates)."""
+        if int(state.get("seed", self.seed)) != int(self.seed):
+            raise ValueError(
+                f"EventStream cursor was recorded under seed "
+                f"{state['seed']}, this stream uses {self.seed}"
+            )
+        self.pass_idx = int(state["pass"])
+        self.offset = int(state["offset"])
+
+    def reset(self) -> None:
+        self.pass_idx = 0
+        self.offset = 0
+
+    def _order(self, pass_idx: int) -> np.ndarray:
+        n = self.events.shape[0]
+        if self.shuffle:
+            return np.random.default_rng([self.seed, pass_idx]).permutation(n)
+        return np.arange(n)
 
     def __iter__(self) -> Iterator[np.ndarray]:
         from repro.serve.batching import trim_padding
 
         n = self.events.shape[0]
-        for _ in range(self.repeat):
-            order = self._rng.permutation(n) if self.shuffle else np.arange(n)
-            for i in order:
+        while self.pass_idx < self.repeat:
+            order = self._order(self.pass_idx)
+            while self.offset < n:
+                i = order[self.offset]
+                self.offset += 1
                 yield trim_padding(self.events[i])
+            self.pass_idx += 1
+            self.offset = 0
 
 
 def interleave_train_serve(

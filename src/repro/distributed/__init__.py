@@ -1,3 +1,8 @@
+from repro.distributed.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    CheckpointPolicy,
+    ReplayCursor,
+)
 from repro.distributed.sharding import (  # noqa: F401
     BASE_RULES,
     ShardingRules,

@@ -2,23 +2,43 @@
 
 Layout:
   <dir>/step_000420/
-      manifest.json        {step, time, data_position, rng, leaf index}
+      manifest.json        {step, time, leaves, **extra}
       arrays.npz           one entry per flattened pytree leaf
   <dir>/LATEST             text file naming the newest complete checkpoint
 
 Atomicity: each checkpoint is written into ``step_X.tmp`` and renamed into
 place only after every array has been flushed — a crash mid-save never
-corrupts the restore path (rename is atomic on POSIX).  Saving runs on a
-background thread (``save_async``) so the train loop only blocks on the
-device→host transfer, not the disk write.  Restore targets any mesh: arrays
-come back as numpy and are re-placed with whatever shardings the new mesh
-prescribes (see :mod:`repro.distributed.elastic`).
+corrupts the restore path (rename is atomic on POSIX).  Torn ``.tmp`` dirs
+left by a crashed process are invisible to ``all_steps``/``latest_step``
+and swept on the next manager construction.  ``save_async`` hands the host
+snapshot to a single persistent writer thread through a small bounded
+queue, so the train loop only blocks on the device→host transfer — never
+on the previous write still being on disk (a join-per-save design stalls
+every commit once the write time exceeds the commit gap).  The serial
+writer keeps saves ordered, so the LATEST pointer and retention pruning
+stay race-free; a failed background write is re-raised at the *next*
+``save`` / ``save_async`` / ``wait`` call, whichever comes first —
+durability errors never wait for an explicit ``wait()``.
+
+Bit-exactness: leaves are stored as raw numpy arrays (``np.savez``), so
+every dtype round-trips bit for bit — including the integer-valued float32
+carriers of the quantized SRAM weight image and the ``EpropSGD`` float
+residual accumulators.  ``restore`` validates every leaf's shape *and*
+dtype against the caller's template and fails with a per-leaf diff rather
+than letting a stale or foreign checkpoint surface as a jit shape error
+three layers down.
+
+Restore targets any mesh: arrays come back as numpy and are re-placed with
+whatever shardings the new mesh prescribes (see
+:mod:`repro.distributed.elastic`).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
+import queue
 import shutil
 import threading
 import time
@@ -31,6 +51,50 @@ import numpy as np
 SEP = "/"
 
 
+@dataclasses.dataclass
+class ReplayCursor:
+    """Durable position in a deterministic batch replay.
+
+    ``epoch`` and ``batch`` name the *next* batch a training loop would
+    consume: a loop sets ``(epoch, batch) = (e, i + 1)`` immediately before
+    committing batch ``i`` of epoch ``e``, so a checkpoint cut after the
+    commit resumes at exactly the first unconsumed batch.  Because the
+    pipelines derive their per-epoch order from ``(seed, epoch)`` alone
+    (see :mod:`repro.data.pipeline`), replaying from a cursor reproduces
+    the identical batch sequence the crashed run would have consumed —
+    in float and quantized modes alike.
+    """
+
+    epoch: int = 0
+    batch: int = 0
+
+    def as_manifest(self) -> Dict[str, int]:
+        return {"epoch": int(self.epoch), "batch": int(self.batch)}
+
+    @classmethod
+    def from_manifest(cls, d: Dict[str, int]) -> "ReplayCursor":
+        return cls(epoch=int(d["epoch"]), batch=int(d["batch"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """Durability policy a training loop hands to its checkpoint hooks.
+
+    ``every`` is the save cadence in commits (``OnlineLearner``) or steps
+    (``Trainer``); ``keep <= 0`` retains every checkpoint; ``async_save``
+    selects :meth:`CheckpointManager.save_async` (disk IO overlapped with
+    the next commits) over the blocking :meth:`CheckpointManager.save`.
+    """
+
+    directory: str | Path
+    every: int = 1
+    keep: int = 3
+    async_save: bool = True
+
+    def manager(self) -> "CheckpointManager":
+        return CheckpointManager(self.directory, keep=self.keep)
+
+
 def _flatten(tree: Any) -> Tuple[List[str], List[Any]]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     names, leaves = [], []
@@ -41,52 +105,106 @@ def _flatten(tree: Any) -> Tuple[List[str], List[Any]]:
 
 
 def _unflatten_like(template: Any, names: List[str], arrays: Dict[str, np.ndarray]) -> Any:
+    """Rebuild ``template``'s structure from stored arrays, validating every
+    leaf's shape and dtype against the template (the registry's mis-shaped-
+    image discipline: fail at the restore boundary with a per-leaf diff, not
+    three layers down as a jit shape error)."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-    out = []
+    out, problems = [], []
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)
         if key not in arrays:
             raise KeyError(f"checkpoint missing leaf {key}")
-        out.append(arrays[key])
+        arr = arrays[key]
+        want_shape = tuple(np.shape(leaf))
+        want_dtype = np.asarray(leaf).dtype
+        if tuple(arr.shape) != want_shape or arr.dtype != want_dtype:
+            problems.append(
+                f"  {key}: checkpoint has {arr.shape} {arr.dtype}, "
+                f"template needs {want_shape} {want_dtype}"
+            )
+        out.append(arr)
+    if problems:
+        raise ValueError(
+            "checkpoint does not match the restore template:\n"
+            + "\n".join(problems)
+        )
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
 class CheckpointManager:
+    # Backpressure bound on queued-but-unwritten async saves: the commit
+    # loop may run at most this many checkpoints ahead of the disk before
+    # save_async blocks.  Small on purpose — an unbounded queue converts a
+    # slow disk into silent unbounded host memory growth.
+    MAX_PENDING = 2
+
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
-        self._thread: Optional[threading.Thread] = None
+        self._queue: Optional[queue.Queue] = None
+        self._writer: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # Sweep torn saves from a crashed predecessor: a ``.tmp`` dir is by
+        # construction an incomplete checkpoint (the atomic rename never
+        # happened), so it is garbage — never a restore candidate.
+        for p in self.dir.glob("step_*.tmp"):
+            shutil.rmtree(p, ignore_errors=True)
 
     # ------------------------------------------------------------- save
+    def _raise_pending(self) -> None:
+        """Surface a failed background write now (without joining a healthy
+        in-flight thread) — called at the top of every save entry so a
+        durability failure is raised at the next save, not the next wait."""
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> Path:
-        """Blocking save (device→host, write, atomic rename, prune)."""
+        """Blocking save (device→host, write, atomic rename, prune).
+
+        Drains any queued async saves first (the serial writer owns the
+        LATEST pointer; a second writer would race it) and re-raises their
+        error if one failed.
+        """
+        self._raise_pending()
+        self.wait()
         host = jax.tree.map(np.asarray, jax.device_get(tree))
         return self._write(step, host, extra or {})
 
     def save_async(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
-        """Device→host happens now; disk IO on a background thread."""
-        self.wait()  # at most one in-flight save
+        """Device→host happens now; disk IO on the persistent writer thread.
+
+        The caller never waits for earlier writes to finish — queued saves
+        drain in order on one thread — unless :data:`MAX_PENDING` saves are
+        already queued (backpressure).  A pending error from an earlier
+        async save is raised here, at the next save, not at ``wait()``.
+        """
+        self._raise_pending()
         host = jax.tree.map(np.asarray, jax.device_get(tree))
-        ex = dict(extra or {})
+        if self._queue is None:
+            self._queue = queue.Queue(maxsize=self.MAX_PENDING)
+            self._writer = threading.Thread(target=self._drain, daemon=True)
+            self._writer.start()
+        self._queue.put((step, host, dict(extra or {})))
 
-        def work():
+    def _drain(self) -> None:
+        """Writer-thread loop: serialize every queued save to disk in
+        order; an error parks in ``_error`` for the next save/wait call."""
+        while True:
+            step, host, extra = self._queue.get()
             try:
-                self._write(step, host, ex)
-            except BaseException as e:  # surfaced on next wait()
+                self._write(step, host, extra)
+            except BaseException as e:  # surfaced on next save/save_async/wait
                 self._error = e
-
-        self._thread = threading.Thread(target=work, daemon=True)
-        self._thread.start()
+            finally:
+                self._queue.task_done()
 
     def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
+        if self._queue is not None:
+            self._queue.join()
+        self._raise_pending()
 
     def _write(self, step: int, host_tree: Any, extra: Dict) -> Path:
         names, leaves = _flatten(host_tree)
@@ -113,8 +231,10 @@ class CheckpointManager:
         return final
 
     def _prune(self) -> None:
+        if self.keep <= 0:
+            return  # keep <= 0 means "keep every checkpoint", explicitly
         ckpts = self.all_steps()
-        for step in ckpts[: -self.keep] if self.keep else []:
+        for step in ckpts[: -self.keep]:
             shutil.rmtree(self.dir / f"step_{step:09d}", ignore_errors=True)
 
     # ------------------------------------------------------------- load
@@ -127,16 +247,26 @@ class CheckpointManager:
         return sorted(steps)
 
     def latest_step(self) -> Optional[int]:
+        """The newest complete step: the LATEST pointer when it names a
+        complete checkpoint, else (stale/corrupt/missing pointer) a
+        directory scan for the newest complete ``step_*`` dir."""
         latest = self.dir / "LATEST"
         if latest.exists():
             name = latest.read_text().strip()
             if (self.dir / name / "manifest.json").exists():
-                return int(name.split("_")[1])
+                try:
+                    return int(name.split("_")[1])
+                except (IndexError, ValueError):
+                    pass  # corrupt pointer contents — fall back to the scan
         steps = self.all_steps()
         return steps[-1] if steps else None
 
     def restore(self, step: int, template: Any) -> Tuple[Any, Dict]:
-        """Returns (numpy pytree shaped like template, manifest)."""
+        """Returns (numpy pytree shaped like template, manifest).
+
+        Every leaf is validated against the template's shape and dtype; a
+        mismatch raises :class:`ValueError` naming each offending leaf.
+        """
         d = self.dir / f"step_{step:09d}"
         manifest = json.loads((d / "manifest.json").read_text())
         with np.load(d / "arrays.npz") as z:

@@ -1,22 +1,32 @@
 """Elastic scaling: reload any checkpoint into any mesh.
 
-At 1000+-node scale the mesh you restart on is rarely the mesh you saved
-from — nodes die, capacity shifts.  Checkpoints are stored as plain host
-arrays (full, unsharded logical tensors), so resharding is just re-placing
-each leaf with the NamedSharding prescribed by the *new* mesh + rules:
+The RSNN training stack is data-parallel over one ``("data",)`` mesh axis
+(:func:`repro.launch.mesh.make_data_mesh`): weights are replicated, the
+sample axis is sharded, END_B ``dw`` is ``psum``-med.  Checkpoints store
+plain host arrays (full, unsharded logical tensors —
+:mod:`repro.distributed.checkpoint`), so restoring onto a *different*
+device count is just re-placing each leaf with the NamedSharding the new
+mesh + rules prescribe:
 
     state = reshard(host_state, specs, new_mesh, rules)
 
-``survive_failure`` implements the failure drill: given a device set with
-holes, build the largest feasible (data, model) mesh from the survivors
-(keeping the model axis intact — TP degree is a property of the compiled
-program) and reshard onto it.  Global batch is preserved by raising the
-per-replica batch (gradient accumulation), which is the trainer's job.
+``survive_data_failure`` is the drill the fault-tolerance suite exercises:
+a run saved on an 8-device data mesh restarts on 1/2/4 survivors — build
+the survivors' mesh (:func:`best_data_mesh_from`), resize the execution
+backend (:meth:`repro.core.backend.ExecutionBackend.resize` — same config,
+new shard_map layout), and reshard the state.  With a ``commit_grid``
+runtime (int32 code accumulation, see
+:class:`repro.core.quant.DW_COMMIT_SPEC`), the resized run's END_B commits
+are **bitwise identical** to the original's; without one they agree to
+float-reduction order.  ``reshard``/``best_mesh_from``/``survive_failure``
+keep the general (data, model) form for weight layouts that do split a
+model axis (none of the paper's RSNNs do — their weight SRAM is a few
+hundred KB and always replicated).
 """
 
 from __future__ import annotations
 
-from typing import Any, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -37,11 +47,46 @@ def reshard(host_tree: Any, specs: Any, mesh: Mesh, rules: ShardingRules) -> Any
     )
 
 
+def best_data_mesh_from(devices: Sequence) -> Optional[Mesh]:
+    """The survivors' 1-axis ``("data",)`` mesh — the layout every RSNN
+    training/serving path in this repo runs on.  One survivor needs no
+    mesh at all (single-device execution): returns ``None``."""
+    n = len(devices)
+    if n < 1:
+        raise ValueError("no surviving devices")
+    if n == 1:
+        return None
+    return Mesh(np.asarray(devices), ("data",))
+
+
+def survive_data_failure(
+    backend,
+    failed_ids: Sequence[int],
+) -> Tuple[Any, Optional[Mesh]]:
+    """The data-mesh failure drill: drop the failed devices, rebuild the
+    survivors' ``("data",)`` mesh and resize ``backend`` onto it.
+
+    ``backend`` is an :class:`~repro.core.backend.ExecutionBackend` (duck-
+    typed — anything with ``.resize(mesh)``); weights are replicated under
+    the data-parallel layout, so no state movement is needed beyond what
+    the resized backend's jit placement does on the next launch.  Restore
+    the checkpointed host state *after* resizing (``jax.device_put`` under
+    the new mesh, or :func:`reshard` for sharded layouts).
+
+    Returns ``(resized_backend, survivors_mesh)``.
+    """
+    survivors = [d for d in jax.devices() if d.id not in set(failed_ids)]
+    mesh = best_data_mesh_from(survivors)
+    return backend.resize(mesh), mesh
+
+
 def best_mesh_from(devices: Sequence, model_parallel: int) -> Mesh:
     """Largest (data, model) mesh buildable from surviving devices.
 
-    The model axis is kept at ``model_parallel`` (the compiled program's TP
-    degree); surviving devices beyond the largest multiple are left idle.
+    The model axis is kept at ``model_parallel`` (the compiled program's
+    tensor-parallel degree); surviving devices beyond the largest multiple
+    are left idle.  The RSNN stack always uses ``model_parallel=1`` — see
+    :func:`best_data_mesh_from` for its 1-axis form.
     """
     n = len(devices)
     data = n // model_parallel

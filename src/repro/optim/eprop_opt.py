@@ -50,7 +50,11 @@ class EpropSGD:
         self.cfg = cfg
 
     def init(self, weights: Dict[str, jax.Array]) -> Dict:
-        state: Dict = {"count": jnp.zeros((), jnp.float32)}
+        # count is an exact int32 sample counter: a float32 counter stops
+        # incrementing at 2^24 samples (x + 1 == x), silently freezing the
+        # lr decay schedule on long online runs.  int32 also round-trips a
+        # checkpoint bit-for-bit by construction.
+        state: Dict = {"count": jnp.zeros((), jnp.int32)}
         if self.cfg.momentum:
             state["mu"] = jax.tree.map(jnp.zeros_like, weights)
         if self.cfg.quant is not None:
@@ -92,7 +96,10 @@ class EpropSGD:
         keys_w = [k for k in weights if k in dw]
         dw = self._clip({k: dw[k] for k in keys_w}, num_updates)
         count = state["count"]
-        state = dict(state, count=count + num_updates)
+        # num_updates is a per-commit sample count (1 or the batch size) —
+        # integer by nature; keep the counter exact.
+        inc = jnp.asarray(round(float(num_updates)), jnp.int32)
+        state = dict(state, count=count + inc)
         scale = 1.0 / (1.0 + count / cfg.decay_tau) if cfg.decay_tau > 0 else 1.0
         lr = {
             k: cfg.lr * scale * (cfg.lr_out_scale if k == "w_out" else 1.0)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core.backend import BackendLike, as_backend
 from repro.core.controller import batch_commit_update
 from repro.core.rsnn import RSNNConfig
+from repro.distributed.checkpoint import ReplayCursor
 from repro.optim.eprop_opt import EpropSGD
 
 
@@ -64,16 +65,35 @@ def make_eprop_commit_step(
 
 
 def epoch_batches(
-    pipeline, split: str = "train", max_epochs: Optional[int] = None
+    pipeline, split: str = "train", max_epochs: Optional[int] = None,
+    cursor: Optional["ReplayCursor"] = None,
 ) -> Iterator[dict]:
     """Flatten a pipeline's epochs into the endless batch iterator the
-    Trainer consumes (``max_epochs`` bounds it for tests)."""
-    epoch = 0
+    Trainer consumes (``max_epochs`` bounds it for tests).
+
+    ``cursor`` is a :class:`~repro.distributed.checkpoint.ReplayCursor`
+    advanced *in place*: before each batch is yielded it is set to that
+    batch's position ``(epoch, index + 1)`` — the next batch a consumer
+    that commits the yielded one would need — so a checkpoint cut after
+    the commit records exactly where to resume.  Pass a restored cursor to
+    start mid-stream: the pipeline's ``(seed, epoch)``-derived order makes
+    the replayed sequence identical to what the crashed run would have
+    consumed (the determinism contract in :mod:`repro.data.pipeline`).
+    """
+    epoch = cursor.epoch if cursor is not None else 0
+    start = cursor.batch if cursor is not None else 0
     while max_epochs is None or epoch < max_epochs:
         yielded = False
-        for batch in pipeline.batches(split, epoch):
+        it = (pipeline.batches(split, epoch, start_batch=start)
+              if start else pipeline.batches(split, epoch))
+        for i, batch in enumerate(it, start=start):
             yielded = True
+            if cursor is not None:
+                cursor.epoch, cursor.batch = epoch, i + 1
             yield batch
-        if not yielded:
+        if not yielded and start == 0:
             return
         epoch += 1
+        start = 0
+        if cursor is not None:
+            cursor.epoch, cursor.batch = epoch, 0

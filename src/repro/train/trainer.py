@@ -26,7 +26,11 @@ from typing import Any, Callable, Dict, Iterator, Optional
 import jax
 import numpy as np
 
-from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.checkpoint import (
+    CheckpointManager,
+    CheckpointPolicy,
+    ReplayCursor,
+)
 from repro.train.metrics import MetricsLogger, StragglerWatchdog
 
 
@@ -50,14 +54,32 @@ class Trainer:
         opt_state: Any,
         data_iter: Iterator[Dict[str, jax.Array]],
         cfg: TrainerConfig,
+        checkpoint: Optional[CheckpointPolicy] = None,
+        cursor: Optional[ReplayCursor] = None,
     ):
+        """``checkpoint`` (a :class:`CheckpointPolicy`) overrides the loose
+        ``cfg.ckpt_dir``/``keep_ckpts``/``ckpt_every`` knobs and selects
+        async vs blocking cadence saves.  ``cursor`` is a
+        :class:`ReplayCursor` shared with the data iterator (see
+        :func:`repro.train.eprop_step.epoch_batches`): when set, its
+        position rides in every manifest and :meth:`restore` brings it
+        back — resume-with-replay for the generic step loop."""
         self.step_fn = step_fn
         self.params = params
         self.opt_state = opt_state
         self.data = data_iter
         self.cfg = cfg
         self.step = 0
-        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+        self.policy = checkpoint
+        if checkpoint is not None:
+            self.ckpt = checkpoint.manager()
+            self.ckpt_every = max(1, int(checkpoint.every))
+            self._async = bool(checkpoint.async_save)
+        else:
+            self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+            self.ckpt_every = cfg.ckpt_every
+            self._async = True
+        self.cursor = cursor
         self.metrics = MetricsLogger(cfg.log_file)
         self.watchdog = StragglerWatchdog(k=cfg.watchdog_k)
         self.bad_steps = 0
@@ -71,6 +93,11 @@ class Trainer:
         for sig in (signal.SIGTERM, signal.SIGINT):
             self._old_handlers[sig] = signal.signal(sig, self._on_term)
 
+    def restore_signal_handlers(self):
+        for sig, h in self._old_handlers.items():
+            signal.signal(sig, h)
+        self._old_handlers = {}
+
     def _on_term(self, signum, frame):
         self._stop = True   # finish current step, checkpoint, exit
 
@@ -80,6 +107,8 @@ class Trainer:
 
     def save(self, blocking: bool = False):
         extra = {"data_step": self.step}
+        if self.cursor is not None:
+            extra["cursor"] = self.cursor.as_manifest()
         if blocking:
             self.ckpt.save(self.step, self._state(), extra)
         else:
@@ -93,6 +122,9 @@ class Trainer:
         placed = jax.device_put(host, jax.tree.map(lambda x: x.sharding, self._state()))
         self.params, self.opt_state = placed["params"], placed["opt_state"]
         self.step = manifest["step"]
+        if self.cursor is not None and "cursor" in manifest:
+            restored = ReplayCursor.from_manifest(manifest["cursor"])
+            self.cursor.epoch, self.cursor.batch = restored.epoch, restored.batch
         return True
 
     # ------------------------------------------------------------- loop
@@ -129,8 +161,8 @@ class Trainer:
                 self.metrics.log(self.step, wall, {"straggler": 1.0, **metrics})
             if self.step % cfg.log_every == 0:
                 self.metrics.log(self.step, wall, metrics)
-            if self.step % cfg.ckpt_every == 0:
-                self.save()
+            if self.step % self.ckpt_every == 0:
+                self.save(blocking=not self._async)
 
         self.ckpt.wait()
         self.save(blocking=True)
