@@ -38,6 +38,17 @@ MAX_ADDR = (1 << ADDR_BITS) - 1   # 4095
 MAX_TICK = (1 << TICK_BITS) - 1   # 4095
 
 
+class AEREncodingError(ValueError):
+    """A value does not fit the 32-bit AER word format (12-bit address /
+    12-bit tick / known type byte) or violates buffer structure.
+
+    Root of the serving guard hierarchy too — ``serve.guard.GuardError``
+    subclasses this, so one ``except AEREncodingError`` covers both
+    codec-level and serve-boundary validation.  Raised instead of
+    ``assert`` so validation survives ``python -O``.
+    """
+
+
 def pack(kind, addr, tick):
     """Pack event fields into uint32 words (vectorised)."""
     kind = jnp.asarray(kind, jnp.uint32)
@@ -75,14 +86,21 @@ def encode_sample(
     T, N = raster.shape
     if end_tick is None:
         end_tick = T - 1
-    assert T - 1 <= MAX_TICK and N - 1 <= MAX_ADDR
+    if T - 1 > MAX_TICK or N - 1 > MAX_ADDR:
+        raise AEREncodingError(
+            f"raster ({T}, {N}) exceeds the 12-bit tick/address fields "
+            f"(max {MAX_TICK + 1} ticks x {MAX_ADDR + 1} neurons)"
+        )
     # Validate + mask the label/end fields like pack() does.  The seed code
     # OR'd them in raw, so an out-of-range label or tick bled into the type
     # byte and silently corrupted the word stream.
     label, label_tick, end_tick = int(label), int(label_tick), int(end_tick)
-    assert 0 <= label <= MAX_ADDR, f"label {label} exceeds the 12-bit field"
-    assert 0 <= label_tick <= MAX_TICK, f"label_tick {label_tick} exceeds 12 bits"
-    assert 0 <= end_tick <= MAX_TICK, f"end_tick {end_tick} exceeds 12 bits"
+    if not 0 <= label <= MAX_ADDR:
+        raise AEREncodingError(f"label {label} exceeds the 12-bit field")
+    if not 0 <= label_tick <= MAX_TICK:
+        raise AEREncodingError(f"label_tick {label_tick} exceeds 12 bits")
+    if not 0 <= end_tick <= MAX_TICK:
+        raise AEREncodingError(f"end_tick {end_tick} exceeds 12 bits")
     t_idx, n_idx = np.nonzero(raster)
     words = (np.uint32(EVT_SPIKE) << 24) | (n_idx.astype(np.uint32) << 12) | t_idx.astype(
         np.uint32
@@ -133,7 +151,10 @@ def pad_events(buffers: list[np.ndarray], length: int | None = None) -> np.ndarr
     length = length or max(len(b) for b in buffers)
     out = np.zeros((len(buffers), length), np.uint32)
     for i, b in enumerate(buffers):
-        assert len(b) <= length, (len(b), length)
+        if len(b) > length:
+            raise AEREncodingError(
+                f"buffer {i} has {len(b)} words, pad length is {length}"
+            )
         out[i, : len(b)] = b
     return out
 

@@ -113,7 +113,8 @@ def resolve_backend(backend: str) -> str:
     """``"auto"`` → ``"kernel"`` on TPU, ``"scan"`` elsewhere."""
     if backend == "auto":
         return "kernel" if jax.default_backend() == "tpu" else "scan"
-    assert backend in ("kernel", "scan"), backend
+    if backend not in ("kernel", "scan"):
+        raise ValueError(f"unknown backend {backend!r}")
     return backend
 
 
@@ -271,10 +272,11 @@ class ExecutionBackend:
             # The Pallas kernels implement the factored reformulation only;
             # exact mode (per-synapse trace SRAM, bit-faithful) must run the
             # reference scan — fail loudly rather than silently diverge.
-            assert cfg.eprop.mode == "factored", (
-                "kernel backend is factored-only; use backend='scan' for "
-                f"eprop mode={cfg.eprop.mode!r}"
-            )
+            if cfg.eprop.mode != "factored":
+                raise ValueError(
+                    "kernel backend is factored-only; use backend='scan' "
+                    f"for eprop mode={cfg.eprop.mode!r}"
+                )
         self.quant = quant if quant is not None else cfg.neuron.quant
         # the neuron config every scan/kernel tile actually runs against
         self._ncfg = (
@@ -284,10 +286,11 @@ class ExecutionBackend:
         )
         self.alpha = float(cfg.neuron.alpha if alpha is None else alpha)
         if self.quant is not None:
-            assert alpha is None or abs(float(alpha) - self.quant.alpha) < 1e-9, (
-                "quantized mode: alpha is driven by alpha_reg "
-                f"({self.quant.alpha}), caller passed {alpha}"
-            )
+            if alpha is not None and abs(float(alpha) - self.quant.alpha) >= 1e-9:
+                raise ValueError(
+                    "quantized mode: alpha is driven by alpha_reg "
+                    f"({self.quant.alpha}), caller passed {alpha}"
+                )
             self.alpha = self.quant.alpha
         # VMEM budget the batch-tiled kernel grids size their tile rows
         # against (max_forward_tile / max_fused_train_tile) — a trace-time
@@ -362,41 +365,53 @@ class ExecutionBackend:
         caller inherits whatever this backend resolved.  This is the single
         sharing-path validator (:func:`as_backend` calls it when handed an
         existing instance)."""
+        def need(ok: bool, msg: str) -> None:
+            if not ok:
+                raise ValueError(msg)
+
         if rt.backend != "auto":
-            assert resolve_backend(rt.backend) == self.backend, (
+            need(
+                resolve_backend(rt.backend) == self.backend,
                 f"shared backend runs {self.backend!r}, caller asked for "
-                f"{rt.backend!r}"
+                f"{rt.backend!r}",
             )
-        assert rt.alpha is None or self.alpha == float(rt.alpha) or (
-            self.quant is not None
-            and abs(self.quant.alpha - float(rt.alpha)) < 1e-9
-        ), "shared backend baked a different alpha than the caller's params"
-        assert rt.quant is None or self.quant == rt.quant, (
-            "shared backend runs a different quantized mode than the caller's"
+        need(
+            rt.alpha is None or self.alpha == float(rt.alpha) or (
+                self.quant is not None
+                and abs(self.quant.alpha - float(rt.alpha)) < 1e-9
+            ),
+            "shared backend baked a different alpha than the caller's params",
         )
-        assert rt.mesh is None or self.mesh == rt.mesh, (
-            "shared backend was built over a different mesh than the caller's"
+        need(
+            rt.quant is None or self.quant == rt.quant,
+            "shared backend runs a different quantized mode than the caller's",
         )
-        assert rt.vmem_budget is None or self.vmem_budget == int(rt.vmem_budget), (
+        need(
+            rt.mesh is None or self.mesh == rt.mesh,
+            "shared backend was built over a different mesh than the caller's",
+        )
+        need(
+            rt.vmem_budget is None or self.vmem_budget == int(rt.vmem_budget),
             "shared backend tiles against a different vmem_budget "
-            f"({self.vmem_budget}) than the caller's ({rt.vmem_budget})"
+            f"({self.vmem_budget}) than the caller's ({rt.vmem_budget})",
         )
         # "auto"/None inherit whatever this backend resolved; only a forced
         # path can conflict.
-        assert rt.sparsity in (None, "auto") or rt.sparsity == self.sparsity, (
+        need(
+            rt.sparsity in (None, "auto") or rt.sparsity == self.sparsity,
             f"shared backend resolved sparsity={self.sparsity!r}, caller "
-            f"forced {rt.sparsity!r}"
+            f"forced {rt.sparsity!r}",
         )
-        assert (
+        need(
             rt.event_density is None
-            or self.event_density == float(rt.event_density)
-        ), (
+            or self.event_density == float(rt.event_density),
             "shared backend was built for a different measured event density "
-            f"({self.event_density}) than the caller's ({rt.event_density})"
+            f"({self.event_density}) than the caller's ({rt.event_density})",
         )
-        assert rt.commit_grid is None or self.commit_grid == rt.commit_grid, (
+        need(
+            rt.commit_grid is None or self.commit_grid == rt.commit_grid,
             "shared backend accumulates END_B on a different commit grid "
-            f"({self.commit_grid}) than the caller's ({rt.commit_grid})"
+            f"({self.commit_grid}) than the caller's ({rt.commit_grid})",
         )
 
     def resize(self, mesh) -> "ExecutionBackend":
@@ -428,7 +443,8 @@ class ExecutionBackend:
         needs the launch's tick count ``T`` (trace scratch is O(T·Bt))."""
         c = self.cfg
         if op == "train":
-            assert T is not None, "train tile rows depend on T"
+            if T is None:
+                raise ValueError("train tile rows depend on T")
             return max_fused_train_tile(
                 T, c.n_in, c.n_hid, c.n_out, self.vmem_budget
             )
@@ -1070,6 +1086,18 @@ class BackendPool:
         key = bucket_key(backend.cfg, backend.runtime)
         return self._by_key.setdefault(key, backend)
 
+    def discard(self, backend: ExecutionBackend) -> bool:
+        """Drop a pooled backend so the next :meth:`get` for its bucket
+        constructs a fresh instance (fresh jit caches).  The lane-restart
+        primitive: after a device/launch fault, the poisoned backend's
+        compiled state is abandoned rather than trusted.  Returns whether
+        the backend was actually pooled."""
+        key = bucket_key(backend.cfg, backend.runtime)
+        if self._by_key.get(key) is backend:
+            del self._by_key[key]
+            return True
+        return False
+
     def compiled_shapes(self, op: Optional[str] = None) -> int:
         """Distinct ``(T, B)`` tile shapes across every pooled backend —
         the multi-model recompile counter (hot-swapping / registering into
@@ -1108,16 +1136,18 @@ def as_backend(
     from different models share one backend instead of compiling their own.
     """
     if isinstance(backend, RuntimeConfig):
-        assert runtime is None, "runtime passed twice"
+        if runtime is not None:
+            raise ValueError("runtime passed twice")
         backend, runtime = backend.backend, backend
     name = backend if isinstance(backend, str) else "auto"
     rt = _resolve_runtime(runtime, name, alpha, quant, vmem_budget, mesh, None,
                           sparsity, event_density, model_id)
     if isinstance(backend, ExecutionBackend):
-        assert backend.cfg == cfg, (
-            "shared backend built for a different config"
-            + (f" (model {rt.model_id!r})" if rt.model_id else "")
-        )
+        if backend.cfg != cfg:
+            raise ValueError(
+                "shared backend built for a different config"
+                + (f" (model {rt.model_id!r})" if rt.model_id else "")
+            )
         backend.check_compatible(rt)
         return pool.adopt(backend) if pool is not None else backend
     if pool is not None:

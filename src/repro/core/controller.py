@@ -79,7 +79,8 @@ class ControllerConfig:
     commit: str = "sample"            # "sample" (END_S, X-HEEP) | "batch" (END_B, ARM)
 
     def __post_init__(self):
-        assert self.commit in ("sample", "batch"), self.commit
+        if self.commit not in ("sample", "batch"):
+            raise ValueError(f"unknown commit mode {self.commit!r}")
 
 
 # A decoded batch on device: {"raster": (S, T, N) sample-major rasters,

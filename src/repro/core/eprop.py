@@ -248,7 +248,10 @@ def forward_traces(
     dtype = params["w_in"].dtype
 
     alpha = jnp.asarray(params["alpha"], dtype)
-    assert alpha.ndim == 0, "factored e-prop requires scalar alpha (see module doc)"
+    if alpha.ndim != 0:
+        raise ValueError(
+            "factored e-prop requires scalar alpha (see module doc)"
+        )
     kappa = jnp.asarray(ncfg.kappa, dtype)
     w_in_d, w_rec_d, w_out_d, _, y_scale, dot = _datapath(params, ncfg, ecfg)
 

@@ -129,7 +129,8 @@ def lif_step_surrogate(
     v: jax.Array, current: jax.Array, alpha: jax.Array, cfg: NeuronConfig
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """LIF step using the surrogate-gradient spike (differentiable, for BPTT)."""
-    assert cfg.quant is None, "the BPTT reference path is float-only"
+    if cfg.quant is not None:
+        raise ValueError("the BPTT reference path is float-only")
     v_pre = alpha * v + current
     z = spike(v_pre, jnp.asarray(cfg.v_th, v.dtype), cfg)
     if cfg.reset == "sub":

@@ -142,18 +142,22 @@ class QuantizedMode:
     weight_spec: QuantSpec = WEIGHT_SPEC
 
     def __post_init__(self):
-        assert self.membrane_spec.frac == 0, (
-            "the membrane grid is a raw integer grid (frac=0)"
-        )
-        assert 0 < self.threshold <= self.v_max, (
-            f"threshold {self.threshold:#x} not representable on the "
-            f"{self.membrane_spec.bits}-bit membrane grid (max {self.v_max})"
-        )
-        assert self.threshold % (1 << self.weight_spec.frac) == 0, (
-            f"threshold {self.threshold:#x} must be divisible by "
-            f"2**frac={1 << self.weight_spec.frac} so the weight grid lands "
-            "on whole membrane LSBs (the chip's 0x03F0 does)"
-        )
+        if self.membrane_spec.frac != 0:
+            raise ValueError(
+                "the membrane grid is a raw integer grid (frac=0)"
+            )
+        if not 0 < self.threshold <= self.v_max:
+            raise ValueError(
+                f"threshold {self.threshold:#x} not representable on the "
+                f"{self.membrane_spec.bits}-bit membrane grid "
+                f"(max {self.v_max})"
+            )
+        if self.threshold % (1 << self.weight_spec.frac) != 0:
+            raise ValueError(
+                f"threshold {self.threshold:#x} must be divisible by "
+                f"2**frac={1 << self.weight_spec.frac} so the weight grid "
+                "lands on whole membrane LSBs (the chip's 0x03F0 does)"
+            )
 
     # ------------------------------------------------------------ membrane
     @property
@@ -193,7 +197,7 @@ class QuantizedMode:
     @property
     def w_gain(self) -> int:
         """Membrane LSBs one weight LSB contributes (integer by the
-        commensurability assert in ``__post_init__``)."""
+        commensurability check in ``__post_init__``)."""
         return self.threshold >> self.weight_spec.frac
 
     # ------------------------------------------------------------ contract

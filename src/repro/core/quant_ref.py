@@ -71,7 +71,8 @@ def golden_forward(
     readout ``y`` (T, B, O), the valid-window readout accumulator ``acc_y``
     (B, O) and its argmax ``pred`` (B,).
     """
-    assert reset in ("sub", "zero"), reset
+    if reset not in ("sub", "zero"):
+        raise ValueError(f"unknown reset mode {reset!r}")
     raster = np.asarray(raster)
     T, B, n_in = raster.shape
     H = w_rec.shape[0]

@@ -47,10 +47,17 @@ class RSNNConfig:
 
     def __post_init__(self):
         if self.strict_chip_limits:
-            assert self.n_in <= MAX_IN, f"{self.n_in} input neurons > chip max {MAX_IN}"
-            assert self.n_hid <= MAX_HID, f"{self.n_hid} hidden neurons > chip max {MAX_HID}"
-            assert self.n_out <= MAX_OUT, f"{self.n_out} output neurons > chip max {MAX_OUT}"
-        assert self.num_ticks <= 4096, "tick counter is 12-bit on the AER bus"
+            for got, cap, what in (
+                (self.n_in, MAX_IN, "input"),
+                (self.n_hid, MAX_HID, "hidden"),
+                (self.n_out, MAX_OUT, "output"),
+            ):
+                if got > cap:
+                    raise ValueError(
+                        f"{got} {what} neurons > chip max {cap}"
+                    )
+        if self.num_ticks > 4096:
+            raise ValueError("tick counter is 12-bit on the AER bus")
 
 
 def init_params(key: jax.Array, cfg: RSNNConfig) -> Dict[str, jax.Array]:

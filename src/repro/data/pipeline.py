@@ -67,7 +67,8 @@ def event_density(events, n_in: Optional[int] = None,
         n_in = int(events["n_in"])
         num_ticks = int(events["num_ticks"])
         events = events["events"]
-    assert n_in and num_ticks, "need n_in and num_ticks (or a split dict)"
+    if not (n_in and num_ticks):
+        raise ValueError("need n_in and num_ticks (or a split dict)")
     words = np.asarray(events, np.uint32)
     n_samples = words.shape[0] if words.ndim > 1 else 1
     n_spike = int((((words >> 24) & 0xFF) == aer.EVT_SPIKE).sum())
@@ -195,6 +196,15 @@ class EventStream:
     exactly the requests the crashed one would have received.  Iteration
     advances the cursor in place, so the stream is single-consumer: a fully
     drained stream yields nothing more until :meth:`reset`.
+
+    With ``guard=`` (a :class:`~repro.serve.guard.GuardConfig`), every
+    buffer passes through :func:`~repro.serve.guard.validate_events` before
+    it is yielded — the stream becomes the trust boundary for replayed or
+    recorded traffic.  ``on_invalid`` picks the policy: ``"raise"``
+    propagates the typed :class:`~repro.serve.guard.GuardError` (the cursor
+    has already advanced past the bad sample, so a catching consumer
+    re-enters ``iter(stream)`` and resumes at the next one), ``"skip"``
+    silently drops bad buffers and counts them in :attr:`invalid`.
     """
 
     def __init__(
@@ -205,13 +215,25 @@ class EventStream:
         repeat: int = 1,
         shuffle: bool = False,
         seed: int = 0,
+        guard=None,
+        on_invalid: str = "raise",
     ):
-        assert split in dataset, (split, list(dataset))
+        if split not in dataset:
+            raise KeyError(
+                f"split {split!r} not in dataset (have {list(dataset)})"
+            )
+        if on_invalid not in ("raise", "skip"):
+            raise ValueError(
+                f"on_invalid must be 'raise' or 'skip', got {on_invalid!r}"
+            )
         self.meta = dataset[split]
         self.events = np.asarray(self.meta["events"], np.uint32)
         self.repeat = repeat
         self.shuffle = shuffle
         self.seed = seed
+        self.guard = guard
+        self.on_invalid = on_invalid
+        self.invalid = 0     # buffers rejected by the guard (skip policy)
         self.pass_idx = 0    # cursor: current pass through the split
         self.offset = 0      # cursor: next index into that pass's order
 
@@ -254,9 +276,27 @@ class EventStream:
             while self.offset < n:
                 i = order[self.offset]
                 self.offset += 1
-                yield trim_padding(self.events[i])
+                buf = trim_padding(self.events[i])
+                if self.guard is not None:
+                    buf = self._guarded(buf, int(i))
+                    if buf is None:
+                        continue
+                yield buf
             self.pass_idx += 1
             self.offset = 0
+
+    def _guarded(self, buf: np.ndarray, i: int) -> Optional[np.ndarray]:
+        from repro.serve.guard import GuardError, validate_events
+
+        try:
+            return validate_events(
+                buf, self.guard, what=f"stream sample {i}"
+            )
+        except GuardError:
+            self.invalid += 1
+            if self.on_invalid == "raise":
+                raise
+            return None
 
 
 def interleave_train_serve(
@@ -302,6 +342,7 @@ def make_pipeline(
     if mode in ("xheep", "resident"):
         return ResidentPipeline(dataset, label_delay)
     if mode in ("arm", "offload"):
-        assert samples_per_batch, "ARM mode needs samples_per_batch (BRAM depth)"
+        if not samples_per_batch:
+            raise ValueError("ARM mode needs samples_per_batch (BRAM depth)")
         return BatchedOffloadPipeline(dataset, samples_per_batch, label_delay, **kw)
     raise ValueError(f"unknown pipeline mode {mode!r}")

@@ -184,7 +184,8 @@ def resolve_sparsity(
     """
     if sparsity in ("dense", "event"):
         return sparsity
-    assert sparsity in (None, "auto"), f"unknown sparsity mode {sparsity!r}"
+    if sparsity not in (None, "auto"):
+        raise ValueError(f"unknown sparsity mode {sparsity!r}")
     if density is not None and float(density) <= threshold:
         return "event"
     return "dense"

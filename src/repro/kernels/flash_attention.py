@@ -100,7 +100,11 @@ def flash_attention(
     G = H // Hkv
     bq = min(block_q, Sq)
     bk = min(block_k, Skv)
-    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    if Sq % bq != 0 or Skv % bk != 0:
+        raise ValueError(
+            f"sequence lengths ({Sq}, {Skv}) must divide the attention "
+            f"block sizes ({bq}, {bk})"
+        )
     nq, nk = Sq // bq, Skv // bk
     scale = D ** -0.5
 

@@ -45,7 +45,10 @@ def make_param(
     dtype,
     scale: Optional[float] = None,
 ) -> Tuple[jax.Array, Tuple[Optional[str], ...]]:
-    assert len(shape) == len(axes), (shape, axes)
+    if len(shape) != len(axes):
+        raise ValueError(
+            f"shape {shape} and sharding axes {axes} disagree on rank"
+        )
     if is_abstract():
         return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)), axes
     if scale is None:  # fan-in scaling on the first dim by default

@@ -170,7 +170,10 @@ def moe_forward(p: Dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
         # einsum and its combine cross `model`.
         G = m.dispatch_groups
         n_flat = B * S
-        assert n_flat % G == 0, (n_flat, G)
+        if n_flat % G != 0:
+            raise ValueError(
+                f"{n_flat} tokens do not split into dispatch_groups={G}"
+            )
         xg = x.reshape(G, n_flat // G, D)
         xg = shard(xg, "batch", None, None)
 
@@ -192,7 +195,11 @@ def moe_forward(p: Dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
         )
     else:
         n_model = mesh.shape["model"]
-        assert m.n_experts % n_model == 0, (m.n_experts, n_model)
+        if m.n_experts % n_model != 0:
+            raise ValueError(
+                f"{m.n_experts} experts do not shard over "
+                f"model axis of {n_model}"
+            )
         e_local = m.n_experts // n_model
 
         def ranked(x_l, w_router, w_gate, w_up, w_down):

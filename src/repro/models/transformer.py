@@ -62,7 +62,10 @@ def _layer_plan(cfg) -> Plan:
         return Plan((), (("mamba", "none"),), cfg.n_layers)
     if cfg.family == "hybrid":
         per = cfg.attn_every
-        assert cfg.n_layers % per == 0
+        if cfg.n_layers % per != 0:
+            raise ValueError(
+                f"n_layers={cfg.n_layers} must divide into attn_every={per}"
+            )
         period = []
         for i in range(per):
             mixer = "attn" if i == cfg.attn_offset else "mamba"
@@ -73,7 +76,11 @@ def _layer_plan(cfg) -> Plan:
         return Plan((), tuple(period), cfg.n_layers // per)
     if cfg.family == "vlm":
         per = cfg.cross_attn_every
-        assert cfg.n_layers % per == 0
+        if cfg.n_layers % per != 0:
+            raise ValueError(
+                f"n_layers={cfg.n_layers} must divide into "
+                f"cross_attn_every={per}"
+            )
         period = [("xattn", "dense")] + [("attn", "dense")] * (per - 1)
         return Plan((), tuple(period), cfg.n_layers // per)
     if cfg.family == "moe":

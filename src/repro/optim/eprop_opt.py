@@ -124,7 +124,8 @@ class EpropSGD:
         acc = {k: state["acc"][k] - step[k] for k in keys_w}
         new_w, new_acc = dict(weights), dict(state["acc"])
         if cfg.stochastic_round:
-            assert key is not None, "stochastic rounding needs an rng key"
+            if key is None:
+                raise ValueError("stochastic rounding needs an rng key")
             rks = jax.random.split(key, len(keys_w))
             key_map = {k: rks[i] for i, k in enumerate(sorted(keys_w))}
         for k in keys_w:

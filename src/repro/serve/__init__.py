@@ -50,6 +50,19 @@ from repro.serve.engine import (
     SessionHandle,
     StreamStats,
 )
+from repro.serve.guard import (
+    GuardConfig,
+    GuardError,
+    LaneFaultError,
+    MalformedEventError,
+    OverloadError,
+    QuotaExceededError,
+    ServeError,
+    ServeStatus,
+    StreamContractError,
+    bad_rows,
+    validate_events,
+)
 from repro.serve.registry import (
     DEFAULT_MODEL,
     SRAM_KEYS,
@@ -86,6 +99,18 @@ __all__ = [
     "ServeRequest",
     # state pool
     "SessionPool",
+    # guard layer + error model (hardened serving)
+    "GuardConfig",
+    "ServeStatus",
+    "ServeError",
+    "GuardError",
+    "MalformedEventError",
+    "StreamContractError",
+    "QuotaExceededError",
+    "OverloadError",
+    "LaneFaultError",
+    "validate_events",
+    "bad_rows",
     # sizing / capacity math
     "max_batch_for",
     "max_sessions_for",

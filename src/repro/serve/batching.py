@@ -233,7 +233,10 @@ def pad_batch(
     T, B, N = raster.shape
     if B == target_b:
         return raster, valid
-    assert B < target_b, (B, target_b)
+    if B > target_b:
+        raise ValueError(
+            f"batch of {B} rows cannot pad down to target_b={target_b}"
+        )
     pad_r = np.zeros((T, target_b - B, N), raster.dtype)
     pad_v = np.zeros((T, target_b - B), valid.dtype)
     return np.concatenate([raster, pad_r], axis=1), np.concatenate([valid, pad_v], axis=1)

@@ -73,26 +73,49 @@ from repro.core.backend import BackendLike, ExecutionBackend, RuntimeConfig
 from repro.core.rsnn import RSNNConfig
 from repro.kernels import traffic
 from repro.serve import batching
+from repro.serve.guard import (
+    GuardConfig,
+    GuardError,
+    OverloadError,
+    QuotaExceededError,
+    ServeStatus,
+    bad_rows,
+    validate_events,
+)
 from repro.serve.registry import DEFAULT_MODEL, ModelRegistry, ModelSpec
-from repro.serve.scheduler import BatchTile, BucketingScheduler, StreamPacker
+from repro.serve.scheduler import (
+    BatchTile,
+    BucketingScheduler,
+    ServeRequest,
+    StreamPacker,
+)
 from repro.serve.session import SessionPool, SessionSnapshot, _Session
 
 
 @dataclasses.dataclass
 class ServeResult:
-    """Per-request classification + accounting."""
+    """Per-request classification + accounting.
+
+    ``status`` is the error model: :data:`~repro.serve.guard.ServeStatus.OK`
+    results carry live logits; REJECTED (guard/overload/shed), EXPIRED
+    (deadline passed before launch) and FAULT (numeric quarantine or an
+    unrecoverable lane fault) results carry ``pred == -1`` and zero logits —
+    dropped work surfaces as a typed result, never as a silent hole or an
+    engine-killing exception."""
 
     rid: int
-    pred: int                 # argmax class
+    pred: int                 # argmax class; -1 when status != OK
     logits: np.ndarray        # accumulated LI readout acc_y, shape (n_out,)
     label: int                # label carried by the AER stream (0 if absent)
     latency_s: float          # admission → result delivery (harvest); see
                               # BatchedEngine.serve — delivery lag behind
                               # device completion is bounded by the polling
-                              # cadence and max_inflight_tiles
+                              # cadence and max_inflight_tiles; for non-OK
+                              # results: admission → drop decision
     bucket_ticks: int         # padded tick length served at
     batch_size: int           # live samples in the tile
     model_id: str = DEFAULT_MODEL   # which registered model served it
+    status: ServeStatus = ServeStatus.OK
 
 
 @dataclasses.dataclass
@@ -110,6 +133,14 @@ class ServeStats:
     # logits tile per batch instead of seven (T, B, ·) tensors); 0 on the
     # scan backend, which runs no Pallas tile.
     hbm_bytes_streamed: int = 0
+    # Error-model counters: how many of `requests` ended non-OK (shed is
+    # the subset of rejected evicted by the admission="shed" policy), and
+    # how many lane restarts the window absorbed.
+    rejected: int = 0
+    expired: int = 0
+    quarantined: int = 0
+    shed: int = 0
+    lane_restarts: int = 0
     # model_id → ServeStats for that model's slice of the run; populated by
     # serve() when the window touched more than one model, else None.
     per_model: Optional[Dict[str, "ServeStats"]] = None
@@ -122,18 +153,32 @@ class ServeStats:
         batches: int,
         shapes: int,
         hbm_bytes: int = 0,
+        shed: int = 0,
+        lane_restarts: int = 0,
     ) -> "ServeStats":
-        lat = np.array([r.latency_s for r in results]) if results else np.zeros(1)
+        # Throughput and latency are computed over the *served* (OK)
+        # results: a rejected request is decided in microseconds and would
+        # otherwise inflate samples/s and deflate the percentiles.
+        ok = [r for r in results if r.status is ServeStatus.OK]
+        lat = np.array([r.latency_s for r in ok]) if ok else np.zeros(1)
+        by = {
+            s: sum(1 for r in results if r.status is s) for s in ServeStatus
+        }
         return cls(
             requests=len(results),
             batches=batches,
             wall_s=wall_s,
-            samples_per_sec=len(results) / wall_s if wall_s > 0 else float("inf"),
+            samples_per_sec=len(ok) / wall_s if wall_s > 0 else float("inf"),
             p50_latency_s=float(np.percentile(lat, 50)),
             p99_latency_s=float(np.percentile(lat, 99)),
-            mean_batch=(len(results) / batches) if batches else 0.0,
+            mean_batch=(len(ok) / batches) if batches else 0.0,
             compiled_shapes=shapes,
             hbm_bytes_streamed=hbm_bytes,
+            rejected=by[ServeStatus.REJECTED],
+            expired=by[ServeStatus.EXPIRED],
+            quarantined=by[ServeStatus.FAULT],
+            shed=shed,
+            lane_restarts=lane_restarts,
         )
 
 
@@ -179,7 +224,8 @@ class StreamStats:
     events: int                   # spike events consumed
     ticks: int                    # live session-ticks advanced (Σ chunk lengths)
     wall_s: float
-    events_per_sec: float
+    events_per_sec: float         # over wall_s - admission_wait_s: device
+                                  # throughput, not caller stall (see below)
     ticks_per_sec: float
     p50_tile_latency_s: float     # launch → harvest per tick-tile
     p99_tile_latency_s: float
@@ -188,6 +234,18 @@ class StreamStats:
     readmissions: int
     compiled_shapes: int          # distinct step_sessions (T, B) programs
     hbm_bytes_streamed: int = 0
+    # Error-model counters (window totals).
+    rejected: int = 0             # feeds refused by the guard / overload
+    expired: int = 0              # sessions dropped at pack time (deadline)
+    shed: int = 0                 # requests evicted by admission="shed"
+    quarantined: int = 0          # sessions FAULTed by health checks/faults
+    lane_restarts: int = 0        # backend rebuilds the window absorbed
+    saturation_storms: int = 0    # quantized rows that escaped the 12-bit grid
+    # Wall time callers spent blocked on a full bounded packer queue (the
+    # engine pumps inline to make room).  Subtracted from wall_s for
+    # events_per_sec/ticks_per_sec so throughput under backpressure
+    # reports what the device sustained, not how long callers stalled.
+    admission_wait_s: float = 0.0
     # model_id → StreamStats for that model's lane; populated when the
     # engine serves more than one model, else None.
     per_model: Optional[Dict[str, "StreamStats"]] = None
@@ -216,6 +274,7 @@ class _ModelLane:
         self.scheduler = BucketingScheduler(
             self.max_batch, engine.tick_granularity, clock=engine._clock,
             rid_alloc=engine._alloc_rid,
+            max_pending=engine._max_pending, admission=engine._admission,
         )
         # Pool capacity must seat one full tile of sessions at once; the
         # trash row on top keeps gather/scatter shapes fixed.
@@ -230,9 +289,19 @@ class _ModelLane:
         self.packer = StreamPacker(
             self.max_batch, tick_tile=engine._tick_tile,
             tick_granularity=engine.tick_granularity,
+            max_pending=engine._max_pending_sessions,
+        )
+        # Per-lane guard: the engine-wide policy with this model's n_in
+        # resolved; None when the engine was built with guard=False.
+        self.guard: Optional[GuardConfig] = (
+            engine._guard.for_model(cfg.n_in)
+            if engine._guard is not None else None
         )
         self.zero_states: Dict[int, Dict[str, jax.Array]] = {}
         self.tile_lat: List[float] = []
+        # Dropped-work results (REJECTED/EXPIRED/FAULT) accumulated outside
+        # a serve() window — drained by BatchedEngine.take_dead_results().
+        self.dead: List[ServeResult] = []
         self.reset_counters()
 
     @property
@@ -260,6 +329,13 @@ class _ModelLane:
         self.events = 0
         self.ticks = 0
         self.lanes = 0
+        self.rejected = 0
+        self.expired = 0
+        self.shed = 0
+        self.quarantined = 0
+        self.lane_restarts = 0
+        self.saturation_storms = 0
+        self.admission_wait_s = 0.0
 
     def zero_state(self, b_pad: int):
         """Cached zero-carry pytree per tile width (a read-only jit input,
@@ -313,10 +389,20 @@ class SessionHandle:
     def closed(self) -> bool:
         return self._sess.closed
 
+    @property
+    def status(self) -> ServeStatus:
+        """OK while the stream is healthy; FAULT once quarantined (numeric
+        health check or unrecoverable lane fault), EXPIRED once its
+        deadline dropped it — both terminal."""
+        return self._sess.status
+
     def feed(self, events: np.ndarray) -> int:
         """Append one AER word buffer; returns spike events admitted.  Does
         not launch work — call ``engine.pump()`` (or :meth:`result`) to
-        advance."""
+        advance.  Raises a typed
+        :class:`~repro.serve.guard.GuardError` subclass when the buffer
+        fails validation, exceeds a quota, or the session is closed /
+        quarantined — the session itself is untouched by a rejected feed."""
         return self._engine._feed(self._sess, events)
 
     def poll(self) -> Optional[SessionSnapshot]:
@@ -390,6 +476,42 @@ class BatchedEngine:
         A :class:`~repro.core.backend.RuntimeConfig` bundling the
         backend/quant/vmem_budget/mesh knobs (the loose kwargs remain as a
         deprecated passthrough; resolution happens in ``as_backend``).
+    guard:
+        Input-validation policy: a
+        :class:`~repro.serve.guard.GuardConfig` (per-lane ``n_in`` is
+        filled from each model's config), ``None`` for the default policy,
+        or ``False`` to disable validation entirely (the overhead-bench
+        escape hatch — production callers should not).
+    max_pending / admission:
+        Bounded whole-sample admission queue per lane.  ``max_pending``
+        caps queued requests (``None`` = unbounded, the legacy behaviour);
+        on overflow ``admission="reject"`` raises
+        :class:`~repro.serve.guard.OverloadError` at ``submit()`` while
+        ``"shed"`` evicts the *oldest* queued request, which surfaces as a
+        REJECTED result.
+    default_deadline_s:
+        Relative deadline stamped on every admitted request that doesn't
+        pass its own ``deadline_s``; expired requests are dropped at pack
+        time (before any launch) and surface as EXPIRED results.  ``None``
+        disables.
+    max_pending_sessions:
+        Bounds each lane's streaming ready-queue (sessions).  A ``feed``
+        that would overflow it pumps the lane inline until there is room —
+        that stall is *admission wait*, excluded from StreamStats
+        throughput.
+    session_deadline_s:
+        Relative deadline stamped on every ``open_session`` that doesn't
+        pass its own; checked at pack time — an expired session is dropped
+        before launch with a terminal EXPIRED snapshot.
+    max_tile_retries:
+        Launch-fault budget: how many times faulted work is rewound and
+        relaunched (through a lane restart) before the affected
+        requests/sessions are FAULTed.
+    fault_hook:
+        Test/chaos injection point: called as ``fault_hook(model_id,
+        kind)`` (``kind ∈ {"tile", "stream"}``) at the top of every launch,
+        *before* any state mutation; an exception it raises is handled
+        exactly like a device launch fault.  Leave ``None`` in production.
     """
 
     def __init__(
@@ -410,6 +532,14 @@ class BatchedEngine:
         idle_timeout: Optional[float] = None,
         tick_tile: Optional[int] = None,
         runtime: Optional[RuntimeConfig] = None,
+        guard: Union[GuardConfig, None, bool] = None,
+        max_pending: Optional[int] = None,
+        admission: str = "reject",
+        default_deadline_s: Optional[float] = None,
+        max_pending_sessions: Optional[int] = None,
+        session_deadline_s: Optional[float] = None,
+        max_tile_retries: int = 3,
+        fault_hook: Optional[Callable[[str, str], None]] = None,
     ):
         self.tick_granularity = tick_granularity
         # Backpressure for the deferred-sync serve loop: at most this many
@@ -421,6 +551,19 @@ class BatchedEngine:
         self._max_sessions = max_sessions
         self._idle_timeout = idle_timeout
         self._tick_tile = tick_tile
+        if guard is False:
+            self._guard: Optional[GuardConfig] = None
+        elif guard is None or guard is True:
+            self._guard = GuardConfig()
+        else:
+            self._guard = guard
+        self._max_pending = max_pending
+        self._admission = admission
+        self._default_deadline_s = default_deadline_s
+        self._max_pending_sessions = max_pending_sessions
+        self._session_deadline_s = session_deadline_s
+        self._max_tile_retries = max(0, int(max_tile_retries))
+        self._fault_hook = fault_hook
         self._next_rid = 0
         if registry is None:
             if cfg is None or params is None:
@@ -450,6 +593,7 @@ class BatchedEngine:
         self._sessions: Dict[int, _Session] = {}
         self._next_sid = 0
         self._stream_pending: List[_PendingStreamTile] = []
+        self._in_restart = False   # re-entrancy guard for lane restarts
         self._lane(self.default_model)   # default lane is always live
 
     # --------------------------------------------------------------- routing
@@ -549,6 +693,7 @@ class BatchedEngine:
         """Decode, pad and *launch* one batch tile — returns without
         synchronising on the device so consecutive buckets overlap host
         decode with device compute."""
+        self._inject_fault(lane, "tile")
         cfg = lane.cfg
         events = [r.events for r in tile.requests]
         raster, valid, labels = batching.decode_events_host(
@@ -571,19 +716,42 @@ class BatchedEngine:
         )
 
     def _finalize(self, pending: _PendingTile) -> List[ServeResult]:
-        """Materialise one launched tile's results (synchronises on it)."""
-        acc_y = np.asarray(pending.acc_y)[: pending.b_live]
+        """Materialise one launched tile's results (synchronises on it).
+
+        Per-sample numeric health runs here: a row carrying NaN/inf (or,
+        quantized, a saturation storm off the 12-bit grid) becomes a FAULT
+        result while its tile-mates are delivered unchanged.  A device
+        fault surfacing at materialisation FAULTs the whole tile and
+        restarts the lane."""
+        lane = pending.lane
+        try:
+            acc_y = np.asarray(pending.acc_y)[: pending.b_live]
+        except Exception:
+            if not self._in_restart:
+                self._restart_lane(lane)
+            lane.quarantined += len(pending.tile.requests)
+            return [
+                self._dead_result(lane, req, ServeStatus.FAULT)
+                for req in pending.tile.requests
+            ]
         t_done = self._clock()
+        bad, sat = bad_rows(
+            acc_y, quant=lane.backend.quant, ticks=pending.tile.num_ticks
+        )
+        lane.saturation_storms += int(sat.sum())
+        lane.quarantined += int(bad.sum())
+        zeros = np.zeros((lane.cfg.n_out,), np.float32)
         return [
             ServeResult(
                 rid=req.rid,
-                pred=int(np.argmax(acc_y[i])),
-                logits=acc_y[i],
+                pred=-1 if bad[i] else int(np.argmax(acc_y[i])),
+                logits=zeros if bad[i] else acc_y[i],
                 label=int(pending.labels[i]),
                 latency_s=t_done - req.t_submit,
                 bucket_ticks=pending.tile.num_ticks,
                 batch_size=pending.b_live,
-                model_id=pending.lane.model_id,
+                model_id=lane.model_id,
+                status=ServeStatus.FAULT if bad[i] else ServeStatus.OK,
             )
             for i, req in enumerate(pending.tile.requests)
         ]
@@ -600,15 +768,178 @@ class BatchedEngine:
         events: np.ndarray,
         meta: Optional[dict] = None,
         model_id: Optional[str] = None,
+        deadline_s: Optional[float] = None,
     ) -> int:
         """Admit one AER sample for a registered model (default route when
-        ``model_id`` is ``None``); returns its engine-unique request id."""
-        return self._lane(model_id).scheduler.submit(events, meta)
+        ``model_id`` is ``None``); returns its engine-unique request id.
+
+        The buffer passes the lane's input guard first — a malformed or
+        over-quota buffer raises a typed
+        :class:`~repro.serve.guard.GuardError` subclass and admits nothing.
+        A full bounded queue raises
+        :class:`~repro.serve.guard.OverloadError` under
+        ``admission="reject"``; under ``"shed"`` the oldest queued request
+        is evicted instead (surfacing as a REJECTED result via
+        :meth:`take_dead_results` / ``serve()``).  ``deadline_s`` is
+        relative to now (falls back to the engine's ``default_deadline_s``).
+        """
+        lane = self._lane(model_id)
+        events = self._validate_for(lane, events)
+        rid = lane.scheduler.submit(
+            events, meta, deadline=self._deadline(deadline_s)
+        )
+        self._collect_dropped(lane)
+        return rid
+
+    # ------------------------------------------------- guards + error model
+
+    def _validate_for(self, lane: _ModelLane, events) -> np.ndarray:
+        """Run one buffer through the lane's input guard (no-op when the
+        engine was built with ``guard=False``)."""
+        if lane.guard is None:
+            return np.asarray(events)
+        return validate_events(
+            events, lane.guard, what=f"model {lane.model_id!r} buffer"
+        )
+
+    def _deadline(self, deadline_s: Optional[float]) -> Optional[float]:
+        rel = (
+            deadline_s if deadline_s is not None else self._default_deadline_s
+        )
+        return None if rel is None else self._clock() + rel
+
+    def _dead_result(
+        self, lane: _ModelLane, req: ServeRequest, status: ServeStatus
+    ) -> ServeResult:
+        """The typed tombstone for one dropped request."""
+        return ServeResult(
+            rid=req.rid,
+            pred=-1,
+            logits=np.zeros((lane.cfg.n_out,), np.float32),
+            label=0,
+            latency_s=self._clock() - req.t_submit,
+            bucket_ticks=req.bucket,
+            batch_size=0,
+            model_id=lane.model_id,
+            status=status,
+        )
+
+    def _collect_dropped(self, lane: _ModelLane) -> None:
+        """Convert the lane's shed and deadline-expired requests into dead
+        results (REJECTED / EXPIRED) — called at admission and pack time so
+        expired work never occupies a launch slot."""
+        for req in lane.scheduler.shed:
+            lane.shed += 1
+            lane.rejected += 1
+            lane.dead.append(
+                self._dead_result(lane, req, ServeStatus.REJECTED)
+            )
+        lane.scheduler.shed.clear()
+        for req in lane.scheduler.take_expired():
+            lane.expired += 1
+            lane.dead.append(self._dead_result(lane, req, ServeStatus.EXPIRED))
+
+    def take_dead_results(
+        self, model_id: Optional[str] = None
+    ) -> List[ServeResult]:
+        """Drain the dropped-work results (REJECTED/EXPIRED/FAULT) for one
+        model (or every lane) — the direct ``submit``/``run_tile`` caller's
+        window into the error model; ``serve()`` drains them into its
+        result list automatically."""
+        lanes = (
+            [self._lane(model_id)] if model_id is not None
+            else list(self._lanes.values())
+        )
+        out: List[ServeResult] = []
+        for lane in lanes:
+            self._collect_dropped(lane)
+            out.extend(lane.dead)
+            lane.dead.clear()
+        return out
+
+    # ------------------------------------------------------ lane supervision
+
+    def _inject_fault(self, lane: _ModelLane, kind: str) -> None:
+        if self._fault_hook is not None:
+            self._fault_hook(lane.model_id, kind)
+
+    def _restart_lane(self, lane: _ModelLane) -> None:
+        """Supervisor restart after a device/launch fault: materialise what
+        is trustworthy, abandon the rest, rebuild.
+
+        1. every *other* in-flight tile is harvested (their device buffers
+           predate the fault);
+        2. each resident session is evicted to a bit-exact host snapshot —
+           one whose row cannot be materialised (poisoned chain) is
+           quarantined instead;
+        3. the registry swaps the lane's pooled backend for a freshly
+           constructed one (fresh jit state; recompiles on next launch) and
+           the lane gets a new pool, so no future launch touches old device
+           buffers.  Healthy sessions re-seat from their snapshots on their
+           next packed tile, bitwise identical to an undisturbed stream.
+        """
+        self._in_restart = True
+        try:
+            self._harvest_stream(block=True)
+            for sess in list(lane.pool._resident.values()):
+                try:
+                    lane.pool.evict(sess)
+                except Exception:
+                    self._quarantine(lane, sess)
+            old_pool = lane.pool
+            lane.spec = self.registry.rebuild_backend(lane.model_id)
+            lane.pool = SessionPool(
+                lane.backend, old_pool.capacity,
+                idle_timeout=old_pool.idle_timeout, clock=self._clock,
+            )
+            lane.pool.evictions = old_pool.evictions
+            lane.pool.readmissions = old_pool.readmissions
+            lane.zero_states.clear()
+            lane.lane_restarts += 1
+        finally:
+            self._in_restart = False
+
+    def _quarantine(self, lane: _ModelLane, sess: _Session) -> None:
+        """Terminally FAULT one session: its stream state is not
+        trustworthy, so it is closed with a dead snapshot while the rest of
+        its tile (and lane) keeps serving."""
+        if sess.status is ServeStatus.FAULT:
+            return
+        sess.status = ServeStatus.FAULT
+        sess.closed = True
+        sess.snapshot = SessionSnapshot(
+            sid=sess.sid, pred=-1,
+            logits=np.zeros((lane.cfg.n_out,), np.float32),
+            label=sess.label, ticks=sess.cursor, events=sess.n_events,
+            final=True, status=ServeStatus.FAULT,
+        )
+        lane.quarantined += 1
+        try:
+            lane.pool.release(sess)
+        except Exception:
+            sess.slot = None
+
+    def _expire_session(self, lane: _ModelLane, sess: _Session) -> None:
+        """Terminal EXPIRED drop at pack time: the session's deadline
+        passed before its pending ticks launched."""
+        sess.status = ServeStatus.EXPIRED
+        sess.closed = True
+        sess.snapshot = SessionSnapshot(
+            sid=sess.sid, pred=-1,
+            logits=np.zeros((lane.cfg.n_out,), np.float32),
+            label=sess.label, ticks=sess.cursor, events=sess.n_events,
+            final=True, status=ServeStatus.EXPIRED,
+        )
+        lane.expired += 1
+        lane.pool.release(sess)
 
     # ---------------------------------------------------- session streaming
 
     def open_session(
-        self, meta: Optional[dict] = None, model_id: Optional[str] = None
+        self,
+        meta: Optional[dict] = None,
+        model_id: Optional[str] = None,
+        deadline_s: Optional[float] = None,
     ) -> SessionHandle:
         """Open one AER event stream with persistent recurrent state.
 
@@ -617,20 +948,60 @@ class BatchedEngine:
         :class:`~repro.serve.session.SessionPool` while hot (LRU-evicted to
         host bit-exactly under capacity pressure) — feed events in
         arbitrary increments; chunking never changes the result.
+
+        ``deadline_s`` (relative; falls back to the engine's
+        ``session_deadline_s``) bounds how long the stream may wait for
+        device time: a session whose deadline passes before its pending
+        ticks are packed is dropped at pack time with a terminal EXPIRED
+        snapshot.
         """
         lane = self._lane(model_id)
         sess = _Session(
             self._next_sid, self._clock(), meta, model_id=lane.model_id
         )
         sess.gate_label = lane.cfg.eprop.infer_window == "valid"
+        rel = (
+            deadline_s if deadline_s is not None else self._session_deadline_s
+        )
+        sess.deadline = None if rel is None else self._clock() + rel
         self._next_sid += 1
         self._sessions[sess.sid] = sess
         return SessionHandle(self, sess)
 
     def _feed(self, sess: _Session, events: np.ndarray) -> int:
+        lane = self._lanes[sess.model_id]
+        if lane.guard is not None:
+            try:
+                events = validate_events(
+                    events, lane.guard,
+                    min_tick=max(sess.max_fed_tick, 0),
+                    what=f"session {sess.sid} feed",
+                )
+            except GuardError:
+                lane.rejected += 1
+                raise
+            backlog = len(sess.sp_tick) - sess.sp_ptr
+            incoming = int(np.count_nonzero(events >> 24 == 0x03))
+            if backlog + incoming > lane.guard.max_pending_events:
+                lane.rejected += 1
+                raise QuotaExceededError(
+                    f"session {sess.sid}: {backlog} buffered + {incoming} "
+                    f"incoming spikes exceeds max_pending_events="
+                    f"{lane.guard.max_pending_events}"
+                )
         n = sess.feed(events)
         if sess.processable() > 0:
-            self._lanes[sess.model_id].packer.enqueue(sess)
+            t0 = self._clock()
+            stalled = False
+            while not lane.packer.enqueue(sess):
+                # Bounded ready-queue full: drain a tile inline to make
+                # room.  The stall is admission wait — caller backpressure,
+                # not device time — and is excluded from throughput stats.
+                stalled = True
+                if not self._pump_lane_once(lane):
+                    break
+            if stalled:
+                lane.admission_wait_s += self._clock() - t0
         return n
 
     def _launch_chunks(self, lane: _ModelLane, sessions, chunks, num_ticks):
@@ -638,6 +1009,7 @@ class BatchedEngine:
         batched admission scatter), decode their chunks into one rectangular
         tick-tile, gather carries → ``step_sessions`` → scatter carries.
         Returns the backend's output state (device values, not synced)."""
+        self._inject_fault(lane, "stream")
         cfg = lane.cfg
         b_pad = batching.padded_batch_size(len(sessions), lane.max_batch)
         raster, live, valid = batching.decode_session_chunks(
@@ -664,13 +1036,35 @@ class BatchedEngine:
 
     def _pump_lane_once(self, lane: _ModelLane) -> bool:
         """Pack and launch one streaming tick-tile from one model's lane;
-        False when none of its sessions has processable ticks."""
+        False when none of its sessions has processable ticks.
+
+        Deadlines are enforced here — *pack time*, before any launch pays
+        for the work: an expired session is dropped with a terminal
+        EXPIRED snapshot and never occupies a tile lane.  A launch fault
+        (device error or injected) rewinds every chosen session's chunk,
+        restarts the lane, and re-queues the survivors; a session that
+        faults more than ``max_tile_retries`` times in a row is
+        quarantined."""
         nxt = lane.packer.next_tile()
         if nxt is None:
             return False
         sessions, num_ticks = nxt
+        now = self._clock()
+        live = []
+        for s in sessions:
+            if s.deadline is not None and now > s.deadline:
+                self._expire_session(lane, s)
+            else:
+                live.append(s)
+        if not live:
+            return True   # handled (dropped) work — the pump made progress
+        sessions = live
         chunks = [s.take_chunk(num_ticks) for s in sessions]
-        out = self._launch_chunks(lane, sessions, chunks, num_ticks)
+        try:
+            out = self._launch_chunks(lane, sessions, chunks, num_ticks)
+        except Exception:
+            self._on_stream_launch_fault(lane, sessions, chunks)
+            return True
         self._stream_pending.append(_PendingStreamTile(
             acc_y=out["acc_y"],
             lanes=[(s, s.cursor, s.n_events) for s in sessions],
@@ -685,6 +1079,24 @@ class BatchedEngine:
         while len(self._stream_pending) > self.max_inflight_tiles:
             self._harvest_one()   # backpressure: block on the oldest tile
         return True
+
+    def _on_stream_launch_fault(self, lane, sessions, chunks) -> None:
+        """Contain one failed streaming launch: rewind every session's
+        chunk (bit-exact — the pool was never scattered into), restart the
+        lane, re-queue survivors, quarantine repeat offenders."""
+        for s, ref in zip(sessions, chunks):
+            s.restore_chunk(ref)
+            s.retries += 1
+        survivors = [
+            s for s in sessions if s.retries <= self._max_tile_retries
+        ]
+        for s in sessions:
+            if s.retries > self._max_tile_retries:
+                self._quarantine(lane, s)
+        self._restart_lane(lane)
+        for s in survivors:
+            if s.processable() > 0:
+                lane.packer.enqueue(s)
 
     def _pump_once(self) -> bool:
         """One interleaving round: launch at most one tick-tile per model
@@ -713,9 +1125,37 @@ class BatchedEngine:
 
     def _harvest_one(self) -> None:
         p = self._stream_pending.pop(0)
-        acc = np.asarray(p.acc_y)   # synchronises on this tile
-        p.lane.tile_lat.append(self._clock() - p.t_launch)
+        lane = p.lane
+        try:
+            acc = np.asarray(p.acc_y)   # synchronises on this tile
+        except Exception:
+            # Async device fault surfacing at materialisation: every
+            # session in this tile ran through the faulted op, and the
+            # pool's scatter chain is poisoned behind it — quarantine the
+            # tile and restart the lane (other residents are evicted
+            # best-effort inside the restart).
+            for sess, _, _ in p.lanes:
+                self._quarantine(lane, sess)
+            if not self._in_restart:
+                self._restart_lane(lane)
+            return
+        lane.tile_lat.append(self._clock() - p.t_launch)
+        n = len(p.lanes)
+        bad, sat = bad_rows(
+            acc[:n], quant=lane.backend.quant,
+            ticks=np.array([t for _, t, _ in p.lanes], np.int64),
+        )
+        lane.saturation_storms += int(sat.sum())
         for i, (sess, ticks, events) in enumerate(p.lanes):
+            if sess.status is not ServeStatus.OK:
+                continue   # terminal snapshot already written
+            if bad[i]:
+                # One poisoned sample: quarantine it; its tile-mates'
+                # results are delivered below, bitwise untouched (each
+                # lane of the tile is an independent carry row).
+                self._quarantine(lane, sess)
+                continue
+            sess.retries = 0
             sess.snapshot = SessionSnapshot(
                 sid=sess.sid, pred=int(np.argmax(acc[i])), logits=acc[i],
                 label=sess.label, ticks=ticks, events=events,
@@ -739,12 +1179,23 @@ class BatchedEngine:
 
     def _finish_session(self, sess: _Session) -> SessionSnapshot:
         lane = self._lanes[sess.model_id]
+        if sess.status is not ServeStatus.OK:
+            # Quarantined/expired mid-stream: the terminal snapshot was
+            # already written; result() just hands it over.
+            self._sessions.pop(sess.sid, None)
+            return sess.snapshot
         sess.closed = True   # extends the horizon to the last fed tick
         if sess.processable() > 0:
-            lane.packer.enqueue(sess)
-        while sess.processable() > 0 and self._pump_once():
+            while not lane.packer.enqueue(sess):
+                if not self._pump_lane_once(lane):
+                    break
+        while (sess.status is ServeStatus.OK and sess.processable() > 0
+               and self._pump_once()):
             pass
         self._harvest_stream(block=True)
+        if sess.status is not ServeStatus.OK:
+            self._sessions.pop(sess.sid, None)
+            return sess.snapshot
         acc = self._session_acc(sess)
         snap = SessionSnapshot(
             sid=sess.sid, pred=int(np.argmax(acc)), logits=acc,
@@ -773,6 +1224,9 @@ class BatchedEngine:
         sessions = sum(
             1 for s in self._sessions.values() if s.model_id == lane.model_id
         )
+        # Throughput over *device* time: callers blocked on a full bounded
+        # queue (admission wait) are backpressure, not serving work.
+        busy = max(wall_s - lane.admission_wait_s, 1e-9)
         return StreamStats(
             sessions=sessions,
             tiles=tiles,
@@ -780,10 +1234,10 @@ class BatchedEngine:
             ticks=lane.ticks,
             wall_s=wall_s,
             events_per_sec=(
-                lane.events / wall_s if wall_s > 0 else float("inf")
+                lane.events / busy if wall_s > 0 else float("inf")
             ),
             ticks_per_sec=(
-                lane.ticks / wall_s if wall_s > 0 else float("inf")
+                lane.ticks / busy if wall_s > 0 else float("inf")
             ),
             p50_tile_latency_s=float(np.percentile(lat, 50)),
             p99_tile_latency_s=float(np.percentile(lat, 99)),
@@ -792,6 +1246,13 @@ class BatchedEngine:
             readmissions=lane.pool.readmissions,
             compiled_shapes=lane.backend.compiled_shapes("step_sessions"),
             hbm_bytes_streamed=lane.bytes_streamed,
+            rejected=lane.rejected,
+            expired=lane.expired,
+            shed=lane.shed,
+            quarantined=lane.quarantined,
+            lane_restarts=lane.lane_restarts,
+            saturation_storms=lane.saturation_storms,
+            admission_wait_s=lane.admission_wait_s,
         )
 
     def _compiled_step_shapes(self) -> int:
@@ -820,14 +1281,16 @@ class BatchedEngine:
         tiles = sum(l.tiles for l in lanes)
         events = sum(l.events for l in lanes)
         ticks = sum(l.ticks for l in lanes)
+        wait = sum(l.admission_wait_s for l in lanes)
+        busy = max(wall_s - wait, 1e-9)
         return StreamStats(
             sessions=len(self._sessions),
             tiles=tiles,
             events=events,
             ticks=ticks,
             wall_s=wall_s,
-            events_per_sec=events / wall_s if wall_s > 0 else float("inf"),
-            ticks_per_sec=ticks / wall_s if wall_s > 0 else float("inf"),
+            events_per_sec=events / busy if wall_s > 0 else float("inf"),
+            ticks_per_sec=ticks / busy if wall_s > 0 else float("inf"),
             p50_tile_latency_s=float(np.percentile(arr, 50)),
             p99_tile_latency_s=float(np.percentile(arr, 99)),
             mean_lanes=(sum(l.lanes for l in lanes) / tiles) if tiles else 0.0,
@@ -835,6 +1298,13 @@ class BatchedEngine:
             readmissions=sum(l.pool.readmissions for l in lanes),
             compiled_shapes=self._compiled_step_shapes(),
             hbm_bytes_streamed=sum(l.bytes_streamed for l in lanes),
+            rejected=sum(l.rejected for l in lanes),
+            expired=sum(l.expired for l in lanes),
+            shed=sum(l.shed for l in lanes),
+            quarantined=sum(l.quarantined for l in lanes),
+            lane_restarts=sum(l.lane_restarts for l in lanes),
+            saturation_storms=sum(l.saturation_storms for l in lanes),
+            admission_wait_s=wait,
             per_model=per if len(lanes) > 1 else None,
         )
 
@@ -855,6 +1325,7 @@ class BatchedEngine:
         unobserved — and skips the session pool entirely: whole-sample
         serving pays no pool-sized scatter and no per-request host
         bookkeeping."""
+        self._inject_fault(lane, "tile")
         cfg = lane.cfg
         T = tile.num_ticks
         bufs = [req.events for req in tile.requests]
@@ -883,6 +1354,7 @@ class BatchedEngine:
         stream: Iterable[Union[np.ndarray, Tuple[np.ndarray, str]]],
         flush: bool = True,
         model_id: Optional[str] = None,
+        deadline_s: Optional[float] = None,
     ) -> Tuple[List[ServeResult], ServeStats]:
         """Run a whole stream of AER sample buffers; results in admission
         (rid) order plus throughput/latency stats.
@@ -905,11 +1377,24 @@ class BatchedEngine:
         buffers become ready and the one mandatory synchronisation happens
         at the end-of-stream drain.  ``flush`` drains the partial buckets
         at end-of-stream.
+
+        Robustness semantics: per-item failures never abort the stream.  A
+        buffer the guard rejects, a submit refused by a full bounded
+        queue, a shed or deadline-expired request, and a faulted tile all
+        surface as results with the corresponding non-OK
+        :class:`~repro.serve.guard.ServeStatus` — one misbehaving item
+        costs exactly one REJECTED result while its neighbours serve
+        unaffected.  ``deadline_s`` stamps a per-item relative deadline
+        (falling back to the engine's ``default_deadline_s``).
         """
         t0 = self._clock()
         bytes0 = {
             mid: lane.bytes_streamed for mid, lane in self._lanes.items()
         }
+        restarts0 = {
+            mid: lane.lane_restarts for mid, lane in self._lanes.items()
+        }
+        shed0 = {mid: lane.shed for mid, lane in self._lanes.items()}
         results: List[ServeResult] = []
         pending: List[_PendingTile] = []
         batches = 0
@@ -917,14 +1402,38 @@ class BatchedEngine:
         touched: Dict[str, _ModelLane] = {}
 
         def launch(lane: _ModelLane, tile: BatchTile) -> None:
+            """Launch with a fault budget: a launch that raises restarts
+            the lane and retries; an exhausted budget FAULTs the tile's
+            requests instead of killing the stream."""
             nonlocal batches
-            pending.append(self._launch_session_tile(lane, tile))
-            batches += 1
-            batches_by[lane.model_id] = batches_by.get(lane.model_id, 0) + 1
+            for _ in range(self._max_tile_retries + 1):
+                try:
+                    pending.append(self._launch_session_tile(lane, tile))
+                except Exception:
+                    if not self._in_restart:
+                        self._restart_lane(lane)
+                    continue
+                batches += 1
+                batches_by[lane.model_id] = (
+                    batches_by.get(lane.model_id, 0) + 1
+                )
+                return
+            lane.quarantined += len(tile.requests)
+            results.extend(
+                self._dead_result(lane, req, ServeStatus.FAULT)
+                for req in tile.requests
+            )
 
         def harvest(block: bool) -> None:
             while pending and (block or pending[0].ready()):
                 results.extend(self._finalize(pending.pop(0)))
+
+        def reap(lane: _ModelLane) -> None:
+            """Shed + deadline-expired requests become results, *before*
+            tiles pack — expired work never occupies a launch slot."""
+            self._collect_dropped(lane)
+            results.extend(lane.dead)
+            lane.dead.clear()
 
         for item in stream:
             if isinstance(item, tuple):
@@ -933,7 +1442,23 @@ class BatchedEngine:
                 events, mid = item, model_id
             lane = self._lane(mid)
             touched[lane.model_id] = lane
-            lane.scheduler.submit(events)
+            try:
+                ev = self._validate_for(lane, events)
+                lane.scheduler.submit(
+                    ev, deadline=self._deadline(deadline_s)
+                )
+            except (GuardError, OverloadError):
+                lane.rejected += 1
+                results.append(self._dead_result(
+                    lane,
+                    ServeRequest(
+                        rid=self._alloc_rid(),
+                        events=np.zeros(0, np.uint32),
+                        native_ticks=0, bucket=0, t_submit=self._clock(),
+                    ),
+                    ServeStatus.REJECTED,
+                ))
+            reap(lane)
             for tile in lane.scheduler.ready_tiles():
                 launch(lane, tile)
             harvest(block=False)
@@ -943,6 +1468,7 @@ class BatchedEngine:
                 results.extend(self._finalize(pending.pop(0)))
         if flush:
             for lane in touched.values():
+                reap(lane)
                 for tile in lane.scheduler.drain():
                     launch(lane, tile)
         harvest(block=True)   # the single per-drain sync
@@ -952,9 +1478,17 @@ class BatchedEngine:
         def lane_bytes(lane: _ModelLane) -> int:
             return lane.bytes_streamed - bytes0.get(lane.model_id, 0)
 
+        def lane_restarts(lane: _ModelLane) -> int:
+            return lane.lane_restarts - restarts0.get(lane.model_id, 0)
+
+        def lane_shed(lane: _ModelLane) -> int:
+            return lane.shed - shed0.get(lane.model_id, 0)
+
         stats = ServeStats.collect(
             results, wall, batches, self._compiled_step_shapes(),
             hbm_bytes=sum(lane_bytes(l) for l in self._lanes.values()),
+            shed=sum(lane_shed(l) for l in touched.values()),
+            lane_restarts=sum(lane_restarts(l) for l in touched.values()),
         )
         if len(touched) > 1:
             stats.per_model = {
@@ -964,6 +1498,8 @@ class BatchedEngine:
                     batches_by.get(mid, 0),
                     lane.backend.compiled_shapes("step_sessions"),
                     hbm_bytes=lane_bytes(lane),
+                    shed=lane_shed(lane),
+                    lane_restarts=lane_restarts(lane),
                 )
                 for mid, lane in touched.items()
             }

@@ -192,6 +192,30 @@ class ModelRegistry:
         del self._specs[model_id]
         return spec
 
+    # -------------------------------------------------------- lane restart
+
+    def rebuild_backend(self, model_id: str) -> ModelSpec:
+        """Replace a model's execution backend with a freshly constructed
+        one — the registry half of a lane restart after a device/launch
+        fault.  The poisoned backend is discarded from the pool; a new
+        backend is built for the same config/runtime bucket (recompiling on
+        next launch — correctness over warmth); every spec sharing the old
+        backend is re-pointed and its weight image re-materialised through
+        the new instance, so no downstream launch ever touches the old
+        device buffers."""
+        spec = self.get(model_id)
+        old = spec.backend
+        self.pool.discard(old)
+        fresh = self.pool.get(old.cfg, old.runtime)
+        self._loaders.pop(old.quant, None)   # loader closed over `old`
+        for other in self._specs.values():
+            if other.backend is old:
+                other.backend = fresh
+                other.weights = self._snap(
+                    fresh, {k: np.asarray(v) for k, v in other.weights.items()}
+                )
+        return spec
+
     # ------------------------------------------------------------ hot-swap
 
     def update_weights(

@@ -41,6 +41,7 @@ import jax
 import numpy as np
 
 from repro.core.aer import EVT_END, EVT_LABEL, EVT_SPIKE, MAX_ADDR, MAX_TICK
+from repro.serve.guard import ServeStatus, StreamContractError
 
 STATE_KEYS = ("v", "z", "y", "acc_y", "n_spk")
 
@@ -56,6 +57,7 @@ class SessionSnapshot:
     ticks: int                # stream ticks processed when this was taken
     events: int               # spike events consumed when this was taken
     final: bool = False       # True only for SessionHandle.result()
+    status: ServeStatus = ServeStatus.OK
 
 
 class _Session:
@@ -65,7 +67,8 @@ class _Session:
         "sid", "slot", "meta", "sp_tick", "sp_addr", "sp_ptr", "cursor",
         "max_fed_tick", "label", "label_tick", "label_seen", "end_seen",
         "end_tick", "closed", "n_events", "t_open", "t_last", "snapshot",
-        "offloaded", "queued", "gate_label", "model_id",
+        "offloaded", "queued", "gate_label", "model_id", "status",
+        "deadline", "retries",
     )
 
     def __init__(
@@ -102,6 +105,9 @@ class _Session:
         self.snapshot: Optional[SessionSnapshot] = None
         self.offloaded: Optional[Dict[str, np.ndarray]] = None
         self.queued = False        # True while sitting in the packer's queue
+        self.status = ServeStatus.OK   # FAULT once quarantined (sticky)
+        self.deadline: Optional[float] = None  # absolute; None = no deadline
+        self.retries = 0           # launch-fault rewinds since last success
         # With infer_window == "valid" the readout window starts at the label
         # announcement, so ticks fed *before* the (single) label word cannot
         # know their final valid bit — the engine sets this flag to hold the
@@ -115,7 +121,10 @@ class _Session:
         """Append one AER word buffer.  Words must be tick-ordered within a
         buffer and non-decreasing across buffers (the stream contract).
         Returns the number of spike events admitted."""
-        assert not self.closed, "feed() on a closed session"
+        if self.closed:
+            raise StreamContractError(
+                f"session {self.sid}: feed() on a closed session"
+            )
         words = np.asarray(events, np.uint32).ravel()
         kind = words >> 24
         live = kind != 0
@@ -188,6 +197,21 @@ class _Session:
         self.cursor = end
         return ref
 
+    def restore_chunk(self, ref: "SessionChunkRef") -> None:
+        """Undo a :meth:`take_chunk` whose tile launch failed: re-prepend
+        the chunk's spikes and rewind the cursor so the ticks are re-served
+        on the next pack.  Safe against interleaved feeds — anything fed
+        after the take carries ticks ``>= ref.base + n_live`` (feed drops
+        ticks behind the cursor), so prepending preserves sort order."""
+        self.sp_tick = np.concatenate(
+            [ref.sp_tick, self.sp_tick[self.sp_ptr:]]
+        )
+        self.sp_addr = np.concatenate(
+            [ref.sp_addr, self.sp_addr[self.sp_ptr:]]
+        )
+        self.sp_ptr = 0
+        self.cursor = ref.base
+
 
 @dataclasses.dataclass
 class SessionChunkRef:
@@ -228,7 +252,8 @@ class SessionPool:
         idle_timeout: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
-        assert capacity >= 1
+        if capacity < 1:
+            raise ValueError(f"pool capacity must be >= 1, got {capacity}")
         self.backend = backend
         self.capacity = int(capacity)
         self.trash = self.capacity          # fixed trash row index
@@ -303,7 +328,8 @@ class SessionPool:
         its slot.  Bit-exact: the row is copied verbatim (in quantized mode
         these are integers on the membrane grid), so readmission continues
         the stream as if never interrupted."""
-        assert sess.slot is not None
+        if sess.slot is None:
+            raise RuntimeError(f"evict() on non-resident session {sess.sid}")
         sess.offloaded = {
             k: np.asarray(v[sess.slot]) for k, v in self.state.items()
         }

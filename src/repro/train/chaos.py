@@ -250,10 +250,11 @@ def run_chaos(
     """
     base = ["--ckpt-dir", ckpt_dir, "--out", out, *map(str, worker_args)]
     first = spawn(base + list(map(str, kill_args)), mesh_devices=mesh_devices)
-    assert first.returncode != 0, (
-        f"doomed worker exited clean — kill never fired\n{first.stdout}"
-        f"\n{first.stderr}"
-    )
+    if first.returncode == 0:
+        raise RuntimeError(
+            f"doomed worker exited clean — kill never fired\n{first.stdout}"
+            f"\n{first.stderr}"
+        )
     restarts = 0
     rc_mesh = mesh_devices if restart_mesh_devices is None else restart_mesh_devices
     while restarts < max_restarts:
@@ -261,12 +262,13 @@ def run_chaos(
         proc = spawn(base, mesh_devices=rc_mesh)
         if proc.returncode == 0:
             break
-        assert proc.returncode in (-signal.SIGKILL, STOPPED_RC), (
-            f"restart {restarts} died unexpectedly rc={proc.returncode}\n"
-            f"{proc.stdout}\n{proc.stderr}"
-        )
+        if proc.returncode not in (-signal.SIGKILL, STOPPED_RC):
+            raise RuntimeError(
+                f"restart {restarts} died unexpectedly rc={proc.returncode}"
+                f"\n{proc.stdout}\n{proc.stderr}"
+            )
     else:
-        raise AssertionError(f"no clean exit after {max_restarts} restarts")
+        raise RuntimeError(f"no clean exit after {max_restarts} restarts")
     result = json.loads(Path(out).with_suffix(".json").read_text())
     result["restarts"] = restarts
     return result

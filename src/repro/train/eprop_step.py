@@ -37,9 +37,11 @@ def make_eprop_commit_step(
     so ``stochastic_round`` commits are not supported here (use
     :class:`~repro.core.controller.OnlineLearner` for those).
     """
-    assert not opt.cfg.stochastic_round, (
-        "Trainer steps carry no rng key; stochastic rounding needs OnlineLearner"
-    )
+    if opt.cfg.stochastic_round:
+        raise ValueError(
+            "Trainer steps carry no rng key; stochastic rounding needs "
+            "OnlineLearner"
+        )
     engine = as_backend(cfg, backend)
 
     @jax.jit

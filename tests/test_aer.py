@@ -98,7 +98,7 @@ def test_encode_sample_masks_and_validates_fields():
         dict(label=0, label_tick=0, end_tick=aer.MAX_TICK + 1),
         dict(label=0, label_tick=0, end_tick=-1),
     ):
-        with pytest.raises(AssertionError):
+        with pytest.raises(aer.AEREncodingError):
             aer.encode_sample(raster, **bad)
 
 

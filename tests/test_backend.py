@@ -130,7 +130,7 @@ def test_inference_parity_and_auto_resolution():
                                rtol=3e-5, atol=3e-5)
     np.testing.assert_array_equal(out_k["pred"], out_s["pred"])
     assert resolve_backend("auto") in ("kernel", "scan")
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         resolve_backend("mxu")
 
 
@@ -139,15 +139,15 @@ def test_as_backend_shares_instance_and_checks_config():
     be = ExecutionBackend(cfg, "scan")
     assert as_backend(cfg, be) is be
     assert as_backend(cfg, be, alpha=be.alpha) is be
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         as_backend(_cfg(n_hid=24), be)
-    with pytest.raises(AssertionError):   # baked-alpha mismatch must not pass
+    with pytest.raises(ValueError):   # baked-alpha mismatch must not pass
         as_backend(cfg, be, alpha=be.alpha + 0.05)
 
 
 def test_kernel_backend_guards():
     # exact mode is scan-only (the kernels are factored by construction)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         ExecutionBackend(_cfg(mode="exact"), "kernel")
     # batches beyond the per-tile VMEM contract are admitted now — the
     # kernels batch-tile internally (previously an AssertionError)
@@ -469,7 +469,7 @@ def test_shared_sharded_backend_accepts_equal_mesh():
     cfg = _cfg()
     be = ExecutionBackend(cfg, "scan", mesh=_data_mesh())
     assert as_backend(cfg, be, mesh=_data_mesh()) is be
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         from repro.launch.mesh import make_debug_mesh
 
         as_backend(cfg, be, mesh=make_debug_mesh(1, 1))

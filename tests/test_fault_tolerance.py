@@ -261,7 +261,7 @@ def test_backend_resize_identity_and_contract():
     cfg = Presets.braille(n_classes=3, num_ticks=24)
     be = ExecutionBackend(cfg, runtime=RuntimeConfig(backend="scan"))
     assert be.resize(None) is be
-    with pytest.raises(AssertionError, match="commit grid"):
+    with pytest.raises(ValueError, match="commit grid"):
         be.check_compatible(RuntimeConfig(commit_grid=DW_COMMIT_SPEC))
 
 

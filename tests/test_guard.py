@@ -1,0 +1,320 @@
+"""Property/fuzz tests for the serving guard layer (ISSUE 10 satellite).
+
+The contract under fuzz: any integer array pushed through
+``validate_events`` either comes back as a canonical uint32 buffer or
+raises a typed :class:`~repro.serve.guard.GuardError` subclass — never
+any other exception — and every *accepted* buffer round-trips bit-exactly
+(validation is read-only).  Buffers the codec produces always validate,
+and the engine's decode path never crashes on guard-accepted input.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # declared in requirements.txt; CI installs the real thing
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import aer
+from repro.core.aer import AEREncodingError
+from repro.serve import batching
+from repro.serve.guard import (
+    GuardConfig,
+    GuardError,
+    MalformedEventError,
+    QuotaExceededError,
+    ServeStatus,
+    StreamContractError,
+    bad_rows,
+    validate_events,
+)
+
+GUARD = GuardConfig(n_in=12)
+
+
+def _words_from_seed(seed, size, bias):
+    """Deterministic fuzz buffer: raw 32-bit noise, optionally biased
+    toward the valid word space so some buffers survive validation."""
+    rng = np.random.default_rng(seed)
+    words = rng.integers(0, 2**32, size=size, dtype=np.uint32)
+    if bias:
+        kind = rng.choice([0, aer.EVT_END, aer.EVT_LABEL, aer.EVT_SPIKE], size)
+        addr = rng.integers(0, 12, size)
+        tick = np.sort(rng.integers(0, 64, size))
+        words = (
+            (kind.astype(np.uint32) << 24)
+            | (addr.astype(np.uint32) << 12)
+            | tick.astype(np.uint32)
+        )
+        words[kind == 0] = 0
+    return words
+
+
+# --------------------------------------------------------------------------
+# fuzz: typed errors or bit-exact acceptance, nothing else
+# --------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    size=st.integers(0, 200),
+    bias=st.booleans(),
+)
+@settings(max_examples=200, deadline=None)
+def test_validate_raises_typed_or_roundtrips(seed, size, bias):
+    words = _words_from_seed(seed, size, bias)
+    try:
+        out = validate_events(words, GUARD)
+    except GuardError:
+        return  # typed rejection is a valid outcome
+    assert out.dtype == np.uint32
+    np.testing.assert_array_equal(out, words.ravel())
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    size=st.integers(1, 64),
+    dtype=st.sampled_from(["int8", "int16", "int32", "int64", "uint64"]),
+)
+@settings(max_examples=100, deadline=None)
+def test_validate_any_integer_dtype_never_crashes(seed, size, dtype):
+    rng = np.random.default_rng(seed)
+    info = np.iinfo(np.dtype(dtype))
+    arr = rng.integers(
+        info.min, info.max, size=size, dtype=np.dtype(dtype), endpoint=True
+    )
+    try:
+        out = validate_events(arr, GUARD)
+        assert out.dtype == np.uint32
+    except GuardError:
+        pass
+
+
+@given(seed=st.integers(0, 2**31 - 1), size=st.integers(0, 100))
+@settings(max_examples=100, deadline=None)
+def test_accepted_buffers_decode_without_raising(seed, size):
+    """Guard-accepted input must be safe for the host decode path — the
+    engine's invariant that validation happens once, at the boundary."""
+    words = _words_from_seed(seed, size, bias=True)
+    try:
+        out = validate_events(words, GUARD)
+    except GuardError:
+        return
+    trimmed = batching.trim_padding(out)
+    ticks = max(batching.request_ticks(trimmed), 1)
+    raster, valid, labels = batching.decode_events_host(
+        [trimmed], GUARD.n_in, ticks, label_delay=0
+    )
+    assert np.isfinite(raster).all()
+
+
+def test_non_integer_inputs_rejected_typed():
+    for bad in (
+        np.array([1.5, 2.5]),
+        np.array(["a", "b"]),
+        np.array([None, 3], dtype=object),
+        np.array([complex(1, 2)]),
+    ):
+        with pytest.raises(MalformedEventError):
+            validate_events(bad, GUARD)
+
+
+def test_guard_error_is_catchable_as_codec_error():
+    # one catchable root across codec- and serve-level validation
+    assert issubclass(GuardError, AEREncodingError)
+    with pytest.raises(AEREncodingError):
+        validate_events(np.array([0x7F000000], np.uint32), GUARD)
+    with pytest.raises(AEREncodingError):
+        aer.encode_sample(np.zeros((4, 4), np.float32), 9999, label_tick=0)
+
+
+# --------------------------------------------------------------------------
+# targeted violations raise the right subclass
+# --------------------------------------------------------------------------
+
+
+@given(kind=st.integers(4, 255))
+@settings(max_examples=50, deadline=None)
+def test_unknown_type_bytes_rejected(kind):
+    word = np.array([kind << 24], np.uint32)
+    with pytest.raises(MalformedEventError):
+        validate_events(word, GUARD)
+
+
+@given(addr=st.integers(12, aer.MAX_ADDR))
+@settings(max_examples=50, deadline=None)
+def test_out_of_range_spike_addresses_rejected(addr):
+    word = np.array([aer.pack(aer.EVT_SPIKE, addr, 0)], np.uint32)
+    with pytest.raises(MalformedEventError):
+        validate_events(word, GUARD)
+    # ...unless address checking is off or n_in is unresolved
+    validate_events(word, GuardConfig(n_in=12, check_addresses=False))
+    validate_events(word, GuardConfig())
+
+
+@given(t0=st.integers(1, aer.MAX_TICK), back=st.integers(1, 100))
+@settings(max_examples=50, deadline=None)
+def test_tick_regression_rejected(t0, back):
+    lo = max(0, t0 - back)
+    words = np.array(
+        [aer.pack(aer.EVT_SPIKE, 0, t0), aer.pack(aer.EVT_SPIKE, 1, lo)],
+        np.uint32,
+    )
+    if lo < t0:
+        with pytest.raises(StreamContractError):
+            validate_events(words, GUARD)
+        validate_events(words, GuardConfig(n_in=12, monotone=False))
+    else:
+        validate_events(words, GUARD)
+
+
+def test_min_tick_enforces_cross_feed_contract():
+    w = np.array([aer.pack(aer.EVT_SPIKE, 0, 5)], np.uint32)
+    validate_events(w, GUARD, min_tick=5)
+    with pytest.raises(StreamContractError):
+        validate_events(w, GUARD, min_tick=6)
+
+
+def test_pad_words_must_be_all_zero():
+    validate_events(np.zeros(4, np.uint32), GUARD)
+    with pytest.raises(MalformedEventError):
+        validate_events(np.array([0x00000001], np.uint32), GUARD)
+
+
+def test_per_feed_quota():
+    g = GuardConfig(n_in=12, max_words_per_feed=4)
+    validate_events(np.zeros(4, np.uint32), g)
+    with pytest.raises(QuotaExceededError):
+        validate_events(np.zeros(5, np.uint32), g)
+
+
+def test_out_of_word_range_values_rejected():
+    with pytest.raises(MalformedEventError):
+        validate_events(np.array([-1]), GUARD)
+    with pytest.raises(MalformedEventError):
+        validate_events(np.array([2**32], np.int64), GUARD)
+
+
+# --------------------------------------------------------------------------
+# codec output always validates (encode → guard round trip)
+# --------------------------------------------------------------------------
+
+
+@given(
+    t=st.integers(2, 40),
+    n=st.integers(1, 12),
+    density=st.floats(0.0, 0.5),
+    label=st.integers(0, 11),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_encoded_samples_always_validate(t, n, density, label, seed):
+    rng = np.random.default_rng(seed)
+    raster = (rng.random((t, n)) < density).astype(np.float32)
+    ev = np.asarray(
+        aer.encode_sample(raster, label, label_tick=0, end_tick=t - 1),
+        np.uint32,
+    )
+    ev = ev[np.argsort(ev & aer.MAX_TICK, kind="stable")]
+    out = validate_events(ev, GuardConfig(n_in=n))
+    np.testing.assert_array_equal(out, ev)
+
+
+# --------------------------------------------------------------------------
+# numeric health masks
+# --------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_bad_rows_float_flags_exactly_nonfinite(seed, b):
+    rng = np.random.default_rng(seed)
+    acc = rng.normal(size=(b, 4)).astype(np.float32)
+    poison = rng.random(b) < 0.5
+    acc[poison, 0] = np.nan
+    bad, sat = bad_rows(acc)
+    np.testing.assert_array_equal(bad, poison)
+    assert not sat.any()
+
+
+def test_bad_rows_quantized_saturation_bound():
+    class Spec:
+        max_val = 100.0
+
+    class Quant:
+        membrane_spec = Spec()
+
+    acc = np.array([[50.0, -50.0], [1e6, 0.0], [np.inf, 0.0]])
+    bad, sat = bad_rows(acc, quant=Quant(), ticks=10)
+    np.testing.assert_array_equal(bad, [False, True, True])
+    np.testing.assert_array_equal(sat, [False, True, False])
+    # per-row tick vectors: a long-lived row earns a larger bound
+    bad2, sat2 = bad_rows(
+        acc[:2], quant=Quant(), ticks=np.array([10, 100000])
+    )
+    np.testing.assert_array_equal(bad2, [False, False])
+
+
+# --------------------------------------------------------------------------
+# EventStream as a guarded trust boundary
+# --------------------------------------------------------------------------
+
+
+def _tiny_split(n_in=4):
+    good = np.array(
+        [aer.pack(aer.EVT_SPIKE, 1, 2), aer.pack(aer.EVT_END, 0, 3), 0, 0],
+        np.uint32,
+    )
+    bad = np.array([0x7F000000, aer.pack(aer.EVT_END, 0, 3), 0, 0], np.uint32)
+    return {
+        "test": {
+            "events": np.stack([good, bad, good]),
+            "n_in": n_in,
+            "num_ticks": 8,
+        }
+    }
+
+
+def test_event_stream_guard_skip_policy_counts_and_drops():
+    from repro.data.pipeline import EventStream
+
+    s = EventStream(
+        _tiny_split(), guard=GuardConfig(n_in=4), on_invalid="skip"
+    )
+    out = list(s)
+    assert len(out) == 2 and s.invalid == 1
+    for buf in out:
+        np.testing.assert_array_equal(
+            buf, validate_events(buf, GuardConfig(n_in=4))
+        )
+
+
+def test_event_stream_guard_raise_policy_resumes_past_bad_sample():
+    from repro.data.pipeline import EventStream
+
+    s = EventStream(_tiny_split(), guard=GuardConfig(n_in=4))
+    got = []
+    while True:
+        try:
+            for buf in s:
+                got.append(buf)
+            break
+        except GuardError:
+            continue   # cursor already advanced past the bad sample
+    assert len(got) == 2 and s.invalid == 1
+
+
+def test_event_stream_without_guard_unchanged():
+    from repro.data.pipeline import EventStream
+
+    s = EventStream(_tiny_split())
+    assert len(list(s)) == 3   # legacy behaviour: everything yields
+
+
+def test_serve_status_is_json_friendly():
+    import json
+
+    assert json.dumps(ServeStatus.OK) == '"ok"'
+    assert str(ServeStatus.FAULT) == "fault"
+    assert ServeStatus.REJECTED == "rejected"

@@ -107,9 +107,9 @@ def test_quantized_mode_register_interpretation():
 
 
 def test_quantized_mode_rejects_incommensurate_threshold():
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         QuantizedMode(threshold=0x03F1)      # not divisible by 2**frac
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         QuantizedMode(threshold=0x1000)      # beyond the 12-bit grid
 
 

@@ -139,7 +139,7 @@ def test_quant_option_on_backend_overlays_float_config():
         np.testing.assert_array_equal(np.asarray(d_o[k]), np.asarray(d_n[k]))
     # shared-instance coercion checks the quantized mode matches
     assert as_backend(cfg_f, be_overlay, quant=BRAILLE_QUANT) is be_overlay
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         as_backend(cfg_f, be_overlay, quant=QuantizedMode(threshold=0x100))
 
 

@@ -198,7 +198,7 @@ def test_resolve_sparsity_policy():
     # no density measurement → stay dense unless forced
     assert events.resolve_sparsity(None, None) == "dense"
     assert events.resolve_sparsity("event", None) == "event"
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         events.resolve_sparsity("bogus", 0.1)
 
 

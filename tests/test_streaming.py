@@ -273,9 +273,9 @@ def test_runtime_config_resolution_and_sharing():
     assert as_backend(cfg, be, runtime=RuntimeConfig(backend="scan")) is be
     assert as_backend(cfg, be) is be
     # ...and rejects contradictions
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         as_backend(cfg, be, runtime=RuntimeConfig(vmem_budget=1 << 22))
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         as_backend(cfg, be, quant=QuantizedMode(threshold=0x100))
 
     # loose kwargs fill unset fields but never override the config

@@ -108,11 +108,11 @@ def test_pipelines_yield_identical_batches(cue_data):
 
 
 def test_chip_limits_enforced():
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         RSNNConfig(n_in=MAX_IN + 1)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         RSNNConfig(n_hid=MAX_HID + 1)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         RSNNConfig(n_out=MAX_OUT + 1)
     RSNNConfig(n_in=MAX_IN + 1, strict_chip_limits=False)  # explicit opt-out
 
